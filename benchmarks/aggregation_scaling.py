@@ -1,0 +1,36 @@
+"""HierFAVG communication scaling: the paper's amortization knob in bytes.
+
+Analytic per-step link traffic (ring model) for the production meshes as a
+function of (kappa1, kappa2), plus the compressed-cloud-hop variant — shows
+how the hierarchy moves traffic from the expensive (DCN) link to the cheap
+(ICI) link, and what int8 delta compression buys on top.
+"""
+from repro.configs.registry import get_config
+from repro.configs.base import param_count
+from repro.dist.collectives import hierfavg_traffic_per_step
+
+
+def main(csv=True):
+    for arch in ("granite-3-2b", "yi-9b", "deepseek-7b"):
+        cfg = get_config(arch)
+        pbytes = param_count(cfg) * 2  # bf16
+        per_dev = pbytes / 16  # TP-sharded within a client group
+        for k1, k2 in ((1, 1), (16, 1), (16, 4), (64, 4)):
+            edge, cloud = hierfavg_traffic_per_step(
+                per_dev, clients_per_edge=4, num_edges=8, kappa1=k1, kappa2=k2
+            )
+            print(
+                f"agg_scaling_{arch}_k1={k1}_k2={k2},"
+                f"edge_MBps_per_step={edge/1e6:.1f},cloud_MBps_per_step={cloud/1e6:.1f},"
+                f"cloud_int8={cloud/4/1e6:.2f}"
+            )
+    # headline: (16,4) vs (1,1) cloud-traffic reduction
+    cfg = get_config("granite-3-2b")
+    per_dev = param_count(cfg) * 2 / 16
+    _, c11 = hierfavg_traffic_per_step(per_dev, 4, 8, 1, 1)
+    _, c164 = hierfavg_traffic_per_step(per_dev, 4, 8, 16, 4)
+    print(f"agg_scaling_headline,cloud_traffic_reduction={(c11/c164):.0f}x,with_int8={(4*c11/c164):.0f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Shared harness for the paper-reproduction benches.
+
+The paper's experiments are MNIST/CIFAR CNNs on 50 clients / 5 edges. The
+offline stand-in keeps the exact topology and partition protocols with the
+synthetic 10-class dataset (data.synthetic) and a small MLP — the
+communication/computation COST model still uses the paper's Table I
+constants, so T_alpha/E_alpha accounting is the paper's.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import FedTopology, HierFAVGConfig, cost_model as cm
+from repro.data import FederatedBatcher, clustered_gaussians, make_partition
+from repro.fed import FederatedRunner, RunnerConfig
+from repro.models import cnn
+from repro.optim import exponential_decay, sgd
+
+
+def build_problem(seed=0, partition="edge_iid", num_clients=50, num_edges=5,
+                  num_samples=3000, dim=16, class_sep=3.5):
+    rng = np.random.default_rng(seed)
+    data = clustered_gaussians(
+        rng, num_samples=num_samples, num_classes=10, dim=(dim,), class_sep=class_sep
+    )
+    parts = make_partition(partition, data.y, num_edges, num_clients // num_edges, rng)
+    batcher = FederatedBatcher(
+        {"inputs": data.x, "targets": data.y}, parts, batch_size=8, seed=seed
+    )
+
+    def init(rng_key):
+        k1, k2 = jax.random.split(rng_key)
+        return {
+            "w1": jax.random.normal(k1, (dim, 48)) * 0.25,
+            "b1": jnp.zeros((48,)),
+            "w2": jax.random.normal(k2, (48, 10)) * 0.25,
+            "b2": jnp.zeros((10,)),
+        }
+
+    def apply_fn(p, x):
+        h = jax.nn.relu(x @ p["w1"] + p["b1"])
+        return h @ p["w2"] + p["b2"]
+
+    def eval_fn(p):
+        return float(cnn.accuracy(apply_fn(p, jnp.asarray(data.x)), jnp.asarray(data.y)))
+
+    return init, apply_fn, eval_fn, batcher, data
+
+
+def run_schedule(kappa1, kappa2, *, partition="edge_iid", rounds=None, seed=0,
+                 workload="mnist", eval_every=1, lr=0.15, class_sep=3.5):
+    """Train one (kappa1, kappa2) schedule; returns the runner (history has
+    loss/accuracy/T/E per round)."""
+    init, apply_fn, eval_fn, batcher, _ = build_problem(
+        seed=seed, partition=partition, class_sep=class_sep
+    )
+    topo = FedTopology(num_edges=5, clients_per_edge=10)
+    hier = HierFAVGConfig(kappa1=kappa1, kappa2=kappa2)
+    if rounds is None:
+        rounds = max(240 // kappa1, 6)
+    runner = FederatedRunner(
+        loss_fn=cnn.make_cnn_loss_fn(apply_fn),
+        optimizer=sgd(exponential_decay(lr, 0.995, 50)),
+        topology=topo,
+        hier_config=hier,
+        data_sizes=batcher.data_sizes,
+        batcher=batcher,
+        runner_config=RunnerConfig(num_rounds=rounds, eval_every=eval_every),
+        eval_fn=eval_fn,
+        costs=cm.paper_workload(workload),
+    )
+    state = runner.init(jax.random.PRNGKey(seed), init(jax.random.PRNGKey(seed + 1)))
+    runner.run(state)
+    return runner
+
+
+def first_reach(runner, alpha):
+    """(steps, T, E) when accuracy first reached alpha; None if never."""
+    for h in runner.history:
+        if h.accuracy is not None and h.accuracy >= alpha:
+            return h.step, h.sim_time_s, h.sim_energy_j
+    return None
+
+
+def timed(fn, *args, iters=5, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters, out

@@ -1,0 +1,30 @@
+"""Paper Fig. 4: accuracy vs training epoch under the two guidelines.
+
+(a) edge-IID: fixed kappa1*kappa2 = 60, kappa1 in {60, 30, 15, 6} — smaller
+    kappa1 reaches accuracy in fewer local epochs; and with kappa1 fixed,
+    raising kappa2 is nearly free (curves coincide).
+(b) edge-NIID: same sweeps — raising kappa2 now hurts.
+"""
+from benchmarks.common import run_schedule
+
+
+def main(csv=True):
+    out = {}
+    for dist in ("edge_iid", "edge_niid"):
+        for k1, k2 in ((60, 1), (30, 2), (15, 4), (6, 10)):
+            r = run_schedule(k1, k2, partition=dist, rounds=240 // k1)
+            accs = [h.accuracy for h in r.history if h.accuracy is not None]
+            steps = [h.step for h in r.history if h.accuracy is not None]
+            out[(dist, k1, k2)] = (steps, accs)
+            tag = f"fig4_{dist}_k1={k1}_k2={k2}"
+            print(f"{tag},final_acc={accs[-1]:.3f},steps={steps[-1]}")
+    # guideline 1 check: at equal local-step budget, smaller kappa1 >= larger
+    for dist in ("edge_iid", "edge_niid"):
+        a60 = out[(dist, 60, 1)][1][-1]
+        a6 = out[(dist, 6, 10)][1][-1]
+        print(f"fig4_{dist}_guideline1,small_k1_acc={a6:.3f},large_k1_acc={a60:.3f},holds={a6 >= a60 - 0.02}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""§Roofline: aggregate artifacts/dryrun into the per-cell table.
+
+Reads the dry-run JSONs (single-pod for the roofline table per
+instructions; multi-pod rows shown for the pod-axis traffic) and prints the
+three terms, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPS, and the
+amortized HierFAVG step where phase artifacts exist.
+"""
+import glob
+import json
+import os
+
+
+def load(out_dir="artifacts/dryrun"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if "mesh" in rec and "roofline" in rec:  # skip auxiliary artifacts
+            cells.append(rec)
+    return cells
+
+
+def fmt_row(c):
+    r = c["roofline"]
+    amort = c.get("phases", {}).get("amortized_step")
+    extra = ""
+    if amort:
+        extra = f",amortized_coll_ms={amort['collective_s']*1e3:.1f}"
+    return (
+        f"roofline,{c['arch']},{c['shape']},{c['mesh']},"
+        f"compute_ms={r['compute_s']*1e3:.2f},memory_ms={r['memory_s']*1e3:.2f},"
+        f"collective_ms={r['collective_s']*1e3:.2f},dominant={r['dominant']},"
+        f"useful_flops_ratio={r['useful_flops_ratio']:.3f},"
+        f"roofline_fraction={r['roofline_fraction']:.4f}{extra}"
+    )
+
+
+def main(csv=True, out_dir="artifacts/dryrun"):
+    cells = load(out_dir)
+    if not cells:
+        print("roofline_report,NO_ARTIFACTS (run: python -m repro.launch.dryrun)")
+        return
+    single = [c for c in cells if "single" in c["mesh"]]
+    multi = [c for c in cells if "multi" in c["mesh"]]
+    print(f"# roofline table: {len(single)} single-pod cells, {len(multi)} multi-pod cells")
+    for c in single:
+        print(fmt_row(c))
+    print("# multi-pod (pod axis = DCN)")
+    for c in multi:
+        r = c["roofline"]
+        dcn = sum(v for k, v in r["coll_breakdown"].items() if "pod" in k)
+        print(
+            f"multipod,{c['arch']},{c['shape']},dcn_GB_per_dev={dcn/1e9:.3f},"
+            f"dominant={r['dominant']}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Benchmark entry point: one bench per paper table/figure + framework
+benches. ``PYTHONPATH=src python -m benchmarks.run [--only name]``."""
+import argparse
+import time
+import traceback
+
+from benchmarks import (
+    aggregation_scaling,
+    fig2_topologies,
+    fig4_convergence,
+    kernel_bench,
+    roofline_report,
+    table1_cost_model,
+    table2_latency_energy,
+)
+
+BENCHES = {
+    "table1_cost_model": table1_cost_model.main,
+    "fig4_convergence": fig4_convergence.main,
+    "table2_latency_energy": table2_latency_energy.main,
+    "fig2_topologies": fig2_topologies.main,
+    "kernel_bench": kernel_bench.main,
+    "aggregation_scaling": aggregation_scaling.main,
+    "roofline_report": roofline_report.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    failures = []
+    for name, fn in BENCHES.items():
+        if args.only and args.only != name:
+            continue
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+            print(f"{name},elapsed_s={time.time()-t0:.1f}")
+        except Exception as e:
+            failures.append(name)
+            print(f"{name},FAILED: {e}")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"benches failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

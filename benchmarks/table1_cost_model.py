@@ -1,0 +1,18 @@
+"""Paper Table I: per-iteration/per-upload latency & energy constants."""
+from repro.core import cost_model as cm
+
+
+def main(csv=False):
+    rows = []
+    for name in ("mnist", "cifar10"):
+        w = cm.paper_workload(name)
+        rows.append((name, w.t_comp, w.t_comm_edge, w.e_comp, w.e_comm_edge))
+    print("# Table I — latency/energy constants (paper values in parens)")
+    print("# expected: mnist 0.024s/0.1233s/0.0024J/0.0616J; cifar 4s/33s/0.4J/16.5J")
+    for name, tc, tm, ec, em in rows:
+        print(f"table1_{name},T_comp={tc:.4f}s,T_comm={tm:.4f}s,E_comp={ec:.4f}J,E_comm={em:.4f}J")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Paper Table II: T_alpha / E_alpha for the kappa sweeps.
+
+IIa: MNIST-workload constants, edge-IID and edge-NIID partitions, alpha=0.85.
+IIb: CIFAR-workload constants, simple-NIID partition, alpha=0.70.
+Steps-to-accuracy are MEASURED on the synthetic stand-in; T/E use the
+paper's Table I cost constants — the trade-off structure (T falls with
+kappa2; E is U-shaped) is the reproduction target.
+"""
+from benchmarks.common import first_reach, run_schedule
+
+
+def main(csv=True):
+    print("# Table IIa (mnist costs, alpha=0.85)")
+    rows = []
+    for dist in ("edge_iid", "edge_niid"):
+        for k1, k2 in ((60, 1), (30, 2), (15, 4), (6, 10)):
+            r = run_schedule(k1, k2, partition=dist, workload="mnist", rounds=360 // k1)
+            hit = first_reach(r, 0.85)
+            if hit is None:
+                print(f"table2a_{dist}_k1={k1}_k2={k2},NOT_REACHED")
+                continue
+            steps, T, E = hit
+            rows.append((dist, k1, k2, steps, T, E))
+            print(f"table2a_{dist}_k1={k1}_k2={k2},steps={steps},T={T:.1f}s,E={E:.2f}J")
+
+    print("# Table IIb (cifar costs, alpha=0.70, simple NIID)")
+    for k1, k2 in ((50, 1), (25, 2), (10, 5), (5, 10)):
+        r = run_schedule(k1, k2, partition="simple_niid", workload="cifar10", rounds=300 // k1)
+        hit = first_reach(r, 0.70)
+        if hit is None:
+            print(f"table2b_k1={k1}_k2={k2},NOT_REACHED")
+            continue
+        steps, T, E = hit
+        print(f"table2b_k1={k1}_k2={k2},steps={steps},T={T:.0f}s,E={E:.0f}J")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,645 @@
+"""HLO-text analyzer: FLOPs, HBM traffic and collective bytes.
+
+Why not ``compiled.cost_analysis()``: on the CPU backend it counts a
+``while`` (scan) body ONCE — for a 61-layer scanned model it undercounts
+FLOPs by ~num_layers×. This parser walks the HLO computations, resolves
+the call graph (calls / to_apply / body / condition / fusion), multiplies
+everything inside a while body by its statically-parsed trip count, and
+accumulates:
+
+  * dot/convolution FLOPs (2 × output_numel × contracted size),
+  * per-op HBM traffic (operand+result bytes of top-level non-bookkeeping
+    ops — a fusion counts once at its boundary),
+  * collective traffic per op kind, with replica-group reconstruction from
+    the iota format ``[G,S]<=[dims]T(perm)`` so each collective can be
+    attributed to mesh axes (model/data ICI vs pod DCN).
+
+Trip counts come from the while condition's ``compare(..., constant(K)),
+direction=LT`` pattern (what lax.scan emits); a failed parse records the
+while in ``unresolved_whiles`` and multiplies by 1 — tests assert the
+dry-run cells parse with zero unresolved whiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = (
+    "all-reduce-start", "all-gather-start", "reduce-scatter", "all-to-all",
+    "collective-permute-start", "all-reduce", "all-gather", "collective-permute",
+)
+
+_BOOKKEEPING = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "copy-start", "copy-done", "after-all", "partition-id",
+    "replica-id", "iota", "while", "conditional", "call", "custom-call",
+    "opt-barrier",
+}
+
+# ops that only *touch* part of their operands: traffic = bytes moved, not
+# the full operand (a dynamic-slice of a 13 GB stacked-param array inside a
+# scan body reads one layer's slice, not the whole array)
+_SLICING = {"dynamic-slice", "slice", "gather"}
+_UPDATING = {"dynamic-update-slice", "scatter"}
+_OUTPUT_ONLY = {"broadcast", "pad", "reverse", "rng", "rng-bit-generator"}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> float:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        numel = 1
+        if dims:
+            for d in dims.split(","):
+                numel *= int(d)
+        total += numel * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _first_shape(type_str: str) -> Tuple[str, List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return "", []
+    dtype, dims = m.groups()
+    return dtype, [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class OpInfo:
+    name: str
+    opcode: str
+    type_str: str
+    operands: List[str]
+    attrs: str
+    line: str
+    is_root: bool = False
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: Dict[str, OpInfo] = dataclasses.field(default_factory=dict)
+    order: List[str] = dataclasses.field(default_factory=list)
+    is_entry: bool = False
+
+
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w\.\-_]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-_]+)\s*=\s*((?:\([^()]*\)|[\w\[\]\{\},\d\s:]+?))\s+([\w\-]+)\((.*)$"
+)
+_OPERAND_RE = re.compile(r"%([\w\.\-_]+)")
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        m = _COMP_HEADER.match(line.strip())
+        if m and not line.startswith(" "):
+            cur = Computation(name=m.group(2), is_entry=bool(m.group(1)))
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        om = _OP_LINE.match(line)
+        if om:
+            name, type_str, opcode, rest = om.groups()
+            # operands = %refs before any attribute keyword in rest's first paren group
+            depth = 1
+            end = 0
+            for i, ch in enumerate(rest):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            operand_str = rest[:end]
+            attrs = rest[end + 1 :]
+            ops = _OPERAND_RE.findall(operand_str)
+            info = OpInfo(
+                name=name, opcode=opcode, type_str=type_str.strip(), operands=ops,
+                attrs=attrs, line=line, is_root=line.lstrip().startswith("ROOT "),
+            )
+            cur.ops[name] = info
+            cur.order.append(name)
+    return comps
+
+
+# ---------------------------------------------------------------------------
+# Trip counts
+# ---------------------------------------------------------------------------
+
+_CONST_RE = re.compile(r"constant\((-?\d+)\)")
+_DIRECTION_RE = re.compile(r"direction=(\w+)")
+
+
+def while_trip_count(cond: Computation, comps: Optional[Dict[str, "Computation"]] = None) -> Optional[int]:
+    """Parse scan-style conditions: counter < constant (LT) or LE.
+
+    Handles the compare being wrapped in a kLoop fusion (the CPU backend's
+    ``wrapped_compare`` pattern): the direction comes from the fused
+    computation, the bound from the condition computation's constant.
+    """
+    consts: Dict[str, int] = {}
+    for op in cond.ops.values():
+        if op.opcode == "constant":
+            m = _CONST_RE.search(op.line)
+            if m:
+                consts[op.name] = int(m.group(1))
+
+    def direction_of(comp: Computation) -> Optional[str]:
+        for op in comp.ops.values():
+            if op.opcode == "compare":
+                d = _DIRECTION_RE.search(op.attrs or op.line)
+                if d:
+                    return d.group(1)
+        return None
+
+    def finish(direction: str, bound: int) -> Optional[int]:
+        if direction == "LT":
+            return max(bound, 0)
+        if direction == "LE":
+            return max(bound + 1, 0)
+        if direction in ("GT", "GE"):  # reverse counters
+            return max(bound, 0)
+        return None
+
+    # direct compare in the condition body
+    for op in cond.ops.values():
+        if op.opcode == "compare":
+            d = _DIRECTION_RE.search(op.attrs or op.line)
+            direction = d.group(1) if d else ""
+            for o in op.operands:
+                if o in consts:
+                    got = finish(direction, consts[o])
+                    if got is not None:
+                        return got
+    # compare wrapped in a fusion: bound = fusion operand constant
+    if comps is not None:
+        for op in cond.ops.values():
+            if op.opcode == "fusion":
+                m = re.search(r"calls=%([\w\.\-_]+)", op.attrs)
+                if not m or m.group(1) not in comps:
+                    continue
+                direction = direction_of(comps[m.group(1)])
+                if direction is None:
+                    continue
+                for o in op.operands:
+                    if o in consts:
+                        got = finish(direction, consts[o])
+                        if got is not None:
+                            return got
+    # last resort: single s32 constant in a tiny condition ⇒ scan bound (LT)
+    if len(consts) == 1 and len(cond.ops) <= 8:
+        return max(next(iter(consts.values())), 0)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# FLOPs / bytes per op
+# ---------------------------------------------------------------------------
+
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _dot_flops(op: OpInfo, shapes: Dict[str, str]) -> float:
+    _, out_dims = _first_shape(op.type_str)
+    out_numel = float(np.prod(out_dims)) if out_dims else 1.0
+    lhs = op.operands[0] if op.operands else None
+    contract = 1.0
+    m = _CONTRACT_RE.search(op.attrs)
+    if m and lhs and lhs in shapes:
+        _, lhs_dims = _first_shape(shapes[lhs])
+        idxs = [int(i) for i in m.group(1).split(",") if i]
+        for i in idxs:
+            if i < len(lhs_dims):
+                contract *= lhs_dims[i]
+    return 2.0 * out_numel * contract
+
+
+_WINDOW_SIZE_RE = re.compile(r"size=([\dx]+)")
+
+
+def _conv_flops(op: OpInfo, shapes: Dict[str, str]) -> float:
+    _, out_dims = _first_shape(op.type_str)
+    out_numel = float(np.prod(out_dims)) if out_dims else 1.0
+    # kernel operand: spatial dims × input channels
+    if len(op.operands) >= 2 and op.operands[1] in shapes:
+        _, k_dims = _first_shape(shapes[op.operands[1]])
+        k_numel = float(np.prod(k_dims)) if k_dims else 1.0
+        # kernel numel = kh*kw*cin*cout; flops = 2*out_numel*kh*kw*cin
+        _, o_dims = _first_shape(op.type_str)
+        cout = o_dims[-1] if o_dims else 1
+        # try to divide out cout (layout-dependent; conservative fallback)
+        per_out = k_numel / max(cout, 1)
+        return 2.0 * out_numel * per_out
+    return 2.0 * out_numel
+
+
+_PARAM_IDX_RE = re.compile(r"parameter\((\d+)\)")
+_CALLS_RE = re.compile(r"calls=%([\w\.\-_]+)")
+
+
+def _fusion_traffic(op: OpInfo, shapes: Dict[str, str], comps: Dict[str, "Computation"]) -> float:
+    """HBM traffic of a fusion at its boundary, accounting for partial reads.
+
+    A fused computation that only *slices* an operand (dynamic-slice /
+    gather of one layer from the stacked-parameter array inside a scan
+    body) reads the slice, not the operand; a fused in-place
+    dynamic-update-slice writes the update region, not the whole array.
+    """
+    m = _CALLS_RE.search(op.attrs)
+    callee = comps.get(m.group(1)) if m else None
+    out_bytes = _shape_bytes(op.type_str)
+    if callee is None:
+        return out_bytes + sum(_shape_bytes(shapes.get(o, "")) for o in op.operands)
+
+    # parameter index -> op name in the callee
+    param_of_idx: Dict[int, str] = {}
+    for p in callee.ops.values():
+        if p.opcode == "parameter":
+            pm = _PARAM_IDX_RE.search(p.line)
+            if pm:
+                param_of_idx[int(pm.group(1))] = p.name
+
+    callee_shapes = {o.name: o.type_str for o in callee.ops.values()}
+    root = next((o for o in callee.ops.values() if o.is_root), None)
+
+    # in-place DUS pattern: a single DUS in the callee whose full-array
+    # operand is a parameter and whose result reaches the root (possibly
+    # through converts/bitcasts) — common as "dynamic-update-slice_convert"
+    # fusions in scan bodies. Traffic = the update region, not the buffer.
+    def _numel(ts: str) -> float:
+        n = 0
+        for _, dims in _SHAPE_RE.findall(ts):
+            k = 1
+            for d in dims.split(","):
+                if d:
+                    k *= int(d)
+            n += k
+        return n
+
+    dus_ops = [o for o in callee.ops.values() if o.opcode == "dynamic-update-slice"]
+    dus_inplace = None
+    if (
+        len(dus_ops) == 1
+        and root is not None
+        # numel (not bytes): "...convert" fusions change dtype after the DUS
+        and _numel(root.type_str) == _numel(dus_ops[0].type_str)
+    ):
+        dus_inplace = dus_ops[0]
+
+    total = 0.0
+    passthrough: set = set()
+    if dus_inplace is not None and len(dus_inplace.operands) > 1:
+        total += 2.0 * _shape_bytes(callee_shapes.get(dus_inplace.operands[1], ""))
+        # follow the buffer operand back through dtype/layout no-ops
+        frontier = [dus_inplace.operands[0]]
+        while frontier:
+            nm = frontier.pop()
+            if nm in passthrough:
+                continue
+            passthrough.add(nm)
+            src = callee.ops.get(nm)
+            if src is not None and src.opcode in ("convert", "bitcast", "copy", "reshape"):
+                frontier.extend(src.operands)
+    else:
+        total += out_bytes
+
+    for i, operand in enumerate(op.operands):
+        pname = param_of_idx.get(i)
+        full = _shape_bytes(shapes.get(operand, ""))
+        if pname is None:
+            total += full
+            continue
+        consumers = [o for o in callee.ops.values() if pname in o.operands]
+        if not consumers:
+            continue  # unused operand
+        if pname in passthrough:
+            continue  # in-place array pass-through
+        if all(c.opcode in _SLICING for c in consumers):
+            total += sum(
+                min(_shape_bytes(c.type_str), full) for c in consumers
+            )
+        else:
+            total += full
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Replica-group reconstruction + axis attribution
+# ---------------------------------------------------------------------------
+
+_RG_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+_RG_EXPLICIT = re.compile(r"replica_groups=\{(\{[\d,\{\}\s]*\})\}")
+
+
+def parse_replica_groups(attrs: str) -> Optional[np.ndarray]:
+    """Returns (G, S) array of device ids, or None."""
+    m = _RG_IOTA.search(attrs)
+    if m:
+        g, s = int(m.group(1)), int(m.group(2))
+        dims = [int(d) for d in m.group(3).split(",")]
+        arr = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            perm = [int(p) for p in m.group(4).split(",")]
+            arr = arr.transpose(perm)
+        return arr.reshape(g, s)
+    m = _RG_EXPLICIT.search(attrs)
+    if m:
+        groups = []
+        for grp in re.findall(r"\{([\d,\s]+)\}", m.group(1)):
+            groups.append([int(x) for x in grp.replace(" ", "").split(",") if x])
+        if groups and all(len(g) == len(groups[0]) for g in groups):
+            return np.asarray(groups)
+    return None
+
+
+def classify_groups(groups: Optional[np.ndarray], mesh_axes: Dict[str, np.ndarray]) -> str:
+    """Which mesh axes vary within a group: 'model' / 'data' / 'pod' /
+    comma-joined for multi-axis / 'unknown'."""
+    if groups is None:
+        return "unknown"
+    varying = []
+    for axis, coords in mesh_axes.items():
+        per_dev = coords[groups]  # (G, S)
+        if np.any(per_dev != per_dev[:, :1]):
+            varying.append(axis)
+    return ",".join(varying) if varying else "self"
+
+
+def mesh_axis_coords(mesh) -> Dict[str, np.ndarray]:
+    """device_id -> coordinate per axis, for the classify step."""
+    devs = mesh.devices
+    ids = np.vectorize(lambda d: d.id)(devs)
+    out = {}
+    n = ids.max() + 1
+    for i, axis in enumerate(mesh.axis_names):
+        coord = np.zeros(n, np.int64)
+        idx = np.indices(devs.shape)[i]
+        coord[ids.reshape(-1)] = idx.reshape(-1)
+        out[axis] = coord
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Whole-module analysis
+# ---------------------------------------------------------------------------
+
+def _feeds_bf16_convert(op: OpInfo, comp: Computation) -> bool:
+    """True if the collective's f32 result is immediately converted to bf16
+    (directly or through get-tuple-element) — the CPU backend's
+    convert-dot-convert legalization of bf16 matmuls. The TPU target would
+    run this collective with a bf16 payload."""
+    frontier = {op.name}
+    for _ in range(2):  # collective -> (gte) -> convert
+        next_frontier = set()
+        for o in comp.ops.values():
+            if not any(f in o.operands for f in frontier):
+                continue
+            if o.opcode == "get-tuple-element":
+                next_frontier.add(o.name)
+            elif o.opcode == "convert" and o.type_str.startswith("bf16"):
+                return True
+            elif o.opcode == "fusion" and "convert" in o.name and "bf16" in o.type_str:
+                return True
+        if not next_frontier:
+            return False
+        frontier = next_frontier
+    return False
+
+
+_CALL_ATTR = re.compile(r"(?:calls|to_apply|body|condition)=%([\w\.\-_]+)")
+_BRANCH_ATTR = re.compile(
+    r"(?:true_computation|false_computation)=%([\w\.\-_]+)|branch_computations=\{([^}]*)\}"
+)
+
+
+def _branch_callees(attrs: str) -> List[str]:
+    out: List[str] = []
+    for m in _BRANCH_ATTR.finditer(attrs):
+        if m.group(1):
+            out.append(m.group(1))
+        elif m.group(2):
+            out.extend(re.findall(r"%([\w\.\-_]+)", m.group(2)))
+    return out
+
+
+@dataclasses.dataclass
+class CollectiveRecord:
+    opcode: str
+    bytes: float  # payload bytes of the (tuple) result, ONE execution
+    group_size: int
+    axes: str  # mesh-axis classification
+    count: float  # executions incl. while multipliers
+    # The CPU backend legalizes bf16 dots to f32 (convert-dot-convert), so
+    # TP all-reduces of bf16 matmul partials appear with f32 payloads. When
+    # the result is immediately converted (back) to bf16 we count half the
+    # bytes — what the TPU target would move. Documented in EXPERIMENTS.md.
+    bf16_promoted: bool = False
+
+    @property
+    def effective_bytes(self) -> float:
+        return self.bytes * (0.5 if self.bf16_promoted else 1.0)
+
+    @property
+    def traffic_per_device(self) -> float:
+        """Link traffic per participating device per execution (ring model)."""
+        s = max(self.group_size, 1)
+        if self.opcode.startswith("all-reduce"):
+            return 2.0 * (s - 1) / s * self.effective_bytes
+        if self.opcode.startswith("all-gather"):
+            return (s - 1) / s * self.effective_bytes
+        if self.opcode.startswith("reduce-scatter"):
+            return (s - 1) / s * self.effective_bytes
+        if self.opcode.startswith("all-to-all"):
+            return (s - 1) / s * self.effective_bytes
+        if self.opcode.startswith("collective-permute"):
+            return self.effective_bytes
+        return self.effective_bytes
+
+
+@dataclasses.dataclass
+class HloSummary:
+    flops: float
+    hbm_bytes: float
+    collectives: List[CollectiveRecord]
+    unresolved_whiles: int
+    per_comp_flops: Dict[str, float]
+
+    def collective_bytes_per_device(self, axes_filter: Optional[Tuple[str, ...]] = None) -> float:
+        total = 0.0
+        for c in self.collectives:
+            if axes_filter is not None and not any(a in c.axes for a in axes_filter):
+                continue
+            total += c.traffic_per_device * c.count
+        return total
+
+    def collective_breakdown(self) -> Dict[str, float]:
+        out: Dict[str, float] = defaultdict(float)
+        for c in self.collectives:
+            out[c.axes] += c.traffic_per_device * c.count
+        return dict(out)
+
+
+def analyze(text: str, mesh=None, *, conditional_weight: float = 1.0) -> HloSummary:
+    """conditional_weight: multiplier for work inside `conditional` branches
+    (lax.cond). 1.0 counts every branch fully (upper bound); 0.0 excludes
+    them — used by the roofline to isolate the local-step cost of the fused
+    HierFAVG train step from its aggregation branches, which are accounted
+    separately (amortized by κ₁ / κ₁κ₂) via the phase cells."""
+    comps = parse_hlo(text)
+    mesh_axes = mesh_axis_coords(mesh) if mesh is not None else {}
+
+    # shapes per computation (operand lookup is computation-local)
+    entry = None
+    for c in comps.values():
+        if c.is_entry:
+            entry = c
+    if entry is None:  # fall back: computation named like main
+        entry = max(comps.values(), key=lambda c: len(c.ops))
+
+    # Pass 1: local (single-execution) stats per computation
+    local_flops: Dict[str, float] = {}
+    local_bytes: Dict[str, float] = {}
+    local_colls: Dict[str, List[CollectiveRecord]] = {}
+    callees: Dict[str, List[Tuple[str, str]]] = {}  # comp -> [(callee, via_opcode)]
+    unresolved = 0
+
+    for cname, comp in comps.items():
+        shapes = {op.name: op.type_str for op in comp.ops.values()}
+        fl = 0.0
+        by = 0.0
+        colls: List[CollectiveRecord] = []
+        calls: List[Tuple[str, str]] = []
+        for op in comp.ops.values():
+            if op.opcode == "dot":
+                fl += _dot_flops(op, shapes)
+            elif op.opcode == "convolution":
+                fl += _conv_flops(op, shapes)
+            if op.opcode not in _BOOKKEEPING:
+                out_bytes = _shape_bytes(op.type_str)
+                if op.opcode == "fusion":
+                    by += _fusion_traffic(op, shapes, comps)
+                elif op.opcode in _SLICING or op.opcode in _OUTPUT_ONLY:
+                    by += 2.0 * out_bytes  # read the region + write the result
+                elif op.opcode in _UPDATING:
+                    upd = (
+                        _shape_bytes(shapes.get(op.operands[1], ""))
+                        if len(op.operands) > 1
+                        else out_bytes
+                    )
+                    by += 2.0 * upd  # in-place: write region + read update
+                else:
+                    opnd_bytes = sum(_shape_bytes(shapes.get(o, "")) for o in op.operands)
+                    by += opnd_bytes + out_bytes
+            if op.opcode in _COLLECTIVES and not op.opcode.endswith("-done"):
+                groups = parse_replica_groups(op.attrs)
+                gsize = int(groups.shape[1]) if groups is not None else 1
+                axes = classify_groups(groups, mesh_axes) if mesh_axes else "unknown"
+                payload = _shape_bytes(op.type_str)
+                promoted = "f32" in op.type_str and _feeds_bf16_convert(op, comp)
+                colls.append(
+                    CollectiveRecord(op.opcode, payload, gsize, axes, 1.0, bf16_promoted=promoted)
+                )
+            for callee in _CALL_ATTR.findall(op.attrs):
+                calls.append((callee, op.opcode))
+        local_flops[cname] = fl
+        local_bytes[cname] = by
+        local_colls[cname] = colls
+        callees[cname] = calls
+
+    # Pass 2: roll up with while multipliers (memoized DFS)
+    total_flops: Dict[str, float] = {}
+    total_bytes: Dict[str, float] = {}
+    total_colls: Dict[str, List[CollectiveRecord]] = {}
+    visiting = set()
+
+    def resolve(cname: str) -> Tuple[float, float, List[CollectiveRecord]]:
+        nonlocal unresolved
+        if cname in total_flops:
+            return total_flops[cname], total_bytes[cname], total_colls[cname]
+        if cname in visiting or cname not in comps:
+            return 0.0, 0.0, []
+        visiting.add(cname)
+        fl = local_flops[cname]
+        by = local_bytes[cname]
+        cl = list(local_colls[cname])
+        comp = comps[cname]
+        for op in comp.ops.values():
+            if op.opcode == "while":
+                bm = re.search(r"body=%([\w\.\-_]+)", op.attrs)
+                cm = re.search(r"condition=%([\w\.\-_]+)", op.attrs)
+                body = bm.group(1) if bm else None
+                cond = cm.group(1) if cm else None
+                trips = None
+                if cond and cond in comps:
+                    trips = while_trip_count(comps[cond], comps)
+                if trips is None:
+                    trips = 1
+                    unresolved += 1
+                if body:
+                    bfl, bby, bcl = resolve(body)
+                    fl += trips * bfl
+                    by += trips * bby
+                    for c in bcl:
+                        cl.append(dataclasses.replace(c, count=c.count * trips))
+            elif op.opcode == "conditional":
+                for callee in _branch_callees(op.attrs):
+                    cfl, cby, ccl = resolve(callee)
+                    fl += conditional_weight * cfl
+                    by += conditional_weight * cby
+                    if conditional_weight > 0:
+                        for c in ccl:
+                            cl.append(dataclasses.replace(c, count=c.count * conditional_weight))
+            else:
+                for m in _CALL_ATTR.finditer(op.attrs):
+                    kind = m.group(0).split("=")[0]
+                    if kind in ("body", "condition"):
+                        continue
+                    cfl, cby, ccl = resolve(m.group(1))
+                    fl += cfl
+                    # fusion boundary traffic already counted at the fusion
+                    # op itself; inner ops of a fusion don't touch HBM
+                    if op.opcode != "fusion":
+                        by += cby
+                        cl.extend(ccl)
+                    else:
+                        cl.extend(ccl)  # collectives can't fuse; keep safe
+        visiting.discard(cname)
+        total_flops[cname] = fl
+        total_bytes[cname] = by
+        total_colls[cname] = cl
+        return fl, by, cl
+
+    fl, by, cl = resolve(entry.name)
+    return HloSummary(
+        flops=fl,
+        hbm_bytes=by,
+        collectives=cl,
+        unresolved_whiles=unresolved,
+        per_comp_flops=total_flops,
+    )

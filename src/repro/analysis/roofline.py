@@ -1,0 +1,162 @@
+"""Three-term roofline model (TPU v5e constants, per instructions).
+
+    compute term    = FLOPs / (chips × 197 TFLOP/s)
+    memory term     = HBM bytes / (chips × 819 GB/s)
+    collective term = collective bytes / (chips × 50 GB/s per link)
+
+All inputs come from the *partitioned* HLO module (compiled.as_text()), so
+parsed quantities are already per-device; terms divide by per-chip peaks
+directly and global numbers are reported as per_device × chips.
+
+HierFAVG-specific accounting: the paper's contribution is *amortization* of
+the two aggregation hops. ``hierfavg_step_terms`` combines the local-step
+cell with the edge/cloud phase cells as
+
+    per-step collective = local + edge/κ₁ + cloud/(κ₁·κ₂)
+
+with the cloud hop's bytes optionally scaled by the DCN slowdown (the
+paper's 10× edge→cloud latency assumption, Section IV-A) to express DCN
+seconds in ICI-equivalent terms.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.analysis.hlo import HloSummary
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s / link
+DCN_SLOWDOWN = 10.0  # paper's cloud:edge latency ratio, reused for pod axis
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    name: str
+    chips: int
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    coll_bytes_per_device: float
+    coll_breakdown: Dict[str, float]  # mesh-axis class -> bytes/device
+    model_flops_global: float = 0.0
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        """ICI bytes at ICI speed + pod-axis (DCN) bytes at DCN speed."""
+        dcn = sum(v for k, v in self.coll_breakdown.items() if "pod" in k)
+        ici = self.coll_bytes_per_device - dcn
+        return ici / ICI_BW + dcn * DCN_SLOWDOWN / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.flops_per_device * self.chips
+        return self.model_flops_global / total if total > 0 else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved if the step runs at the
+        max-term speed: (useful compute time) / (bound time)."""
+        if self.bound_s <= 0:
+            return 0.0
+        useful_s = self.model_flops_global / (self.chips * PEAK_FLOPS)
+        return useful_s / self.bound_s
+
+    def to_dict(self) -> Dict:
+        return {
+            "name": self.name,
+            "chips": self.chips,
+            "flops_per_device": self.flops_per_device,
+            "hbm_bytes_per_device": self.hbm_bytes_per_device,
+            "coll_bytes_per_device": self.coll_bytes_per_device,
+            "coll_breakdown": self.coll_breakdown,
+            "model_flops_global": self.model_flops_global,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def from_summary(
+    name: str, summary: HloSummary, chips: int, *, model_flops_global: float = 0.0
+) -> RooflineTerms:
+    return RooflineTerms(
+        name=name,
+        chips=chips,
+        flops_per_device=summary.flops,
+        hbm_bytes_per_device=summary.hbm_bytes,
+        coll_bytes_per_device=summary.collective_bytes_per_device(),
+        coll_breakdown=summary.collective_breakdown(),
+        model_flops_global=model_flops_global,
+    )
+
+
+def hierfavg_step_terms(
+    name: str,
+    local: RooflineTerms,
+    edge: Optional[RooflineTerms],
+    cloud: Optional[RooflineTerms],
+    kappa1: int,
+    kappa2: int,
+) -> RooflineTerms:
+    """Amortized per-local-step terms — the paper's protocol in roofline form."""
+    def scaled(t: Optional[RooflineTerms], f: float):
+        if t is None:
+            return 0.0, 0.0, 0.0, {}
+        bd = {k: v * f for k, v in t.coll_breakdown.items()}
+        return t.flops_per_device * f, t.hbm_bytes_per_device * f, t.coll_bytes_per_device * f, bd
+
+    ef, eb, ec, ebd = scaled(edge, 1.0 / kappa1)
+    cf, cb, cc, cbd = scaled(cloud, 1.0 / (kappa1 * kappa2))
+    breakdown = dict(local.coll_breakdown)
+    for d in (ebd, cbd):
+        for k, v in d.items():
+            breakdown[k] = breakdown.get(k, 0.0) + v
+    return RooflineTerms(
+        name=name,
+        chips=local.chips,
+        flops_per_device=local.flops_per_device + ef + cf,
+        hbm_bytes_per_device=local.hbm_bytes_per_device + eb + cb,
+        coll_bytes_per_device=local.coll_bytes_per_device + ec + cc,
+        coll_breakdown=breakdown,
+        model_flops_global=local.model_flops_global,
+    )
+
+
+def model_flops(cfg, shape, *, active: bool = True) -> float:
+    """6·N·D (train) / 2·N·D (forward-only), N = (active) params, D = tokens."""
+    from repro.configs.base import active_param_count, param_count
+
+    n = active_param_count(cfg) if active else param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per request
+    return 2.0 * n * shape.global_batch

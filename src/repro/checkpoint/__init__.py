@@ -1,0 +1,12 @@
+from repro.checkpoint import manager, reshard
+from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.reshard import merge_opt_state, reshard_clients, to_mesh
+
+__all__ = [
+    "manager",
+    "reshard",
+    "CheckpointManager",
+    "merge_opt_state",
+    "reshard_clients",
+    "to_mesh",
+]

@@ -1,0 +1,92 @@
+"""Elastic re-topology: map a HierFAVG checkpoint onto a different cluster.
+
+Two elastic moves, both defined by the algorithm's own aggregation operator
+(so the semantics are principled, not ad hoc):
+
+* ``reshard_clients`` — change (L, C) -> (L', C'). Shrinking merges client
+  models by |D_i|-weighted mean (exactly an edge aggregation over the
+  merged set); growing replicates the group model to the new members
+  (exactly a broadcast). Data sizes re-partition accordingly.
+* ``to_mesh`` — re-commit existing arrays to a new mesh/sharding
+  (jax.device_put with the target NamedShardings; GSPMD moves the bytes).
+
+Together they cover the elastic-scaling story: lose a pod -> restore the
+latest checkpoint with N' < N and keep training; gain capacity -> grow.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def _group_reduce(stack: jnp.ndarray, weights: np.ndarray, groups: int) -> jnp.ndarray:
+    """(N, ...) -> (groups, ...) weighted mean over contiguous blocks."""
+    n = stack.shape[0]
+    size = n // groups
+    w = jnp.asarray(weights, jnp.float32).reshape(groups, size)
+    xg = stack.reshape(groups, size, *stack.shape[1:]).astype(jnp.float32)
+    wb = w.reshape(groups, size, *([1] * (stack.ndim - 1)))
+    num = jnp.sum(xg * wb, axis=1)
+    den = jnp.sum(wb, axis=1)
+    return (num / den).astype(stack.dtype)
+
+
+def reshard_clients(
+    params: PyTree,
+    data_sizes: np.ndarray,
+    new_num_clients: int,
+) -> Tuple[PyTree, np.ndarray]:
+    """Map stacked (N, ...) client params onto N' clients.
+
+    N' < N: N must be divisible by N'; contiguous groups of N/N' clients are
+    merged by weighted mean (edge-aggregation semantics) and the merged
+    client inherits the group's total |D|.
+    N' > N: N' must be divisible by N; each client's model is replicated to
+    N'/N new clients (broadcast semantics) and its data size is split.
+    """
+    sizes = np.asarray(data_sizes, np.float64)
+    n = sizes.shape[0]
+    if new_num_clients == n:
+        return params, sizes
+    if new_num_clients < n:
+        if n % new_num_clients:
+            raise ValueError(f"cannot merge {n} clients into {new_num_clients}")
+        g = new_num_clients
+        merged = jax.tree_util.tree_map(lambda x: _group_reduce(x, sizes, g), params)
+        new_sizes = sizes.reshape(g, -1).sum(axis=1)
+        return merged, new_sizes
+    if new_num_clients % n:
+        raise ValueError(f"cannot grow {n} clients into {new_num_clients}")
+    rep = new_num_clients // n
+    grown = jax.tree_util.tree_map(
+        lambda x: jnp.repeat(x, rep, axis=0), params
+    )
+    new_sizes = np.repeat(sizes / rep, rep)
+    return grown, new_sizes
+
+
+def to_mesh(tree: PyTree, shardings: PyTree) -> PyTree:
+    """Re-commit arrays to a new mesh's shardings (cross-mesh restore)."""
+    return jax.tree_util.tree_map(jax.device_put, tree, shardings)
+
+
+def merge_opt_state(opt_state: PyTree, data_sizes: np.ndarray, new_num_clients: int) -> PyTree:
+    """Reshard stacked per-client optimizer state the same way as params.
+
+    Scalar leaves (step counters) pass through unchanged; stacked leaves
+    (first dim == N) are merged/grown like parameters.
+    """
+    n = len(np.asarray(data_sizes))
+
+    def leaf(x):
+        if hasattr(x, "ndim") and x.ndim >= 1 and x.shape[0] == n:
+            out, _ = reshard_clients(x, data_sizes, new_num_clients)
+            return out
+        return x
+
+    return jax.tree_util.tree_map(leaf, opt_state)

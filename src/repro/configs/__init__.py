@@ -1,0 +1,3 @@
+from repro.configs.base import ArchConfig, FedPlan, LM_SHAPES, MLAConfig, MoEConfig, ShapeSpec
+
+__all__ = ["ArchConfig", "FedPlan", "LM_SHAPES", "MLAConfig", "MoEConfig", "ShapeSpec"]

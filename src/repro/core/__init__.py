@@ -1,0 +1,34 @@
+"""The paper's primary contribution: HierFAVG + its analysis + cost model."""
+from repro.core.hierfavg import (
+    FedState,
+    FedTopology,
+    HierFAVGConfig,
+    build_cloud_sync,
+    build_edge_sync,
+    build_hier_round,
+    build_hier_round_async,
+    build_local_step,
+    build_train_step,
+    init_state,
+    replicate_for_clients,
+)
+from repro.core import aggregation, convergence, cost_model, divergence, reference
+
+__all__ = [
+    "FedState",
+    "FedTopology",
+    "HierFAVGConfig",
+    "build_cloud_sync",
+    "build_edge_sync",
+    "build_hier_round",
+    "build_hier_round_async",
+    "build_local_step",
+    "build_train_step",
+    "init_state",
+    "replicate_for_clients",
+    "aggregation",
+    "convergence",
+    "cost_model",
+    "divergence",
+    "reference",
+]

@@ -1,0 +1,139 @@
+"""Weighted model-aggregation primitives (the paper's EdgeAggregation /
+CloudAggregation, Algorithm 1 lines 25-31) as pytree operators.
+
+Representation
+--------------
+All federated parameters carry a leading **client axis** of size
+N = num_edges * clients_per_edge, laid out edge-major:
+
+    leaf.shape == (N, *param_shape)        clients of edge l occupy
+                                           leaf[l*C : (l+1)*C]
+
+Edge aggregation is a weighted mean over each contiguous block of C clients
+(broadcast back to every member); cloud aggregation is the weighted mean over
+the whole axis. Under a mesh sharding of `P(("pod","data"), ...)` these lower
+to *grouped* all-reduces over exactly the edge's devices (intra-pod ICI) and
+a global all-reduce (crossing the pod/DCN axis) respectively — the paper's
+two-tier communication pattern, verified in the dry-run HLO.
+
+Fault tolerance: every operator takes an optional survival ``mask`` (N,) and
+renormalizes over surviving clients, matching the paper's weighted mean
+restricted to the participating set. A group with zero survivors keeps its
+members' current parameters (they continue local training and rejoin at the
+next aggregation).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def _bcast_weights(w: jnp.ndarray, leaf: jnp.ndarray) -> jnp.ndarray:
+    """Reshape (…,) weights to broadcast against leaf (…, *param_dims)."""
+    return w.reshape(w.shape + (1,) * (leaf.ndim - w.ndim)).astype(jnp.float32)
+
+
+def weighted_mean(tree: PyTree, weights: jnp.ndarray, mask: Optional[jnp.ndarray] = None) -> PyTree:
+    """Cloud aggregation: weighted mean over the full client axis, broadcast back.
+
+    weights: (N,) client dataset sizes |D_i|. mask: optional (N,) in {0,1}.
+    """
+    w = weights.astype(jnp.float32)
+    if mask is not None:
+        w = w * mask.astype(jnp.float32)
+    denom = jnp.sum(w)
+
+    def leaf_fn(x):
+        wb = _bcast_weights(w, x)
+        num = jnp.sum(x.astype(jnp.float32) * wb, axis=0, keepdims=True)
+        safe = jnp.where(denom > 0, denom, 1.0)
+        mean = num / safe
+        mean = jnp.broadcast_to(mean, x.shape)
+        # zero survivors anywhere -> keep current params
+        return jnp.where(denom > 0, mean, x.astype(jnp.float32)).astype(x.dtype)
+
+    return jax.tree_util.tree_map(leaf_fn, tree)
+
+
+def grouped_weighted_mean(
+    tree: PyTree,
+    weights: jnp.ndarray,
+    num_groups: int,
+    mask: Optional[jnp.ndarray] = None,
+) -> PyTree:
+    """Edge aggregation: per-edge weighted mean over contiguous client blocks.
+
+    tree leaves: (N, ...); weights/mask: (N,); N must be divisible by num_groups.
+    """
+    n = weights.shape[0]
+    if n % num_groups:
+        raise ValueError(f"N={n} not divisible by num_groups={num_groups}")
+    group_size = n // num_groups
+    w = weights.astype(jnp.float32)
+    if mask is not None:
+        w = w * mask.astype(jnp.float32)
+    wg = w.reshape(num_groups, group_size)
+    denom = jnp.sum(wg, axis=1, keepdims=True)  # (G, 1)
+    safe = jnp.where(denom > 0, denom, 1.0)
+
+    def leaf_fn(x):
+        xg = x.reshape(num_groups, group_size, *x.shape[1:])
+        wb = _bcast_weights(wg, xg)
+        num = jnp.sum(xg.astype(jnp.float32) * wb, axis=1, keepdims=True)  # (G,1,...)
+        mean = num / _bcast_weights(safe, num)
+        mean = jnp.broadcast_to(mean, xg.shape)
+        alive = _bcast_weights(denom > 0, xg)
+        out = jnp.where(alive, mean, xg.astype(jnp.float32))
+        return out.reshape(x.shape).astype(x.dtype)
+
+    return jax.tree_util.tree_map(leaf_fn, tree)
+
+
+def group_weights(weights: jnp.ndarray, num_groups: int, mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """|D^l| per edge: sum of member dataset sizes (masked)."""
+    w = weights.astype(jnp.float32)
+    if mask is not None:
+        w = w * mask.astype(jnp.float32)
+    return w.reshape(num_groups, -1).sum(axis=1)
+
+
+def delta_weighted_mean(
+    tree: PyTree,
+    anchor: PyTree,
+    weights: jnp.ndarray,
+    mask: Optional[jnp.ndarray] = None,
+) -> PyTree:
+    """Cloud aggregation in *delta* form: anchor + mean(tree - anchor).
+
+    Mathematically identical to ``weighted_mean`` when every client survives
+    (the anchor is the last broadcast model, common to all clients), but the
+    payload (w - anchor) is small-magnitude and compresses well — this is the
+    entry point for the compressed cloud hop (beyond-paper optimization).
+    """
+    deltas = jax.tree_util.tree_map(lambda x, a: x - a.astype(x.dtype), tree, anchor)
+    mean_delta = weighted_mean(deltas, weights, mask)
+    return jax.tree_util.tree_map(lambda a, d: (a.astype(jnp.float32) + d.astype(jnp.float32)).astype(a.dtype), anchor, mean_delta)
+
+
+def hierarchical_mean(
+    tree: PyTree,
+    weights: jnp.ndarray,
+    num_groups: int,
+    mask: Optional[jnp.ndarray] = None,
+) -> PyTree:
+    """Cloud aggregation expressed as edge-then-cloud composition.
+
+    Equal to ``weighted_mean`` (weights compose: the cloud's weighted mean of
+    edge means with weights |D^l| equals the flat weighted mean with |D_i|) —
+    kept as the two-stage form so GSPMD emits the hierarchical
+    reduce(ICI) -> reduce(DCN) schedule rather than one flat all-reduce.
+    """
+    edge = grouped_weighted_mean(tree, weights, num_groups, mask)
+    # After the edge stage each member of a group holds the group mean, so a
+    # flat weighted mean over clients now equals the mean over edges with
+    # weights |D^l|.
+    return weighted_mean(edge, weights, mask)

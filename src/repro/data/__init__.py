@@ -1,0 +1,19 @@
+from repro.data import partition, pipeline, synthetic
+from repro.data.partition import partition as make_partition, partition_stats
+from repro.data.pipeline import FederatedBatcher, global_batch_iterator
+from repro.data.synthetic import ClassificationData, TokenCorpus, clustered_gaussians, embedding_corpus, token_corpus
+
+__all__ = [
+    "partition",
+    "pipeline",
+    "synthetic",
+    "make_partition",
+    "partition_stats",
+    "FederatedBatcher",
+    "global_batch_iterator",
+    "ClassificationData",
+    "TokenCorpus",
+    "clustered_gaussians",
+    "embedding_corpus",
+    "token_corpus",
+]

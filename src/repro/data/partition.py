@@ -1,0 +1,146 @@
+"""Client data partitioning (Section IV-A's three non-IID protocols).
+
+Given labels (n,) and a topology (L edges × C clients each), produce a list
+of per-client index arrays under one of:
+
+* ``iid``          — uniform random split.
+* ``simple_niid``  — each client holds samples of `classes_per_client` (=2)
+  classes; clients are randomly assigned to edges. (The paper's "most
+  commonly used non-IID data partition [2]".)
+* ``edge_iid``     — each client holds ONE class; each edge's C clients
+  cover C distinct classes ⇒ edge datasets are IID replicas. (Paper: "assign
+  each client samples of one class, and assign each edge 10 clients with
+  different classes".)
+* ``edge_niid``    — each client holds ONE class; each edge covers only
+  `classes_per_edge` (=C/2 in the paper: 5 classes across 10 clients)
+  ⇒ edge datasets are non-IID.
+
+All protocols balance sample counts across clients (the paper assumes
+"the same amount of training data" per client).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+
+def _shards_by_class(labels: np.ndarray, rng: np.random.Generator) -> List[np.ndarray]:
+    return [rng.permutation(np.where(labels == c)[0]) for c in range(int(labels.max()) + 1)]
+
+
+def _balanced_take(pool: np.ndarray, count: int, cursor: int) -> (np.ndarray, int):
+    """Take `count` indices from pool starting at cursor, wrapping."""
+    n = pool.shape[0]
+    idx = np.arange(cursor, cursor + count) % n
+    return pool[idx], (cursor + count) % n
+
+
+def partition_iid(
+    labels: np.ndarray, num_clients: int, rng: np.random.Generator
+) -> List[np.ndarray]:
+    perm = rng.permutation(labels.shape[0])
+    return [np.sort(s) for s in np.array_split(perm, num_clients)]
+
+
+def partition_simple_niid(
+    labels: np.ndarray,
+    num_clients: int,
+    rng: np.random.Generator,
+    *,
+    classes_per_client: int = 2,
+) -> List[np.ndarray]:
+    """McMahan-style shard assignment: sort by label, slice into
+    num_clients * classes_per_client shards, deal each client k shards."""
+    order = np.argsort(labels, kind="stable")
+    shards = np.array_split(order, num_clients * classes_per_client)
+    shard_ids = rng.permutation(len(shards))
+    out = []
+    for i in range(num_clients):
+        take = shard_ids[i * classes_per_client : (i + 1) * classes_per_client]
+        out.append(np.sort(np.concatenate([shards[s] for s in take])))
+    return out
+
+
+def partition_edge_iid(
+    labels: np.ndarray,
+    num_edges: int,
+    clients_per_edge: int,
+    rng: np.random.Generator,
+) -> List[np.ndarray]:
+    """One class per client; each edge's clients cover distinct classes.
+
+    Requires clients_per_edge <= num_classes. Client j of edge l gets class
+    (j + l) mod num_classes — distinct within each edge, and class coverage
+    rotates across edges so every edge sees a same-shaped class mix (IID
+    across edges, maximally non-IID within clients).
+    """
+    num_classes = int(labels.max()) + 1
+    if clients_per_edge > num_classes:
+        raise ValueError("edge_iid needs clients_per_edge <= num_classes")
+    pools = _shards_by_class(labels, rng)
+    cursors = [0] * num_classes
+    per_client = labels.shape[0] // (num_edges * clients_per_edge)
+    out = []
+    for l in range(num_edges):
+        for j in range(clients_per_edge):
+            c = (j + l) % num_classes
+            take, cursors[c] = _balanced_take(pools[c], per_client, cursors[c])
+            out.append(np.sort(take))
+    return out
+
+
+def partition_edge_niid(
+    labels: np.ndarray,
+    num_edges: int,
+    clients_per_edge: int,
+    rng: np.random.Generator,
+    *,
+    classes_per_edge: int = 0,
+) -> List[np.ndarray]:
+    """One class per client; edge l covers only classes_per_edge classes
+    (default C/2, the paper's 5-of-10), so edges are non-IID."""
+    num_classes = int(labels.max()) + 1
+    cpe = classes_per_edge or max(clients_per_edge // 2, 1)
+    pools = _shards_by_class(labels, rng)
+    cursors = [0] * num_classes
+    per_client = labels.shape[0] // (num_edges * clients_per_edge)
+    out = []
+    for l in range(num_edges):
+        base = (l * cpe) % num_classes
+        for j in range(clients_per_edge):
+            c = (base + (j % cpe)) % num_classes
+            take, cursors[c] = _balanced_take(pools[c], per_client, cursors[c])
+            out.append(np.sort(take))
+    return out
+
+
+def partition(
+    kind: str,
+    labels: np.ndarray,
+    num_edges: int,
+    clients_per_edge: int,
+    rng: np.random.Generator,
+    **kw,
+) -> List[np.ndarray]:
+    n = num_edges * clients_per_edge
+    if kind == "iid":
+        return partition_iid(labels, n, rng)
+    if kind == "simple_niid":
+        return partition_simple_niid(labels, n, rng, **kw)
+    if kind == "edge_iid":
+        return partition_edge_iid(labels, num_edges, clients_per_edge, rng)
+    if kind == "edge_niid":
+        return partition_edge_niid(labels, num_edges, clients_per_edge, rng, **kw)
+    raise ValueError(f"unknown partition kind: {kind}")
+
+
+def partition_stats(parts: List[np.ndarray], labels: np.ndarray) -> np.ndarray:
+    """(num_clients, num_classes) label histogram — used by tests and the
+    divergence probes to verify the protocol produced the intended skew."""
+    num_classes = int(labels.max()) + 1
+    out = np.zeros((len(parts), num_classes), np.int64)
+    for i, idx in enumerate(parts):
+        binc = np.bincount(labels[idx], minlength=num_classes)
+        out[i] = binc
+    return out

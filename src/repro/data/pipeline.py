@@ -1,0 +1,119 @@
+"""Federated batching: per-client iterators -> stacked (N, b, ...) batches.
+
+The production train step consumes one batch per client per local update,
+stacked on the leading client axis (matching the stacked-parameter layout in
+``core.hierfavg``). The pipeline:
+
+  1. holds each client's index set (from ``data.partition``),
+  2. reshuffles each client's samples every local epoch (client-seeded,
+     reproducible, restart-safe: state = (epoch, cursor) per client),
+  3. emits pytree batches with leaves shaped (N, b, ...) — or
+     (kappa1, N, b, ...) for the scanned ``hier_round`` driver.
+
+Also provides ``global_batch_iterator`` for the plain (non-federated)
+LM training path used by the serving/dry-run drivers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence
+
+import numpy as np
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class ClientCursor:
+    epoch: int = 0
+    pos: int = 0
+
+
+class FederatedBatcher:
+    """Stateful, restart-safe federated batcher.
+
+    arrays: dict of data arrays (first axis = sample). batch_fn maps a dict
+    of per-sample slices to the model's batch pytree (default: identity).
+    """
+
+    def __init__(
+        self,
+        arrays: Dict[str, np.ndarray],
+        client_indices: Sequence[np.ndarray],
+        batch_size: int,
+        *,
+        seed: int = 0,
+        batch_fn: Optional[Callable[[Dict[str, np.ndarray]], PyTree]] = None,
+    ):
+        self.arrays = arrays
+        self.client_indices = [np.asarray(ix) for ix in client_indices]
+        self.batch_size = batch_size
+        self.seed = seed
+        self.batch_fn = batch_fn or (lambda d: d)
+        self.cursors = [ClientCursor() for _ in client_indices]
+        self._orders: List[np.ndarray] = [self._order(i) for i in range(len(client_indices))]
+
+    @property
+    def num_clients(self) -> int:
+        return len(self.client_indices)
+
+    @property
+    def data_sizes(self) -> np.ndarray:
+        return np.array([ix.shape[0] for ix in self.client_indices], np.float64)
+
+    def _order(self, client: int) -> np.ndarray:
+        rng = np.random.default_rng((self.seed, client, self.cursors[client].epoch))
+        return rng.permutation(self.client_indices[client])
+
+    def _next_for(self, client: int) -> np.ndarray:
+        cur = self.cursors[client]
+        order = self._orders[client]
+        b = self.batch_size
+        if cur.pos + b > order.shape[0]:
+            cur.epoch += 1
+            cur.pos = 0
+            self._orders[client] = order = self._order(client)
+        take = order[cur.pos : cur.pos + b]
+        cur.pos += b
+        return take
+
+    def next_batch(self) -> PyTree:
+        """One stacked batch: leaves (N, b, ...)."""
+        rows = [self._next_for(i) for i in range(self.num_clients)]
+        idx = np.stack(rows)  # (N, b)
+        return self.batch_fn({k: v[idx] for k, v in self.arrays.items()})
+
+    def next_batches(self, count: int) -> PyTree:
+        """`count` stacked batches with a leading scan axis: (count, N, b, ...)."""
+        outs = [self.next_batch() for _ in range(count)]
+        import jax
+
+        return jax.tree_util.tree_map(lambda *xs: np.stack(xs), *outs)
+
+    # -- restart safety ------------------------------------------------------
+    def state_dict(self) -> Dict[str, Any]:
+        return {
+            "seed": self.seed,
+            "cursors": [(c.epoch, c.pos) for c in self.cursors],
+        }
+
+    def load_state_dict(self, state: Dict[str, Any]) -> None:
+        self.seed = state["seed"]
+        for c, (e, p) in zip(self.cursors, state["cursors"]):
+            c.epoch, c.pos = e, p
+        self._orders = [self._order(i) for i in range(self.num_clients)]
+
+
+def global_batch_iterator(
+    arrays: Dict[str, np.ndarray], batch_size: int, *, seed: int = 0
+) -> Iterator[Dict[str, np.ndarray]]:
+    """Simple epoch-shuffled global iterator (non-federated paths)."""
+    n = next(iter(arrays.values())).shape[0]
+    epoch = 0
+    while True:
+        rng = np.random.default_rng((seed, epoch))
+        order = rng.permutation(n)
+        for s in range(0, n - batch_size + 1, batch_size):
+            take = order[s : s + batch_size]
+            yield {k: v[take] for k, v in arrays.items()}
+        epoch += 1

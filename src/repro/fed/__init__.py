@@ -1,0 +1,18 @@
+from repro.fed import failures, runner, topology
+from repro.fed.failures import FailureSimulator, StragglerModel, combine_masks
+from repro.fed.runner import FederatedRunner, RunnerConfig
+from repro.fed.topology import MeshFedPlan, edge_replica_groups, plan_for_mesh
+
+__all__ = [
+    "failures",
+    "runner",
+    "topology",
+    "FailureSimulator",
+    "StragglerModel",
+    "combine_masks",
+    "FederatedRunner",
+    "RunnerConfig",
+    "MeshFedPlan",
+    "edge_replica_groups",
+    "plan_for_mesh",
+]

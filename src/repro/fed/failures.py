@@ -1,0 +1,98 @@
+"""Failure model + straggler mitigation for the federated runner.
+
+At 1000+ node scale, node loss and stragglers are routine. The aggregation
+operators (core.aggregation) already accept a survival mask and renormalize
+over survivors — this module produces those masks:
+
+* ``FailureSimulator`` — per-client iid failure/recovery Markov chain
+  (host-side; deterministic under seed) standing in for a real failure
+  detector (heartbeat timeouts).
+* ``StragglerModel`` — per-client local-step latency ~ lognormal; a client
+  whose κ₁ steps exceed the edge deadline is excluded from that edge
+  aggregation (deadline-based partial aggregation) but keeps its local
+  model and rejoins at the next boundary — exactly the paper's weighted
+  mean restricted to the participating set.
+* ``deadline_for`` — the auto-deadline policy: p-th percentile of the
+  latency model times a slack factor.
+
+The round runner (fed.runner) threads masks through train_step; masks are
+ordinary (N,) float arrays so the jitted step never recompiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class FailureSimulator:
+    """Two-state Markov chain per client: alive <-> dead.
+
+    p_fail: P(alive->dead) per aggregation boundary; p_recover: P(dead->alive).
+    """
+
+    num_clients: int
+    p_fail: float = 0.0
+    p_recover: float = 0.5
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+        self.alive = np.ones(self.num_clients, bool)
+
+    def step(self) -> np.ndarray:
+        u = self._rng.random(self.num_clients)
+        die = self.alive & (u < self.p_fail)
+        recover = (~self.alive) & (u < self.p_recover)
+        self.alive = (self.alive & ~die) | recover
+        return self.alive.astype(np.float32)
+
+    def state_dict(self):
+        return {"alive": self.alive.copy(), "rng": self._rng.bit_generator.state}
+
+    def load_state_dict(self, s):
+        self.alive = s["alive"].copy()
+        self._rng.bit_generator.state = s["rng"]
+
+
+@dataclasses.dataclass
+class StragglerModel:
+    """Lognormal per-client step-latency; exceeds-deadline -> masked out."""
+
+    num_clients: int
+    mean_step_s: float = 1.0
+    sigma: float = 0.3
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+        # persistent per-client slowness factor (heterogeneous hardware)
+        self.slowness = np.exp(self._rng.normal(0.0, self.sigma / 2, self.num_clients))
+
+    def interval_latency(self, kappa1: int) -> np.ndarray:
+        """Simulated wall time for each client to finish kappa1 local steps."""
+        jitter = np.exp(self._rng.normal(0.0, self.sigma, self.num_clients))
+        return kappa1 * self.mean_step_s * self.slowness * jitter
+
+    def deadline_for(self, kappa1: int, *, percentile: float = 95.0, slack: float = 1.1) -> float:
+        """Deadline = slack * p-th percentile of the latency distribution."""
+        # analytic percentile of lognormal(mean*slowness median)
+        base = kappa1 * self.mean_step_s * np.median(self.slowness)
+        z = {90.0: 1.2816, 95.0: 1.6449, 99.0: 2.3263}.get(percentile, 1.6449)
+        return slack * base * float(np.exp(self.sigma * z))
+
+    def survivors(self, kappa1: int, deadline: Optional[float] = None) -> Tuple[np.ndarray, float]:
+        lat = self.interval_latency(kappa1)
+        d = deadline if deadline is not None else self.deadline_for(kappa1)
+        return (lat <= d).astype(np.float32), d
+
+
+def combine_masks(*masks: Optional[np.ndarray]) -> Optional[np.ndarray]:
+    out: Optional[np.ndarray] = None
+    for m in masks:
+        if m is None:
+            continue
+        out = m if out is None else out * m
+    return out

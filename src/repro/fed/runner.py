@@ -1,0 +1,186 @@
+"""Federated round runner: the host-side training orchestrator.
+
+Drives ``core.hierfavg`` edge-interval by edge-interval:
+
+    for round r:                       # r-th edge interval (κ₁ local steps)
+        mask  = failure detector + straggler deadline      (host)
+        state = hier_round(state, batches_r, r, mask)      (device, jitted)
+        if r % kappa2 == kappa2-1: cloud boundary          (inside hier_round)
+        eval / checkpoint / cost accounting                (host)
+
+This is the deployable loop: one executable for the whole run, host logic
+only at aggregation boundaries (the natural synchronization points of the
+paper's protocol). Metrics include the paper's T/E accounting (cost_model)
+so experiments read time-to-accuracy directly off the run log.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cost_model as cm
+from repro.core.hierfavg import FedState, FedTopology, HierFAVGConfig, build_hier_round, init_state
+from repro.fed.failures import FailureSimulator, StragglerModel, combine_masks
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class RunnerConfig:
+    num_rounds: int  # edge intervals to run (= K / kappa1)
+    eval_every: int = 0  # rounds between evals (0 = never)
+    checkpoint_every: int = 0  # rounds between checkpoints (0 = never)
+    target_accuracy: float = 0.0  # stop early when reached (0 = never)
+    straggler_deadline_pct: float = 95.0
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    round: int
+    step: int
+    loss: float
+    mask_alive: int
+    sim_time_s: float
+    sim_energy_j: float
+    accuracy: Optional[float] = None
+
+
+class FederatedRunner:
+    def __init__(
+        self,
+        *,
+        loss_fn,
+        optimizer,
+        topology: FedTopology,
+        hier_config: HierFAVGConfig,
+        data_sizes: np.ndarray,
+        batcher,  # FederatedBatcher
+        runner_config: RunnerConfig,
+        eval_fn: Optional[Callable[[PyTree], float]] = None,
+        costs: Optional[cm.WorkloadCosts] = None,
+        failures: Optional[FailureSimulator] = None,
+        stragglers: Optional[StragglerModel] = None,
+        checkpointer=None,  # checkpoint.manager.CheckpointManager
+        grad_accum: int = 1,
+        mesh=None,
+        state_shardings=None,
+    ):
+        self.loss_fn = loss_fn
+        self.optimizer = optimizer
+        self.topology = topology
+        self.hier_config = hier_config
+        self.weights = jnp.asarray(data_sizes, jnp.float32)
+        self.batcher = batcher
+        self.cfg = runner_config
+        self.eval_fn = eval_fn
+        self.costs = costs
+        self.failures = failures
+        self.stragglers = stragglers
+        self.checkpointer = checkpointer
+        self.mesh = mesh
+
+        round_fn = build_hier_round(
+            loss_fn, optimizer, topology, hier_config, self.weights, grad_accum=grad_accum
+        )
+        if mesh is not None and state_shardings is not None:
+            self._round = jax.jit(round_fn, in_shardings=(state_shardings, None, None, None),
+                                  out_shardings=(state_shardings, None))
+        else:
+            self._round = jax.jit(round_fn)
+        self.history: List[RoundRecord] = []
+
+    # ------------------------------------------------------------------
+    def init(self, rng: jax.Array, params: PyTree) -> FedState:
+        return init_state(rng, params, self.optimizer, self.topology, self.hier_config)
+
+    def restore_or_init(self, rng: jax.Array, params: PyTree) -> tuple:
+        """(state, start_round). Resumes from the latest checkpoint if any."""
+        state = self.init(rng, params)
+        if self.checkpointer is not None:
+            restored = self.checkpointer.restore_latest(state)
+            if restored is not None:
+                state, meta = restored
+                if "batcher" in meta:
+                    self.batcher.load_state_dict(meta["batcher"])
+                if self.failures is not None and "failures" in meta:
+                    self.failures.load_state_dict(meta["failures"])
+                return state, int(meta.get("round", 0))
+        return state, 0
+
+    # ------------------------------------------------------------------
+    def _mask_for_round(self) -> Optional[np.ndarray]:
+        masks = []
+        if self.failures is not None:
+            masks.append(self.failures.step())
+        if self.stragglers is not None:
+            m, _ = self.stragglers.survivors(
+                self.hier_config.kappa1, None
+            )
+            masks.append(m)
+        return combine_masks(*masks)
+
+    def run(self, state: FedState, *, start_round: int = 0) -> FedState:
+        k1 = self.hier_config.kappa1
+        for r in range(start_round, self.cfg.num_rounds):
+            batches = self.batcher.next_batches(k1)
+            batches = jax.tree_util.tree_map(jnp.asarray, batches)
+            mask = self._mask_for_round()
+            mask_dev = None if mask is None else jnp.asarray(mask)
+            n_alive = int(mask.sum()) if mask is not None else self.topology.num_clients
+            state, metrics = self._round(state, batches, jnp.int32(r), mask_dev)
+            step = int(state.step)
+
+            sim_t = sim_e = 0.0
+            if self.costs is not None:
+                sim_t = cm.time_at_step(self.costs, k1, self.hier_config.kappa2, step)
+                sim_e = cm.energy_at_step(self.costs, k1, self.hier_config.kappa2, step)
+
+            acc = None
+            if self.eval_fn is not None and self.cfg.eval_every and (r + 1) % self.cfg.eval_every == 0:
+                # evaluate the cloud model = weighted mean of client models
+                from repro.core import aggregation
+
+                cloud = aggregation.weighted_mean(state.params, self.weights, mask_dev)
+                cloud0 = jax.tree_util.tree_map(lambda x: x[0], cloud)
+                acc = float(self.eval_fn(cloud0))
+
+            self.history.append(
+                RoundRecord(
+                    round=r,
+                    step=step,
+                    loss=float(metrics["loss"]),
+                    mask_alive=n_alive,
+                    sim_time_s=sim_t,
+                    sim_energy_j=sim_e,
+                    accuracy=acc,
+                )
+            )
+
+            if self.checkpointer is not None and self.cfg.checkpoint_every and (
+                r + 1
+            ) % self.cfg.checkpoint_every == 0:
+                meta = {"round": r + 1, "batcher": self.batcher.state_dict()}
+                if self.failures is not None:
+                    meta["failures"] = self.failures.state_dict()
+                self.checkpointer.save(int(state.step), state, meta)
+
+            if acc is not None and self.cfg.target_accuracy and acc >= self.cfg.target_accuracy:
+                break
+        return state
+
+    # ------------------------------------------------------------------
+    def records_to_dict(self) -> Dict[str, list]:
+        return {
+            "round": [h.round for h in self.history],
+            "step": [h.step for h in self.history],
+            "loss": [h.loss for h in self.history],
+            "accuracy": [h.accuracy for h in self.history],
+            "sim_time_s": [h.sim_time_s for h in self.history],
+            "sim_energy_j": [h.sim_energy_j for h in self.history],
+            "alive": [h.mask_alive for h in self.history],
+        }

@@ -1,0 +1,80 @@
+"""Topology bookkeeping: N clients / L edges / cloud <-> device mesh.
+
+Maps the paper's client-edge-cloud tree onto the production meshes:
+
+  single-pod (16,16) ("data","model"):
+      edge l  = a contiguous block of the data axis
+      client  = one data-axis row inside the block (TP over "model")
+  multi-pod (2,16,16) ("pod","data","model"):
+      cloud   = cross-pod (DCN)
+      edge    = a block of the data axis inside one pod (ICI)
+      client  = one ("pod","data") row
+
+The *federated axes* therefore are ("pod","data") flattened: clients are
+sharded over them; edges are contiguous groups of clients; pods are
+contiguous groups of edges. ``client_axis_sharding`` returns the
+PartitionSpec members for the leading client axis, and ``replica_groups``
+exposes the expected grouped-collective structure for HLO verification.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.hierfavg import FedTopology
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshFedPlan:
+    """Concrete client->device assignment for a given mesh."""
+
+    topology: FedTopology
+    fed_axes: Tuple[str, ...]  # mesh axes the client dim is sharded over
+    num_pods: int
+    edges_per_pod: int
+
+    @property
+    def num_clients(self) -> int:
+        return self.topology.num_clients
+
+    @property
+    def num_edges(self) -> int:
+        return self.topology.num_edges
+
+
+def plan_for_mesh(
+    mesh,
+    *,
+    edges_per_pod: int,
+    clients_per_edge: int,
+) -> MeshFedPlan:
+    """Build the topology for a mesh with ("pod",)? ("data","model") axes.
+
+    Total clients N = num_pods * edges_per_pod * clients_per_edge. The
+    client axis is sharded over ("pod","data") (or ("data",) single-pod);
+    N must be a multiple of the product of those axis sizes OR divide it
+    evenly (both directions shard cleanly under GSPMD).
+    """
+    axis_names = mesh.axis_names
+    num_pods = mesh.shape["pod"] if "pod" in axis_names else 1
+    fed_axes = tuple(a for a in ("pod", "data") if a in axis_names)
+    topo = FedTopology(num_edges=num_pods * edges_per_pod, clients_per_edge=clients_per_edge)
+    return MeshFedPlan(
+        topology=topo, fed_axes=fed_axes, num_pods=num_pods, edges_per_pod=edges_per_pod
+    )
+
+
+def edge_replica_groups(plan: MeshFedPlan) -> List[List[int]]:
+    """Client-index groups for edge aggregation (contiguous blocks)."""
+    c = plan.topology.clients_per_edge
+    return [list(range(l * c, (l + 1) * c)) for l in range(plan.num_edges)]
+
+
+def pod_of_edge(plan: MeshFedPlan, edge: int) -> int:
+    return edge // plan.edges_per_pod
+
+
+def client_weights(data_sizes: Sequence[float]) -> np.ndarray:
+    return np.asarray(data_sizes, np.float64)

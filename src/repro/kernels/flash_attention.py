@@ -1,0 +1,145 @@
+"""Flash attention (forward) as a Pallas TPU kernel.
+
+Why it's here: the 32k-prefill and 4k-train cells are *memory-roofline*
+bound in the naive form — XLA materializes (B,H,Sq,Sk) f32 score tensors
+(32k² × 4B = 4 GiB per head-pair). The flash form never writes scores to
+HBM: per (batch·head, q-block), it streams k/v blocks through VMEM with an
+online-softmax accumulator, so HBM traffic drops from O(S²) to O(S·d) —
+the standard memory-hierarchy adaptation of attention, here tiled for
+VMEM/MXU (block sizes multiples of 128 to align with the 128×128 systolic
+array and 8×128 vregs).
+
+Supports causal masking and sliding-window (local) attention; the
+window/causal structure additionally lets us *skip* fully-masked k-blocks
+(block-level early-out via the grid over kv implicitly bounded per q block).
+
+Grid: (B·H, Sq/bq, Sk/bk) with k innermost: accumulators live in VMEM
+scratch across the k dimension (rows revisit).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, scale: float, block_q: int, block_k: int, causal: bool, window: int, seq_k: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = k_pos < seq_k  # padding
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+
+    # block-level skip: if every element is masked, leave accumulators alone
+    def compute():
+        q = q_ref[0].astype(jnp.float32) * scale  # (bq, d)
+        k = k_ref[0].astype(jnp.float32)  # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (bq, bk)
+        s = jnp.where(mask, s, _NEG_INF)
+        m_prev = m_ref[...]  # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)  # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)  # (bq, 1)
+        l_new = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)  # (bk, d)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    if causal or window > 0:
+        # block-level early-out: skip k blocks fully outside this q block's
+        # causal/window band (the structural win of local attention)
+        q_lo = qi * block_q
+        q_hi = q_lo + block_q - 1
+        k_lo = ki * block_k
+        k_hi = k_lo + block_k - 1
+        visible = jnp.bool_(True)
+        if causal:
+            visible &= k_lo <= q_hi
+        if window > 0:
+            visible &= k_hi >= q_lo - window + 1
+
+        @pl.when(visible)
+        def _():
+            compute()
+    else:
+        compute()
+
+    @pl.when(ki == nk - 1)
+    def _fin():
+        l = l_ref[...]
+        safe = jnp.where(l > 0, l, 1.0)
+        o_ref[0] = (acc_ref[...] / safe).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """q,k,v: (BH, S, d) — callers fold batch×heads. Returns (BH, Sq, d).
+
+    Sq/Sk padded to block multiples internally; padding keys are masked,
+    padding queries produce zeros (l==0 guard) and are sliced off.
+    """
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    pq = (-sq) % block_q
+    pk = (-sk) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0))) if pq else q
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0))) if pk else k
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0))) if pk else v
+    scale = d ** -0.5
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel,
+            scale=scale, block_q=block_q, block_k=block_k,
+            causal=causal, window=window, seq_k=sk,
+        ),
+        grid=(bh, (sq + pq) // block_q, (sk + pk) // block_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq + pq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),  # acc
+            pltpu.VMEM((block_q, 1), jnp.float32),  # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),  # running sum l
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :sq]

@@ -1,0 +1,75 @@
+"""Pallas TPU kernel for the paper's aggregation operator.
+
+Fuses, per parameter tile, the whole EdgeAggregation/CloudAggregation body:
+  masked-weighted sum over each contiguous client group, safe divide,
+  broadcast back to the members — one HBM read + one HBM write of the
+  stacked parameters (the jnp reference does reshape/sum/where in ~4
+  passes). On the aggregation-bound cloud hop, this halves HBM traffic.
+
+TPU adaptation: the client axis N is tiny (16-32) and the parameter axis is
+huge, so we tile the *parameter* dim into lane-aligned blocks of 128·k and
+keep the whole client column resident in VMEM: block (N, bd). Group
+reduction happens in-register via a (G, C, bd) reshape — no cross-block
+communication, perfectly parallel grid. The weighted sum runs in f32 on the
+VPU regardless of the storage dtype.
+
+Grid: (ceil(D / bd),). VMEM per step: N·bd·(bytes) ≈ 32·512·4 = 64 KiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _agg_kernel(x_ref, w_ref, o_ref, *, num_groups: int):
+    """x: (N, bd) tile; w: (N, 1) masked weights; o: (N, bd)."""
+    x = x_ref[...].astype(jnp.float32)  # (N, bd)
+    w = w_ref[...].astype(jnp.float32)  # (N, 1)
+    n, bd = x.shape
+    c = n // num_groups
+    xg = x.reshape(num_groups, c, bd)
+    wg = w.reshape(num_groups, c, 1)
+    num = jnp.sum(xg * wg, axis=1, keepdims=True)  # (G,1,bd)
+    den = jnp.sum(wg, axis=1, keepdims=True)  # (G,1,1)
+    safe = jnp.where(den > 0, den, 1.0)
+    mean = num / safe
+    out = jnp.where(den > 0, jnp.broadcast_to(mean, xg.shape), xg)
+    o_ref[...] = out.reshape(n, bd).astype(o_ref.dtype)
+
+
+def grouped_mean_pallas(
+    x: jnp.ndarray,
+    weights: jnp.ndarray,
+    num_groups: int,
+    *,
+    block_d: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """x: (N, D) stacked flat params; weights: (N,) already masked.
+
+    Returns the per-group weighted mean broadcast back to members, (N, D).
+    D is padded to a block multiple internally.
+    """
+    n, d = x.shape
+    if n % num_groups:
+        raise ValueError(f"N={n} % groups={num_groups} != 0")
+    pad = (-d) % block_d
+    xp = jnp.pad(x, ((0, 0), (0, pad))) if pad else x
+    dp = d + pad
+    w2 = weights.reshape(n, 1).astype(jnp.float32)
+
+    out = pl.pallas_call(
+        functools.partial(_agg_kernel, num_groups=num_groups),
+        grid=(dp // block_d,),
+        in_specs=[
+            pl.BlockSpec((n, block_d), lambda i: (0, i)),
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n, block_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((n, dp), x.dtype),
+        interpret=interpret,
+    )(xp, w2)
+    return out[:, :d] if pad else out

@@ -1,0 +1,65 @@
+"""Public jit'd kernel API with a global interpret switch.
+
+On CPU (this container) kernels run with interpret=True — the kernel body
+executes in Python and is validated against ref.py. On TPU the same calls
+lower to Mosaic. ``use_interpret()`` defaults to True off-TPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import hier_aggregate as _ha
+from repro.kernels import quantize as _qz
+from repro.kernels import ref
+from repro.kernels import rglru_scan as _rg
+
+_FORCE_INTERPRET: Optional[bool] = None
+
+
+def set_interpret(value: Optional[bool]) -> None:
+    global _FORCE_INTERPRET
+    _FORCE_INTERPRET = value
+
+
+def use_interpret() -> bool:
+    if _FORCE_INTERPRET is not None:
+        return _FORCE_INTERPRET
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("num_groups", "block_d"))
+def _grouped_mean_jit(x, w, num_groups, block_d, interpret):
+    return _ha.grouped_mean_pallas(x, w, num_groups, block_d=block_d, interpret=interpret)
+
+
+def grouped_mean(x, weights, num_groups, *, block_d: int = 512):
+    return _ha.grouped_mean_pallas(
+        x, weights, num_groups, block_d=block_d, interpret=use_interpret()
+    )
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128, block_k=128):
+    """(BH, S, d) fused attention; falls back to ref for tiny heads."""
+    return _fa.flash_attention_pallas(
+        q, k, v, causal=causal, window=window, block_q=block_q, block_k=block_k,
+        interpret=use_interpret(),
+    )
+
+
+def rglru_scan(a, b, h0, *, block_d=128):
+    return _rg.rglru_scan_pallas(a, b, h0, block_d=block_d, interpret=use_interpret())
+
+
+def quantize_int8(x, *, qblock=256):
+    return _qz.quantize_pallas(x, qblock=qblock, interpret=use_interpret())
+
+
+def dequantize_int8(q, s, shape, dtype=jnp.float32):
+    return _qz.dequantize_pallas(q, s, shape, dtype, interpret=use_interpret())

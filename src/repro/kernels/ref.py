@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for every kernel — the correctness ground truth.
+
+Tests sweep shapes/dtypes and assert_allclose(kernel(interpret=True), ref).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def grouped_mean_ref(x: jnp.ndarray, weights: jnp.ndarray, num_groups: int) -> jnp.ndarray:
+    """(N, D) stacked params, (N,) masked weights -> per-group weighted mean
+    broadcast back. Groups with zero total weight keep their inputs."""
+    n, d = x.shape
+    c = n // num_groups
+    xg = x.reshape(num_groups, c, d).astype(jnp.float32)
+    wg = weights.reshape(num_groups, c, 1).astype(jnp.float32)
+    num = jnp.sum(xg * wg, axis=1, keepdims=True)
+    den = jnp.sum(wg, axis=1, keepdims=True)
+    mean = num / jnp.where(den > 0, den, 1.0)
+    out = jnp.where(den > 0, jnp.broadcast_to(mean, xg.shape), xg)
+    return out.reshape(n, d).astype(x.dtype)
+
+
+def attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+) -> jnp.ndarray:
+    """Naive softmax attention. q,k,v: (BH, S, d)."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    sq, sk = q.shape[1], k.shape[1]
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # rows with no visible keys (can happen for padded q) -> zeros
+    any_visible = jnp.any(mask, axis=-1)[None, :, None]
+    out = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+    return jnp.where(any_visible, out, 0.0).astype(q.dtype)
+
+
+def rglru_scan_ref(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray):
+    """Linear recurrence h_t = a_t*h_{t-1} + b_t via associative_scan.
+
+    a,b: (B,S,D); h0: (B,D). Returns (h (B,S,D) f32, hT (B,D) f32)."""
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    # fold h0 into the first step: h_1 = a_1*h0 + b_1
+    b0 = bf.at[:, 0].add(af[:, 0] * h0.astype(jnp.float32))
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (af, b0), axis=1)
+    return h, h[:, -1]
+
+
+def quantize_ref(x: jnp.ndarray, qblock: int = 256):
+    """Blockwise int8 absmax quantization. Returns (q (R,qb) int8, s (R,1) f32, shape)."""
+    shape = x.shape
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % qblock
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, qblock)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(blocks / safe), -127, 127).astype(jnp.int8)
+    return q, scale, shape
+
+
+def dequantize_ref(q: jnp.ndarray, s: jnp.ndarray, shape, dtype=jnp.float32) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * s).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape).astype(dtype)

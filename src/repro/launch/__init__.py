@@ -1,0 +1,5 @@
+from repro.launch import mesh, specs, steps
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.specs import input_specs
+
+__all__ = ["mesh", "specs", "steps", "make_host_mesh", "make_production_mesh", "input_specs"]

@@ -1,0 +1,172 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) on the production
+meshes, record memory/cost/roofline artifacts.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --mesh both
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k --mesh single
+
+Artifacts: one JSON per cell under --out (default artifacts/dryrun/),
+consumed by benchmarks/roofline_report.py and EXPERIMENTS.md. Cells with an
+existing artifact are skipped unless --force. The 512 placeholder-device
+XLA flag above MUST precede every other import (jax locks device count on
+first init) — do not move it.
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+
+from repro.analysis import hlo as hlo_mod
+from repro.analysis import roofline as rl
+from repro.configs.base import ShapeSpec
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.dist.sharding import set_hint_mesh, topology_for
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_aggregation_cells, build_cell
+
+
+def mem_stats_dict(ma) -> dict:
+    fields = (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "alias_size_in_bytes", "generated_code_size_in_bytes",
+    )
+    return {f: getattr(ma, f, None) for f in fields}
+
+
+def run_cell(cfg, shape: ShapeSpec, mesh, mesh_name: str, *, phases: bool) -> dict:
+    chips = mesh.devices.size
+    t0 = time.time()
+    set_hint_mesh(mesh)
+    try:
+        cell = build_cell(cfg, shape, mesh)
+        lowered = cell.fn.lower(*cell.arg_structs)
+        compiled = lowered.compile()
+    finally:
+        set_hint_mesh(None)
+    compile_s = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    summary = hlo_mod.analyze(txt, mesh, conditional_weight=0.0)
+    summary_full = hlo_mod.analyze(txt, mesh, conditional_weight=1.0)
+
+    mf = rl.model_flops(cfg, shape)
+    local_terms = rl.from_summary(
+        f"{cfg.name}/{shape.name}/{mesh_name}", summary, chips, model_flops_global=mf
+    )
+
+    out = {
+        "arch": cfg.name,
+        "shape": shape.name,
+        "kind": shape.kind,
+        "mesh": mesh_name,
+        "chips": chips,
+        "compile_s": compile_s,
+        "memory": mem_stats_dict(ma),
+        "cost_analysis": {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes accessed": float(ca.get("bytes accessed", 0.0)),
+        },
+        "hlo": {
+            "flops_per_device": summary.flops,
+            "hbm_bytes_per_device": summary.hbm_bytes,
+            "coll_bytes_per_device": summary.collective_bytes_per_device(),
+            "coll_breakdown": summary.collective_breakdown(),
+            "coll_breakdown_with_agg": summary_full.collective_breakdown(),
+            "unresolved_whiles": summary.unresolved_whiles,
+        },
+        "meta": cell.meta,
+        "roofline": local_terms.to_dict(),
+    }
+
+    if phases and shape.kind == "train":
+        set_hint_mesh(mesh)
+        try:
+            edge_cell, cloud_cell = build_aggregation_cells(cfg, mesh)
+            e_txt = edge_cell.fn.lower(*edge_cell.arg_structs).compile().as_text()
+            c_txt = cloud_cell.fn.lower(*cloud_cell.arg_structs).compile().as_text()
+        finally:
+            set_hint_mesh(None)
+        e_sum = hlo_mod.analyze(e_txt, mesh)
+        c_sum = hlo_mod.analyze(c_txt, mesh)
+        e_terms = rl.from_summary("edge", e_sum, chips)
+        c_terms = rl.from_summary("cloud", c_sum, chips)
+        k1, k2 = cfg.fed.kappa1, cfg.fed.kappa2
+        amort = rl.hierfavg_step_terms(
+            f"{cfg.name}/{shape.name}/{mesh_name}/amortized",
+            local_terms, e_terms, c_terms, k1, k2,
+        )
+        out["phases"] = {
+            "edge": e_terms.to_dict(),
+            "cloud": c_terms.to_dict(),
+            "amortized_step": amort.to_dict(),
+            "kappa1": k1,
+            "kappa2": k2,
+        }
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-phases", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = list(ARCH_IDS) if args.arch == "all" else args.arch.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = [s for s in cfg.input_shapes if args.shape in ("all", s.name)]
+        for skipped in cfg.skipped_shapes:
+            if args.shape in ("all", skipped):
+                print(f"[skip] {arch} × {skipped}: full attention — noted in DESIGN.md")
+        for multi in meshes:
+            mesh_name = "multi_pod_2x16x16" if multi else "single_pod_16x16"
+            mesh = make_production_mesh(multi_pod=multi)
+            for shape in shapes:
+                tag = f"{arch}__{shape.name}__{mesh_name}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path) and not args.force:
+                    print(f"[cached] {tag}")
+                    continue
+                print(f"[lower+compile] {tag} ...", flush=True)
+                try:
+                    rec = run_cell(cfg, shape, mesh, mesh_name,
+                                   phases=(not args.no_phases) and not multi)
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                    r = rec["roofline"]
+                    print(
+                        f"  OK {rec['compile_s']:.1f}s compile | "
+                        f"mem/dev: arg {rec['memory']['argument_size_in_bytes']/1e9:.2f}GB "
+                        f"temp {rec['memory']['temp_size_in_bytes']/1e9:.2f}GB | "
+                        f"compute {r['compute_s']*1e3:.2f}ms memory {r['memory_s']*1e3:.2f}ms "
+                        f"collective {r['collective_s']*1e3:.2f}ms -> {r['dominant']}",
+                        flush=True,
+                    )
+                except Exception as e:
+                    failures.append((tag, repr(e)))
+                    print(f"  FAIL: {e}\n{traceback.format_exc()}", flush=True)
+
+    print(f"\n{'='*60}\ndry-run complete; {len(failures)} failures")
+    for tag, err in failures:
+        print(f"  FAIL {tag}: {err[:200]}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Production meshes.
+
+Functions (not module constants) so importing never touches jax device
+state. Single-pod: (16,16) ("data","model") = 256 chips. Multi-pod:
+(2,16,16) ("pod","data","model") = 512 chips; the "pod" axis is the
+cross-DCN dimension HierFAVG's cloud hop amortizes.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False, devices: Optional[Sequence] = None):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    if devices is None:
+        devices = jax.devices()[:n]
+    if len(devices) != n:
+        raise ValueError(f"need {n} devices for mesh {shape}, got {len(devices)}")
+    return jax.make_mesh(
+        shape, axes, devices=devices,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def make_host_mesh(shape: Sequence[int], axes: Sequence[str]):
+    """Small mesh over host devices (tests / probes)."""
+    n = int(np.prod(shape))
+    devs = jax.devices()[:n]
+    if len(devs) != n:
+        raise ValueError(f"need {n} devices, have {len(jax.devices())}")
+    return jax.make_mesh(
+        tuple(shape), tuple(axes), devices=devs,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )

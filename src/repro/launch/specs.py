@@ -1,0 +1,111 @@
+"""ShapeDtypeStruct stand-ins for every model input — no device allocation.
+
+``input_specs(cfg, shape, mesh)`` returns the argument structs the step
+function is lowered with; shardings are attached NamedShardings. Stub
+frontends ([vlm]/[audio]) get float embedding inputs in place of tokens,
+per the assignment.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.dist.sharding import ShardingRules, fed_rules, serve_rules, topology_for
+
+PyTree = Any
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype, sharding=sharding)
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeSpec, mesh) -> Tuple[PyTree, PyTree, int]:
+    """Returns (batch_structs, batch_shardings, grad_accum).
+
+    Batch leaves: (accum, N, micro, S[, d]) when accum > 1, else (N, b, S[, d]).
+    """
+    rules = fed_rules(cfg, mesh)
+    topo = topology_for(cfg, mesh)
+    n = topo.num_clients
+    if shape.global_batch % n:
+        raise ValueError(f"global_batch {shape.global_batch} % N={n} != 0")
+    b = shape.global_batch // n
+    micro = min(cfg.microbatch, b)
+    accum = b // micro
+    has_accum = accum > 1
+    lead = (accum, n, micro) if has_accum else (n, b)
+
+    if cfg.embed_inputs:
+        in_shape = lead + (shape.seq_len,)
+        in_dtype = jnp.int32
+    else:
+        in_shape = lead + (shape.seq_len, cfg.d_model)
+        in_dtype = jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+    tgt_shape = lead + (shape.seq_len,)
+
+    in_spec = rules.batch_spec(in_shape, has_accum=has_accum)
+    tgt_spec = rules.batch_spec(tgt_shape, has_accum=has_accum)
+    batch = {
+        "inputs": _sds(in_shape, in_dtype, NamedSharding(mesh, in_spec)),
+        "targets": _sds(tgt_shape, jnp.int32, NamedSharding(mesh, tgt_spec)),
+    }
+    shardings = {
+        "inputs": NamedSharding(mesh, in_spec),
+        "targets": NamedSharding(mesh, tgt_spec),
+    }
+    return batch, shardings, accum
+
+
+def prefill_request_specs(cfg: ArchConfig, shape: ShapeSpec, mesh) -> Tuple[PyTree, PyTree]:
+    rules = serve_rules(cfg, mesh)
+    if cfg.embed_inputs:
+        s = (shape.global_batch, shape.seq_len)
+        dt = jnp.int32
+    else:
+        s = (shape.global_batch, shape.seq_len, cfg.d_model)
+        dt = jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+    spec = rules.request_spec(s)
+    sh = NamedSharding(mesh, spec)
+    return _sds(s, dt, sh), sh
+
+
+def decode_request_specs(cfg: ArchConfig, shape: ShapeSpec, mesh) -> Tuple[PyTree, PyTree]:
+    """(tokens, position) structs for one decode step."""
+    rules = serve_rules(cfg, mesh)
+    B = shape.global_batch
+    if cfg.embed_inputs:
+        tok_shape: Tuple[int, ...] = (B,)
+        dt = jnp.int32
+    else:
+        tok_shape = (B, cfg.d_model)
+        dt = jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+    tok_spec = rules.request_spec(tok_shape)
+    pos_spec = rules.request_spec((B,))
+    structs = {
+        "tokens": _sds(tok_shape, dt, NamedSharding(mesh, tok_spec)),
+        "position": _sds((B,), jnp.int32, NamedSharding(mesh, pos_spec)),
+    }
+    shardings = {
+        "tokens": NamedSharding(mesh, tok_spec),
+        "position": NamedSharding(mesh, pos_spec),
+    }
+    return structs, shardings
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec, mesh) -> PyTree:
+    """The assignment-mandated entry point: structs for every model input
+    of this cell (training batch or serving request)."""
+    if shape.kind == "train":
+        batch, _, _ = train_batch_specs(cfg, shape, mesh)
+        return batch
+    if shape.kind == "prefill":
+        req, _ = prefill_request_specs(cfg, shape, mesh)
+        return {"inputs": req}
+    if shape.kind == "decode":
+        structs, _ = decode_request_specs(cfg, shape, mesh)
+        return structs
+    raise ValueError(shape.kind)

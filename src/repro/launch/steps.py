@@ -1,0 +1,223 @@
+"""Cell builders: (arch × shape × mesh) -> jitted step + argument structs.
+
+Every cell the dry-run lowers comes from here, and the real drivers
+(train.py / serve.py) use the same builders with concrete arrays — the
+dry-run proves exactly what production would run.
+
+train cell  : HierFAVG train_step (local update + conditional two-level
+              aggregation) over stacked client params.
+prefill cell: full-prompt forward building decode caches (serving).
+decode cell : one-token serve_step against a seq_len-deep KV cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.core.hierfavg import HierFAVGConfig, build_train_step, init_state
+from repro.dist.sharding import ShardingRules, fed_rules, serve_rules, topology_for
+from repro.launch import specs as specs_mod
+from repro.models import transformer
+from repro.optim import sgd
+
+PyTree = Any
+
+
+class Cell(NamedTuple):
+    fn: Any  # jitted callable, ready to .lower(*arg_structs)
+    arg_structs: Tuple
+    arg_shardings: Tuple
+    meta: dict
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def _state_shardings(state_struct, params_shardings, mesh):
+    """FedState shardings: params by rules; opt-state subtrees that mirror
+    the params tree inherit its shardings; everything else replicated."""
+    rep = _replicated(mesh)
+    params_def = jax.tree_util.tree_structure(params_shardings)
+
+    def map_like(node):
+        try:
+            if jax.tree_util.tree_structure(node) == params_def:
+                return params_shardings
+        except Exception:
+            pass
+        if isinstance(node, (tuple, list)) and not hasattr(node, "shape"):
+            mapped = [map_like(c) for c in node]
+            return type(node)(*mapped) if hasattr(node, "_fields") else type(node)(mapped)
+        if isinstance(node, dict):
+            return {k: map_like(v) for k, v in node.items()}
+        return jax.tree_util.tree_map(lambda _: rep, node)
+
+    opt_sh = map_like(state_struct.opt_state)
+    anchor_sh = None if state_struct.anchor is None else params_shardings
+    return type(state_struct)(
+        step=rep, params=params_shardings, opt_state=opt_sh, rng=rep, anchor=anchor_sh
+    )
+
+
+def _attach(structs: PyTree, shardings: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh), structs, shardings
+    )
+
+
+# ---------------------------------------------------------------------------
+# Train cell
+# ---------------------------------------------------------------------------
+
+def build_train_cell(
+    cfg: ArchConfig,
+    shape: ShapeSpec,
+    mesh,
+    *,
+    lr: float = 1e-3,
+    donate: bool = True,
+) -> Cell:
+    rules = fed_rules(cfg, mesh)
+    topo = topology_for(cfg, mesh)
+    n = topo.num_clients
+    hier = HierFAVGConfig(kappa1=cfg.fed.kappa1, kappa2=cfg.fed.kappa2)
+    weights = jnp.ones((n,), jnp.float32)
+    loss_fn = transformer.make_loss_fn(cfg)
+    opt = sgd(lr)
+
+    batch_structs, batch_shardings, accum = specs_mod.train_batch_specs(cfg, shape, mesh)
+    step_fn = build_train_step(loss_fn, opt, topo, hier, weights, grad_accum=accum)
+
+    def init_fn():
+        params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+        return init_state(jax.random.PRNGKey(1), params, opt, topo, hier)
+
+    state_struct = jax.eval_shape(init_fn)
+    params_sh = rules.params_shardings(state_struct.params, scanned=cfg.scan_layers)
+    state_sh = _state_shardings(state_struct, params_sh, mesh)
+    state_struct = _attach(state_struct, state_sh)
+
+    fn = jax.jit(
+        lambda state, batch: step_fn(state, batch),
+        donate_argnums=(0,) if donate else (),
+    )
+    return Cell(
+        fn=fn,
+        arg_structs=(state_struct, batch_structs),
+        arg_shardings=(state_sh, batch_shardings),
+        meta={
+            "kind": "train",
+            "num_clients": n,
+            "grad_accum": accum,
+            "kappa1": hier.kappa1,
+            "kappa2": hier.kappa2,
+            "layout": cfg.fed.layout,
+        },
+    )
+
+
+# ---------------------------------------------------------------------------
+# Serving cells
+# ---------------------------------------------------------------------------
+
+def _serve_params(cfg: ArchConfig, mesh) -> Tuple[PyTree, PyTree]:
+    rules = serve_rules(cfg, mesh)
+    p_struct = jax.eval_shape(lambda: transformer.init_params(jax.random.PRNGKey(0), cfg))
+    p_sh = rules.params_shardings(p_struct, scanned=cfg.scan_layers)
+    return _attach(p_struct, p_sh), p_sh
+
+
+def build_prefill_cell(cfg: ArchConfig, shape: ShapeSpec, mesh) -> Cell:
+    params_struct, params_sh = _serve_params(cfg, mesh)
+    req_struct, req_sh = specs_mod.prefill_request_specs(cfg, shape, mesh)
+    max_len = shape.seq_len
+
+    fn = jax.jit(lambda params, inputs: transformer.prefill(params, cfg, inputs, max_len))
+    return Cell(
+        fn=fn,
+        arg_structs=(params_struct, req_struct),
+        arg_shardings=(params_sh, req_sh),
+        meta={"kind": "prefill", "max_len": max_len},
+    )
+
+
+def build_decode_cell(cfg: ArchConfig, shape: ShapeSpec, mesh, *, donate: bool = True) -> Cell:
+    rules = serve_rules(cfg, mesh)
+    params_struct, params_sh = _serve_params(cfg, mesh)
+    req_structs, req_sh = specs_mod.decode_request_specs(cfg, shape, mesh)
+    B, L = shape.global_batch, shape.seq_len
+
+    cache_struct = jax.eval_shape(
+        lambda p: transformer.init_decode_caches(p, cfg, B, L), params_struct
+    )
+    cache_sh = rules.caches_shardings(cache_struct, scanned=cfg.scan_layers)
+    cache_struct = _attach(cache_struct, cache_sh)
+
+    def serve_step(params, caches, tokens, position):
+        return transformer.decode_step(params, cfg, caches, tokens, position)
+
+    fn = jax.jit(serve_step, donate_argnums=(1,) if donate else ())
+    return Cell(
+        fn=fn,
+        arg_structs=(params_struct, cache_struct, req_structs["tokens"], req_structs["position"]),
+        arg_shardings=(params_sh, cache_sh, req_sh["tokens"], req_sh["position"]),
+        meta={"kind": "decode", "cache_len": L},
+    )
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeSpec, mesh) -> Cell:
+    if shape.kind == "train":
+        return build_train_cell(cfg, shape, mesh)
+    if shape.kind == "prefill":
+        return build_prefill_cell(cfg, shape, mesh)
+    if shape.kind == "decode":
+        return build_decode_cell(cfg, shape, mesh)
+    raise ValueError(shape.kind)
+
+
+# ---------------------------------------------------------------------------
+# Aggregation-phase cells (for per-phase roofline attribution)
+# ---------------------------------------------------------------------------
+
+def build_aggregation_cells(cfg: ArchConfig, mesh) -> Tuple[Cell, Cell]:
+    """(edge_sync, cloud_sync) as standalone jittables over the fed state's
+    stacked params — lowered separately so the roofline can attribute
+    collective bytes to the two HierFAVG hops exactly."""
+    from repro.core.hierfavg import build_cloud_sync, build_edge_sync
+
+    rules = fed_rules(cfg, mesh)
+    topo = topology_for(cfg, mesh)
+    n = topo.num_clients
+    hier = HierFAVGConfig(kappa1=cfg.fed.kappa1, kappa2=cfg.fed.kappa2)
+    weights = jnp.ones((n,), jnp.float32)
+
+    def init_fn():
+        params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+        return init_state(jax.random.PRNGKey(1), params, sgd(1e-3), topo, hier)
+
+    state_struct = jax.eval_shape(init_fn)
+    params_sh = rules.params_shardings(state_struct.params, scanned=cfg.scan_layers)
+    state_sh = _state_shardings(state_struct, params_sh, mesh)
+    state_struct = _attach(state_struct, state_sh)
+
+    edge = build_edge_sync(topo, hier, weights)
+    cloud = build_cloud_sync(topo, hier, weights)
+    edge_cell = Cell(
+        fn=jax.jit(lambda s: edge(s)),
+        arg_structs=(state_struct,),
+        arg_shardings=(state_sh,),
+        meta={"kind": "edge_sync", "num_clients": n},
+    )
+    cloud_cell = Cell(
+        fn=jax.jit(lambda s: cloud(s)),
+        arg_structs=(state_struct,),
+        arg_shardings=(state_sh,),
+        meta={"kind": "cloud_sync", "num_clients": n},
+    )
+    return edge_cell, cloud_cell

@@ -1,0 +1,3 @@
+from repro.models import cnn, layers, recurrent, transformer
+
+__all__ = ["cnn", "layers", "recurrent", "transformer"]

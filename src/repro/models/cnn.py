@@ -1,0 +1,131 @@
+"""The paper's experiment models (Section IV-A).
+
+MNIST CNN: "the CNN with 21,840 trainable parameters as in [2]" — the
+classic conv(1->10,5x5) -> pool -> conv(10->20,5x5) -> pool -> fc(320->50)
+-> fc(50->10) network: 260 + 5,020 + 16,050 + 510 = 21,840. Exact.
+
+CIFAR CNN: "a CNN with 3 convolutional blocks, 5,852,170 parameters". The
+paper doesn't print the layer list; we use a standard 3-block VGG-style net
+(32,32 / 64,64 / 128,128 + 2 FC) and document the parameter count — the cost
+model uses the paper's 5,852,170 constant independently (cost_model.py), so
+Table I/II reproduction does not depend on matching the count exactly.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def _conv_init(rng, shape, dtype=jnp.float32):
+    fan_in = shape[0] * shape[1] * shape[2]
+    return jax.random.normal(rng, shape, dtype) * (2.0 / fan_in) ** 0.5
+
+
+def _fc_init(rng, shape, dtype=jnp.float32):
+    return jax.random.normal(rng, shape, dtype) * (2.0 / shape[0]) ** 0.5
+
+
+def conv2d(x, w, b):
+    """x: (B,H,W,C), w: (kh,kw,Cin,Cout). SAME-valid per layer spec below."""
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="VALID", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    return y + b
+
+
+def conv2d_same(x, w, b):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    return y + b
+
+
+def maxpool2(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+# ---------------------------------------------------------------------------
+# MNIST CNN — exactly 21,840 params
+# ---------------------------------------------------------------------------
+
+def init_mnist_cnn(rng) -> PyTree:
+    k = jax.random.split(rng, 4)
+    return {
+        "c1w": _conv_init(k[0], (5, 5, 1, 10)),
+        "c1b": jnp.zeros((10,)),
+        "c2w": _conv_init(k[1], (5, 5, 10, 20)),
+        "c2b": jnp.zeros((20,)),
+        "f1w": _fc_init(k[2], (320, 50)),
+        "f1b": jnp.zeros((50,)),
+        "f2w": _fc_init(k[3], (50, 10)),
+        "f2b": jnp.zeros((10,)),
+    }
+
+
+def mnist_cnn_apply(params: PyTree, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, 28, 28, 1) -> logits (B, 10)."""
+    x = jax.nn.relu(maxpool2(conv2d(x, params["c1w"], params["c1b"])))  # 24->12
+    x = jax.nn.relu(maxpool2(conv2d(x, params["c2w"], params["c2b"])))  # 8->4
+    x = x.reshape(x.shape[0], -1)  # 4*4*20 = 320
+    x = jax.nn.relu(x @ params["f1w"] + params["f1b"])
+    return x @ params["f2w"] + params["f2b"]
+
+
+# ---------------------------------------------------------------------------
+# CIFAR CNN — 3 conv blocks, ~5.85M params
+# ---------------------------------------------------------------------------
+
+def init_cifar_cnn(rng) -> PyTree:
+    k = jax.random.split(rng, 9)
+    return {
+        "c1aw": _conv_init(k[0], (3, 3, 3, 32)), "c1ab": jnp.zeros((32,)),
+        "c1bw": _conv_init(k[1], (3, 3, 32, 32)), "c1bb": jnp.zeros((32,)),
+        "c2aw": _conv_init(k[2], (3, 3, 32, 64)), "c2ab": jnp.zeros((64,)),
+        "c2bw": _conv_init(k[3], (3, 3, 64, 64)), "c2bb": jnp.zeros((64,)),
+        "c3aw": _conv_init(k[4], (3, 3, 64, 128)), "c3ab": jnp.zeros((128,)),
+        "c3bw": _conv_init(k[5], (3, 3, 128, 128)), "c3bb": jnp.zeros((128,)),
+        "f1w": _fc_init(k[6], (2048, 2048)), "f1b": jnp.zeros((2048,)),
+        "f2w": _fc_init(k[7], (2048, 512)), "f2b": jnp.zeros((512,)),
+        "f3w": _fc_init(k[8], (512, 10)), "f3b": jnp.zeros((10,)),
+    }
+
+
+def cifar_cnn_apply(params: PyTree, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, 32, 32, 3) -> logits (B, 10)."""
+    x = jax.nn.relu(conv2d_same(x, params["c1aw"], params["c1ab"]))
+    x = maxpool2(jax.nn.relu(conv2d_same(x, params["c1bw"], params["c1bb"])))  # 16
+    x = jax.nn.relu(conv2d_same(x, params["c2aw"], params["c2ab"]))
+    x = maxpool2(jax.nn.relu(conv2d_same(x, params["c2bw"], params["c2bb"])))  # 8
+    x = jax.nn.relu(conv2d_same(x, params["c3aw"], params["c3ab"]))
+    x = maxpool2(jax.nn.relu(conv2d_same(x, params["c3bw"], params["c3bb"])))  # 4
+    x = x.reshape(x.shape[0], -1)  # 128*4*4 = 2048
+    x = jax.nn.relu(x @ params["f1w"] + params["f1b"])
+    x = jax.nn.relu(x @ params["f2w"] + params["f2b"])
+    return x @ params["f3w"] + params["f3b"]
+
+
+def classification_loss(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    tgt = jnp.take_along_axis(logits.astype(jnp.float32), labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - tgt)
+
+
+def accuracy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+
+
+def make_cnn_loss_fn(apply_fn):
+    """HierFAVG-compatible loss: batch = {"inputs": images, "targets": labels}."""
+
+    def loss_fn(params, batch, rng):
+        return classification_loss(apply_fn(params, batch["inputs"]), batch["targets"])
+
+    return loss_fn
+
+
+def count_params(tree: PyTree) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(tree))

@@ -1,0 +1,583 @@
+"""Transformer layer zoo (pure JAX, pytree params).
+
+Covers everything the assigned architectures need: RMSNorm, RoPE, GQA/MQA
+attention (full-causal and sliding-window, train and cached-decode paths),
+DeepSeek-V3 MLA (with the absorbed low-rank decode path), SwiGLU MLP, and a
+sort-based fixed-capacity MoE (with optional shared experts and Arctic's
+parallel dense residual).
+
+Conventions:
+  * init_* take (rng, cfg[, ...]) and return a params dict of jnp arrays.
+  * apply functions are pure; attention takes explicit position indices.
+  * dtypes: params in cfg.param_dtype; matmuls accumulate in f32 via
+    ``preferred_element_type`` where it matters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+def _hint(x, *members):
+    from repro.dist.sharding import hint  # local import: avoid cycle at package init
+
+    return hint(x, *members)
+
+
+def _hint_groups() -> int:
+    """MoE token groups = data-axis size of the hint mesh (1 off-mesh)."""
+    from repro.dist.sharding import hint_data_groups
+
+    return hint_data_groups()
+
+
+def _ep_mode(num_experts: int) -> str:
+    from repro.dist.sharding import moe_ep_mode
+
+    return moe_ep_mode(num_experts)
+
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Norms / embeddings / RoPE
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype) -> jnp.ndarray:
+    return jnp.ones((d,), dtype)
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def _init_dense(rng, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0]
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(rng, shape, jnp.float32) * std).astype(dtype)
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+def init_attention(rng, cfg: ArchConfig) -> Dict[str, jnp.ndarray]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    dt = cfg.dtype()
+    k = jax.random.split(rng, 4)
+    return {
+        "wq": _init_dense(k[0], (d, cfg.num_heads * hd), dt),
+        "wk": _init_dense(k[1], (d, cfg.num_kv_heads * hd), dt),
+        "wv": _init_dense(k[2], (d, cfg.num_kv_heads * hd), dt),
+        "wo": _init_dense(k[3], (cfg.num_heads * hd, d), dt),
+    }
+
+
+def _split_heads(x, n_heads, hd):
+    return x.reshape(*x.shape[:-1], n_heads, hd)
+
+
+def _repeat_kv(kv: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """(B,S,Hkv,hd) -> (B,S,Hkv*groups,hd)."""
+    if groups == 1:
+        return kv
+    return jnp.repeat(kv, groups, axis=2)
+
+
+def causal_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    q_positions: jnp.ndarray,
+    kv_positions: jnp.ndarray,
+    window: int = 0,
+    kv_valid: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Masked softmax attention, GQA-native. q: (B,Sq,H,hd); k/v:
+    (B,Sk,Hkv,hd) with H a multiple of Hkv. The query heads are folded into
+    groups and contracted against the UN-replicated K/V — materializing the
+    repeated KV (naive `jnp.repeat`) would multiply KV HBM traffic by
+    H/Hkv (48× for MQA granite-20b), measured as the dominant memory term
+    in the first dry-run probe.
+
+    Mask: kv_pos <= q_pos, and (q_pos - kv_pos) < window when window > 0.
+    kv_valid: optional (B, Sk) validity mask for cache slots.
+    """
+    B, Sq, H, hd = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    scale = hd ** -0.5
+    q5 = q.reshape(B, Sq, Hkv, g, hd)
+    logits = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", q5.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale  # (B,Hkv,g,Sq,Sk)
+    mask = kv_positions[:, None, :] <= q_positions[:, :, None]  # (B,Sq,Sk)
+    if window > 0:
+        mask &= (q_positions[:, :, None] - kv_positions[:, None, :]) < window
+    if kv_valid is not None:
+        mask &= kv_valid[:, None, :].astype(bool)
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, v.shape[-1])  # MLA: v head dim != qk head dim
+
+
+def chunked_causal_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    q_positions: jnp.ndarray,
+    kv_positions: jnp.ndarray,
+    window: int = 0,
+    kv_valid: Optional[jnp.ndarray] = None,
+    chunk_q: int = 1024,
+    chunk_k: int = 1024,
+) -> jnp.ndarray:
+    """Flash-style double-scan attention: O(S·chunk) activation memory.
+
+    Numerically identical to ``causal_attention`` (online-softmax, f32
+    accumulators); used for long sequences where the naive (B,H,Sq,Sk)
+    score tensor would not fit. The scan form also keeps HLO size flat in
+    S — essential when lowering 32k/500k cells for 512 devices. On real
+    TPU the Pallas kernel (kernels.flash_attention) replaces this with
+    block-skipping; at the XLA level all (q,k) chunk pairs are computed
+    and masked (documented 2× causal FLOPs overhead, see EXPERIMENTS.md).
+    """
+    B, Sq, H, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    hd_v = v.shape[-1]  # MLA: value head dim (128) differs from qk (192)
+    g = H // Hkv
+    cq, ck = min(chunk_q, Sq), min(chunk_k, Sk)
+    if Sq % cq or Sk % ck:
+        raise ValueError(f"seq lens ({Sq},{Sk}) must divide chunks ({cq},{ck})")
+    nq, nk = Sq // cq, Sk // ck
+    scale = hd ** -0.5
+    aligned = Sq == Sk  # self-attention with aligned chunk grids
+
+    kc = jnp.moveaxis(k.reshape(B, nk, ck, Hkv, hd), 1, 0)  # (nk,B,ck,Hkv,hd)
+    kp = jnp.moveaxis(kv_positions.reshape(B, nk, ck), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nk, ck, Hkv, hd_v), 1, 0)
+    vd = None if kv_valid is None else jnp.moveaxis(kv_valid.reshape(B, nk, ck), 1, 0)
+
+    def k_step(qb, qpos_b, carry, ki):
+        acc, m, l = carry
+        if vd is None:
+            kb, kpos_b, vb = ki
+            valid_b = None
+        else:
+            kb, kpos_b, vb, valid_b = ki
+        s = jnp.einsum(
+            "bqhgd,bkhd->bhgqk",
+            qb.astype(jnp.float32) * scale,
+            kb.astype(jnp.float32),
+        )  # (B,Hkv,g,cq,ck)
+        mask = kpos_b[:, None, None, None, :] <= qpos_b[:, None, None, :, None]
+        if window > 0:
+            mask &= (
+                qpos_b[:, None, None, :, None] - kpos_b[:, None, None, None, :]
+            ) < window
+        if valid_b is not None:
+            mask &= valid_b[:, None, None, None, :].astype(bool)
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # p in the value dtype: halves score-tensor HBM traffic; the pv
+        # einsum still accumulates in f32 (MXU-style bf16×bf16→f32)
+        p = jnp.exp(s - m_new[..., None]).astype(v.dtype)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p.astype(jnp.float32), axis=-1)
+        pv = jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, vb, preferred_element_type=jnp.float32
+        )
+        acc_new = acc * alpha[..., None] + pv
+        return acc_new, m_new, l_new
+
+    outs = []
+    # q chunks as a python loop: per-chunk STATIC k bounds skip the fully
+    # masked blocks (strictly-upper causal triangle; beyond-window history)
+    # instead of computing and masking them — the structural win the Pallas
+    # kernel realizes on TPU, here at the XLA level
+    for iq in range(nq):
+        q_lo = iq * cq
+        q_hi = q_lo + cq - 1
+        qb = q[:, q_lo : q_lo + cq].reshape(B, cq, Hkv, g, hd)
+        qpos_b = q_positions[:, q_lo : q_lo + cq]
+        if aligned:
+            k_end = min(iq + 1, nk)  # causal: no keys beyond this q chunk
+            k_start = max(0, (q_lo - window + 1) // ck) if window > 0 else 0
+        else:
+            k_start, k_end = 0, nk
+
+        acc0 = jnp.zeros((B, Hkv, g, cq, hd_v), jnp.float32)
+        m0 = jnp.full((B, Hkv, g, cq), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, g, cq), jnp.float32)
+        sl = lambda t: t[k_start:k_end]
+        xs = (
+            (sl(kc), sl(kp), sl(vc))
+            if vd is None
+            else (sl(kc), sl(kp), sl(vc), sl(vd))
+        )
+        # remat the k-step: without it, scan saves every (cq,ck) probability
+        # tensor for the backward pass — re-materializing the full S² scores
+        # in HBM and defeating the flash structure (measured 20× memory-term
+        # inflation on granite-3-2b train_4k; see EXPERIMENTS.md §Perf)
+        body = jax.checkpoint(lambda c, ki, _qb=qb, _qp=qpos_b: (k_step(_qb, _qp, c, ki), None))
+        (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), xs)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B,Hkv,g,cq,hd)
+        outs.append(out)
+
+    out = jnp.stack(outs, axis=1)  # (B,nq,Hkv,g,cq,hd_v)
+    out = jnp.transpose(out, (0, 1, 4, 2, 3, 5)).reshape(B, Sq, H, hd_v)
+    return out.astype(v.dtype)
+
+
+def _full_attention(q, k, v, cfg: ArchConfig, positions, *, window: int = 0):
+    """Dispatch: naive for short sequences, chunked for long."""
+    S = q.shape[1]
+    if cfg.attn_chunk and S > cfg.attn_chunk:
+        return chunked_causal_attention(
+            q, k, v,
+            q_positions=positions, kv_positions=positions,
+            window=window, chunk_q=cfg.attn_chunk, chunk_k=cfg.attn_chunk,
+        )
+    return causal_attention(q, k, v, q_positions=positions, kv_positions=positions, window=window)
+
+
+def attention_apply(
+    params: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,
+    cfg: ArchConfig,
+    positions: jnp.ndarray,
+    *,
+    window: int = 0,
+) -> jnp.ndarray:
+    """Training / prefill self-attention over the full sequence."""
+    B, S, d = x.shape
+    hd = cfg.resolved_head_dim
+    q = _split_heads(x @ params["wq"], cfg.num_heads, hd)
+    k = _split_heads(x @ params["wk"], cfg.num_kv_heads, hd)
+    v = _split_heads(x @ params["wv"], cfg.num_kv_heads, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    out = _full_attention(q, k, v, cfg, positions, window=window)
+    return out.reshape(B, S, -1) @ params["wo"]
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> Dict[str, jnp.ndarray]:
+    hd = cfg.resolved_head_dim
+    cache_len = min(max_len, cfg.window) if cfg.window > 0 else max_len
+    return {
+        "k": jnp.zeros((batch, cache_len, cfg.num_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, cache_len, cfg.num_kv_heads, hd), dtype),
+        # absolute position stored in each slot (-1 = empty), for ring buffers
+        "pos": jnp.full((batch, cache_len), -1, jnp.int32),
+    }
+
+
+def attention_decode(
+    params: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,
+    cache: Dict[str, jnp.ndarray],
+    cfg: ArchConfig,
+    position: jnp.ndarray,
+    *,
+    window: int = 0,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Single-token decode with a (ring-buffered, if windowed) KV cache.
+
+    x: (B, 1, d); position: (B,) absolute position of the new token.
+    """
+    B, _, d = x.shape
+    hd = cfg.resolved_head_dim
+    cache_len = cache["k"].shape[1]
+    q = _split_heads(x @ params["wq"], cfg.num_heads, hd)
+    k_new = _split_heads(x @ params["wk"], cfg.num_kv_heads, hd)
+    v_new = _split_heads(x @ params["wv"], cfg.num_kv_heads, hd)
+    q = apply_rope(q, position[:, None], cfg.rope_theta)
+    k_new = apply_rope(k_new, position[:, None], cfg.rope_theta)
+
+    slot = jnp.mod(position, cache_len)  # ring for windowed, linear otherwise
+    oh = jax.nn.one_hot(slot, cache_len, dtype=cache["k"].dtype)  # (B, L)
+    k = cache["k"] * (1 - oh)[..., None, None] + oh[..., None, None] * k_new
+    v = cache["v"] * (1 - oh)[..., None, None] + oh[..., None, None] * v_new
+    pos_buf = jnp.where(oh.astype(bool), position[:, None], cache["pos"])
+
+    out = causal_attention(
+        q,
+        k,
+        v,
+        q_positions=position[:, None],
+        kv_positions=pos_buf,
+        window=window,
+        kv_valid=pos_buf >= 0,
+    )
+    y = out.reshape(B, 1, -1) @ params["wo"]
+    return y, {"k": k, "v": v, "pos": pos_buf}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def init_mla(rng, cfg: ArchConfig) -> Dict[str, jnp.ndarray]:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.num_heads
+    dt = cfg.dtype()
+    k = jax.random.split(rng, 6)
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq_a": _init_dense(k[0], (d, m.q_lora_rank), dt),
+        "q_norm": init_rmsnorm(m.q_lora_rank, dt),
+        "wq_b": _init_dense(k[1], (m.q_lora_rank, H * qk_head), dt),
+        "wkv_a": _init_dense(k[2], (d, m.kv_lora_rank + m.qk_rope_head_dim), dt),
+        "kv_norm": init_rmsnorm(m.kv_lora_rank, dt),
+        "wkv_b": _init_dense(k[3], (m.kv_lora_rank, H * (m.qk_nope_head_dim + m.v_head_dim)), dt),
+        "wo": _init_dense(k[4], (H * m.v_head_dim, d), dt),
+    }
+
+
+def mla_apply(params, x, cfg: ArchConfig, positions) -> jnp.ndarray:
+    """Full-sequence MLA (training / prefill)."""
+    m = cfg.mla
+    B, S, d = x.shape
+    H = cfg.num_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+
+    q = rmsnorm(x @ params["wq_a"], params["q_norm"], cfg.norm_eps) @ params["wq_b"]
+    q = q.reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = x @ params["wkv_a"]  # (B,S, kv_lora + dr)
+    c_kv, k_rope = kv[..., : m.kv_lora_rank], kv[..., m.kv_lora_rank :]
+    c_kv = rmsnorm(c_kv, params["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[..., None, :], positions, cfg.rope_theta)  # (B,S,1,dr)
+
+    kvu = (c_kv @ params["wkv_b"]).reshape(B, S, H, dn + dv)
+    k_nope, v = kvu[..., :dn], kvu[..., dn:]
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, H, dr))], axis=-1)
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = _full_attention(qf, k, v, cfg, positions)
+    return out.reshape(B, S, H * dv) @ params["wo"]
+
+
+def init_mla_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> Dict[str, jnp.ndarray]:
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
+        "pos": jnp.full((batch, max_len), -1, jnp.int32),
+    }
+
+
+def mla_decode(params, x, cache, cfg: ArchConfig, position) -> Tuple[jnp.ndarray, Dict]:
+    """Absorbed-matrix MLA decode: attend in the compressed latent space.
+
+    Scores use q_nope projected through W_ukv^T (absorb), so the cache stores
+    only (kv_lora_rank + rope) per token — the paper's KV-compression win.
+    """
+    m = cfg.mla
+    B, _, d = x.shape
+    H = cfg.num_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    L = m.kv_lora_rank
+
+    q = rmsnorm(x @ params["wq_a"], params["q_norm"], cfg.norm_eps) @ params["wq_b"]
+    q = q.reshape(B, 1, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, position[:, None], cfg.rope_theta)
+
+    kv = x @ params["wkv_a"]
+    c_new = rmsnorm(kv[..., :L], params["kv_norm"], cfg.norm_eps)  # (B,1,L)
+    kr_new = apply_rope(kv[..., None, L:], position[:, None], cfg.rope_theta)[:, :, 0]  # (B,1,dr)
+
+    max_len = cache["c_kv"].shape[1]
+    oh = jax.nn.one_hot(position, max_len, dtype=c_new.dtype)  # (B, S)
+    c_kv = cache["c_kv"] * (1 - oh)[..., None] + oh[..., None] * c_new
+    k_rope = cache["k_rope"] * (1 - oh)[..., None] + oh[..., None] * kr_new
+    pos_buf = jnp.where(oh.astype(bool), position[:, None], cache["pos"])
+
+    # absorb: W_ukv columns for k_nope: (L, H, dn); for v: (L, H, dv)
+    wkv_b = params["wkv_b"].reshape(L, H, dn + dv)
+    w_uk, w_uv = wkv_b[..., :dn], wkv_b[..., dn:]
+    q_lat = jnp.einsum("bqhn,lhn->bqhl", q_nope.astype(jnp.float32), w_uk.astype(jnp.float32))
+    scores = jnp.einsum("bqhl,bsl->bhqs", q_lat, c_kv.astype(jnp.float32))
+    scores += jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(jnp.float32), k_rope.astype(jnp.float32))
+    scores *= (dn + dr) ** -0.5
+    valid = (pos_buf >= 0) & (pos_buf <= position[:, None])
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqs,bsl->bqhl", probs, c_kv.astype(jnp.float32))  # latent context
+    out = jnp.einsum("bqhl,lhv->bqhv", ctx, w_uv.astype(jnp.float32)).astype(x.dtype)
+    y = out.reshape(B, 1, H * dv) @ params["wo"]
+    return y, {"c_kv": c_kv, "k_rope": k_rope, "pos": pos_buf}
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(rng, d: int, ff: int, dtype) -> Dict[str, jnp.ndarray]:
+    k = jax.random.split(rng, 3)
+    return {
+        "w1": _init_dense(k[0], (d, ff), dtype),
+        "w3": _init_dense(k[1], (d, ff), dtype),
+        "w2": _init_dense(k[2], (ff, d), dtype),
+    }
+
+
+def mlp_apply(params, x):
+    h = jax.nn.silu(x @ params["w1"]) * (x @ params["w3"])
+    return h @ params["w2"]
+
+
+# ---------------------------------------------------------------------------
+# MoE: sort-based fixed-capacity dispatch
+# ---------------------------------------------------------------------------
+
+def init_moe(rng, cfg: ArchConfig) -> Dict[str, jnp.ndarray]:
+    m = cfg.moe
+    d = cfg.d_model
+    dt = cfg.dtype()
+    k = jax.random.split(rng, 6)
+    params = {
+        "router": _init_dense(k[0], (d, m.num_experts), jnp.float32, scale=d ** -0.5),
+        "w1": _init_dense(k[1], (m.num_experts, d, m.d_ff_expert), dt),
+        "w3": _init_dense(k[2], (m.num_experts, d, m.d_ff_expert), dt),
+        "w2": _init_dense(k[3], (m.num_experts, m.d_ff_expert, d), dt),
+    }
+    if m.num_shared_experts:
+        params["shared"] = init_mlp(k[4], d, m.num_shared_experts * m.d_ff_expert, dt)
+    if m.dense_residual:
+        params["dense"] = init_mlp(k[5], d, cfg.d_ff, dt)
+    return params
+
+
+def moe_capacity(num_tokens: int, cfg: ArchConfig) -> int:
+    m = cfg.moe
+    cap = int(num_tokens * m.top_k * m.capacity_factor / m.num_experts) + 1
+    return max(8, -(-cap // 8) * 8)  # round up to multiple of 8, floor 8
+
+
+def moe_apply(params, x: jnp.ndarray, cfg: ArchConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (T, d) flattened tokens. Returns (y, aux_loss).
+
+    Group-local sort-based dispatch into fixed-capacity buffers (the
+    production EP pattern): tokens are split into G groups aligned with the
+    data shards, so routing/sort/scatter are *local* per shard (batched over
+    the sharded group axis — no cross-device indexing). The only
+    communication is the (G,E,Cg,d) → (E,G·Cg,d) layout change into
+    expert-major order — exactly one all-to-all each way — after which the
+    batched expert SwiGLU is fully local (experts sharded over data×model,
+    matching the expert-weight sharding). A global-scatter formulation left
+    GSPMD replicating the dispatch (measured 1200→2900s collective on
+    deepseek-v3 train_4k; see EXPERIMENTS.md §Perf).
+
+    Capacity is enforced per group (standard: it also statically bounds the
+    all-to-all payload). Overflow assignments are dropped.
+    """
+    m = cfg.moe
+    T, d = x.shape
+    E, K = m.num_experts, m.top_k
+    G = _hint_groups()
+    if T % G:
+        G = 1
+    Tg = T // G
+    C = moe_capacity(Tg, cfg)
+
+    xg = _hint(x.reshape(G, Tg, d), "data", None, None)
+    logits = jnp.einsum(
+        "gtd,de->gte", xg.astype(jnp.float32), params["router"]
+    )  # (G,Tg,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, K)  # (G,Tg,K)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+
+    def dispatch_group(xg_, ids_):
+        """Per-group (local) rank + scatter. xg_: (Tg,d); ids_: (Tg,K)."""
+        flat_e = ids_.reshape(-1)  # (Tg*K,)
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_e = flat_e[order]
+        counts = jnp.bincount(flat_e, length=E)
+        starts = jnp.cumsum(counts) - counts
+        ranks_sorted = jnp.arange(Tg * K) - starts[sorted_e]
+        ranks = jnp.zeros_like(ranks_sorted).at[order].set(ranks_sorted)
+        token_idx = jnp.repeat(jnp.arange(Tg), K)
+        buf = jnp.zeros((E, C, d), xg_.dtype)
+        buf = buf.at[flat_e, ranks].set(xg_[token_idx], mode="drop")
+        return buf, ranks, flat_e
+
+    buf_g, ranks_g, flat_e_g = jax.vmap(dispatch_group)(xg, ids)  # (G,E,C,d)
+    mode = _ep_mode(E)
+
+    if mode == "none":
+        buf = jnp.moveaxis(buf_g, 0, 1).reshape(E, G * C, d)
+    else:
+        # explicit shard_map all-to-all: GSPMD cannot reshard the G→E
+        # layout change (it replicates — 19.7 GB all-gathers ×915 measured
+        # on deepseek-v3 train_4k; EXPERIMENTS.md §Perf)
+        from repro.dist.sharding import moe_dispatch_exchange
+
+        buf = moe_dispatch_exchange(buf_g, mode)
+
+    h = jnp.einsum("ecd,edf->ecf", buf, params["w1"], preferred_element_type=jnp.float32)
+    g = jnp.einsum("ecd,edf->ecf", buf, params["w3"], preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(h) * g).astype(x.dtype)
+    # storage-dtype output: when w2's contraction dim is FSDP-sharded the
+    # result is psum'ed over the data axis — bf16 halves that payload (the
+    # MXU accumulates in f32 regardless on the TPU target)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["w2"])
+    out_buf = out_buf.astype(x.dtype)
+
+    if mode == "none":
+        out_g = jnp.moveaxis(out_buf.reshape(E, G, C, d), 1, 0)  # (G,E,C,d)
+
+        def combine_group(out_, flat_e_, ranks_, gates_):
+            gathered = out_.at[flat_e_, ranks_].get(mode="fill", fill_value=0.0)
+            return jnp.sum(
+                gathered.reshape(Tg, K, d).astype(jnp.float32) * gates_[..., None], axis=1
+            )
+
+        yg = jax.vmap(combine_group)(out_g, flat_e_g, ranks_g, gates)  # (G,Tg,d)
+    else:
+        from repro.dist.sharding import moe_combine_exchange
+
+        yg = moe_combine_exchange(out_buf, flat_e_g, ranks_g, gates, mode, C)
+    y = yg.reshape(T, d).astype(jnp.float32)
+
+    if "shared" in params:
+        y = y + mlp_apply(params["shared"], x).astype(jnp.float32)
+    if "dense" in params:
+        y = y + mlp_apply(params["dense"], x).astype(jnp.float32)
+
+    # Switch-style load-balance aux loss
+    frac_tokens = jnp.mean(jax.nn.one_hot(ids, E, dtype=jnp.float32), axis=(0, 1, 2)) * K
+    mean_probs = jnp.mean(probs, axis=(0, 1))
+    aux = m.router_aux_weight * E * jnp.sum(frac_tokens * mean_probs)
+    return y.astype(x.dtype), aux

@@ -1,0 +1,336 @@
+"""Recurrent / SSM blocks: RG-LRU (RecurrentGemma), mLSTM and sLSTM (xLSTM).
+
+All three expose:
+    init_<name>(rng, cfg)                  -> params
+    <name>_apply(params, x, cfg)           -> y           (full sequence)
+    <name>_init_state(cfg, batch, dtype)   -> state       (O(1) decode state)
+    <name>_step(params, x_t, state, cfg)   -> (y_t, state)
+
+RG-LRU uses an associative scan (sub-quadratic, O(S) work / O(log S) depth);
+mLSTM uses the stabilized *chunkwise* form (exact, scan over chunks with a
+matrix-state carry — validated against the naive recurrent oracle in tests);
+sLSTM is inherently sequential (hidden-state-dependent gates) and uses
+lax.scan over time. These are the blocks that make `long_500k` decoding O(1)
+per token for the ssm/hybrid architectures.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import _init_dense
+
+_RGLRU_C = 8.0
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin / RecurrentGemma temporal-mixing block)
+# ---------------------------------------------------------------------------
+
+def init_rglru(rng, cfg: ArchConfig) -> Dict[str, jnp.ndarray]:
+    d, dr = cfg.d_model, cfg.d_rnn_resolved
+    dt = cfg.dtype()
+    k = jax.random.split(rng, 7)
+    # Lambda init so that a = exp(-c*softplus(L)*sigma(..)) sits in (0.9, 0.999)
+    lam = jax.random.uniform(k[0], (dr,), jnp.float32, 0.3, 0.8)
+    return {
+        "w_x": _init_dense(k[1], (d, dr), dt),
+        "w_gate": _init_dense(k[2], (d, dr), dt),
+        "conv": _init_dense(k[3], (4, dr), dt, scale=0.5),
+        "a_r": _init_dense(k[4], (dr,), jnp.float32, scale=1.0),
+        "a_i": _init_dense(k[5], (dr,), jnp.float32, scale=1.0),
+        "lambda": lam,
+        "w_out": _init_dense(k[6], (dr, d), dt),
+    }
+
+
+def _rglru_coeffs(params, v: jnp.ndarray):
+    """Per-step recurrence coefficients. v: (..., dr) conv output.
+
+    log a_t = -c * softplus(Lambda) * sigmoid(a_r * v_t)
+    b_t     = sqrt(1 - a_t^2) * sigmoid(a_i * v_t) * v_t
+    """
+    vf = v.astype(jnp.float32)
+    r = jax.nn.sigmoid(params["a_r"] * vf)
+    i = jax.nn.sigmoid(params["a_i"] * vf)
+    log_a = -_RGLRU_C * jax.nn.softplus(params["lambda"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 0.0, 1.0)) * i * vf
+    return a, b
+
+
+def _conv1d_causal(x: jnp.ndarray, kernel: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv, width 4. x: (B,S,dr), kernel: (4,dr)."""
+    pad = jnp.pad(x, ((0, 0), (3, 0), (0, 0)))
+    return sum(pad[:, i : i + x.shape[1]] * kernel[i] for i in range(4))
+
+
+def rglru_apply(params, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """Full-sequence RG-LRU mixing block. x: (B,S,d) -> (B,S,d)."""
+    gate = jax.nn.gelu((x @ params["w_gate"]).astype(jnp.float32))
+    v = _conv1d_causal(x @ params["w_x"], params["conv"])
+    a, b = _rglru_coeffs(params, v)
+
+    def combine(l, r):
+        a1, b1 = l
+        a2, b2 = r
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (h * gate).astype(x.dtype) @ params["w_out"]
+    return y
+
+
+def rglru_init_state(cfg: ArchConfig, batch: int, dtype) -> Dict[str, jnp.ndarray]:
+    dr = cfg.d_rnn_resolved
+    return {
+        "h": jnp.zeros((batch, dr), jnp.float32),
+        "conv": jnp.zeros((batch, 3, dr), dtype),  # last 3 pre-conv inputs
+    }
+
+
+def rglru_step(params, x_t: jnp.ndarray, state, cfg: ArchConfig):
+    """x_t: (B,1,d) -> (y_t, state)."""
+    xt = x_t[:, 0]
+    gate = jax.nn.gelu((xt @ params["w_gate"]).astype(jnp.float32))
+    u = xt @ params["w_x"]  # (B, dr)
+    window = jnp.concatenate([state["conv"], u[:, None]], axis=1)  # (B,4,dr)
+    v = sum(window[:, i] * params["conv"][i] for i in range(4))
+    a, b = _rglru_coeffs(params, v)
+    h = a * state["h"] + b
+    y = ((h * gate).astype(x_t.dtype) @ params["w_out"])[:, None]
+    return y, {"h": h, "conv": window[:, 1:]}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix-memory cell), stabilized chunkwise form
+# ---------------------------------------------------------------------------
+
+def init_mlstm(rng, cfg: ArchConfig) -> Dict[str, jnp.ndarray]:
+    d = cfg.d_model
+    up = 2 * d
+    dt = cfg.dtype()
+    k = jax.random.split(rng, 8)
+    return {
+        "w_up": _init_dense(k[0], (d, up), dt),
+        "w_gate": _init_dense(k[1], (d, up), dt),
+        "wq": _init_dense(k[2], (up, up), dt),
+        "wk": _init_dense(k[3], (up, up), dt),
+        "wv": _init_dense(k[4], (up, up), dt),
+        "a_i": _init_dense(k[5], (up,), jnp.float32, scale=1.0),
+        "a_f": _init_dense(k[6], (up,), jnp.float32, scale=1.0) ,
+        "w_down": _init_dense(k[7], (up, d), dt),
+    }
+
+
+def _mlstm_qkv_gates(params, x, cfg):
+    """x: (B,S,d) -> q,k,v: (B,S,H,dh); i,f gate logits: (B,S,H)."""
+    H = max(cfg.num_heads, 1)
+    u = x @ params["w_up"]  # (B,S,up)
+    B, S, up = u.shape
+    dh = up // H
+
+    def heads(t):
+        return t.reshape(B, S, H, dh)
+
+    q = heads(u @ params["wq"]) * dh ** -0.5
+    k = heads(u @ params["wk"])
+    v = heads(u @ params["wv"])
+    uf = u.astype(jnp.float32)
+    i_logit = (uf * params["a_i"]).reshape(B, S, H, dh).mean(-1)
+    f_logit = (uf * params["a_f"]).reshape(B, S, H, dh).mean(-1) + 1.0  # bias toward remembering
+    gate = jax.nn.silu((x @ params["w_gate"]).astype(jnp.float32))
+    return q, k, v, i_logit, f_logit, gate
+
+
+def _mlstm_chunk(q, k, v, i_log, f_log, carry):
+    """One chunk of the stabilized chunkwise mLSTM.
+
+    q,k,v: (B,H,W,dh); i_log,f_log: (B,H,W); carry: (C,n,m) with
+    C: (B,H,dh,dh), n: (B,H,dh), m: (B,H). Exact (tested vs recurrent oracle).
+    """
+    C, n, m = carry
+    logf_cum = jnp.cumsum(jax.nn.log_sigmoid(f_log), axis=-1)  # F_t
+    # running max term: m_t = F_t + max(m_carry, cummax_j(i_j - F_j))
+    s = i_log - logf_cum
+    run = jnp.maximum(jax.lax.cummax(s, axis=s.ndim - 1), m[..., None])
+    m_t = logf_cum + run
+    # inter-chunk (carry) contribution, decayed by F_t
+    w_carry = jnp.exp(m[..., None] + logf_cum - m_t)  # (B,H,W)
+    num_inter = jnp.einsum("bhwk,bhkv->bhwv", q, C) * w_carry[..., None]
+    den_inter = jnp.einsum("bhwk,bhk->bhw", q, n) * w_carry
+    # intra-chunk quadratic term with decay matrix D
+    # D[t,j] = exp(F_t - F_j + i_j - m_t), j <= t
+    expo = logf_cum[..., :, None] - logf_cum[..., None, :] + i_log[..., None, :] - m_t[..., :, None]
+    W = q.shape[-2]
+    mask = jnp.tril(jnp.ones((W, W), bool))
+    D = jnp.where(mask, jnp.exp(expo), 0.0)  # (B,H,W,W)
+    scores = jnp.einsum("bhtk,bhjk->bhtj", q, k) * D
+    num_intra = jnp.einsum("bhtj,bhjv->bhtv", scores, v)
+    den_intra = jnp.sum(scores, axis=-1)
+    num = num_inter + num_intra
+    den = den_inter + den_intra
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+    # carry update to end of chunk
+    F_W = logf_cum[..., -1]
+    m_new = F_W + run[..., -1]
+    decay_old = jnp.exp(m + F_W - m_new)
+    w_new = jnp.exp(F_W[..., None] - logf_cum + i_log - m_new[..., None])  # (B,H,W)
+    C_new = C * decay_old[..., None, None] + jnp.einsum("bhwk,bhwv,bhw->bhkv", k, v, w_new)
+    n_new = n * decay_old[..., None] + jnp.einsum("bhwk,bhw->bhk", k, w_new)
+    return h, (C_new, n_new, m_new)
+
+
+def mlstm_apply(params, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """Full-sequence mLSTM block, chunk-scanned. x: (B,S,d)."""
+    H = max(cfg.num_heads, 1)
+    B, S0, d = x.shape
+    q, k, v, i_log, f_log, gate = _mlstm_qkv_gates(params, x, cfg)
+    dh = q.shape[-1]
+    W = min(cfg.mlstm_chunk, S0)
+    pad = (-S0) % W
+    if pad:  # causal: end-padding never influences real positions
+        pad4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(t, pad4) for t in (q, k, v))
+        i_log = jnp.pad(i_log, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        f_log = jnp.pad(f_log, ((0, 0), (0, pad), (0, 0)))
+    S = S0 + pad
+    nchunks = S // W
+
+    def to_chunks(t, has_dh):
+        # (B,S,H,*) -> (nchunks, B, H, W, *)
+        t = t.reshape(B, nchunks, W, H, -1) if has_dh else t.reshape(B, nchunks, W, H)
+        order = (1, 0, 3, 2, 4) if has_dh else (1, 0, 3, 2)
+        return jnp.transpose(t, order)
+
+    qc, kc, vc = (to_chunks(t.astype(jnp.float32), True) for t in (q, k, v))
+    ic, fc = to_chunks(i_log, False), to_chunks(f_log, False)
+
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+
+    def body(carry, chunk):
+        qq, kk, vv, ii, ff = chunk
+        h, carry = _mlstm_chunk(qq, kk, vv, ii, ff, carry)
+        return carry, h
+
+    _, hs = jax.lax.scan(body, (C0, n0, m0), (qc, kc, vc, ic, fc))
+    # (nchunks, B, H, W, dh) -> (B, S, up)
+    h = jnp.transpose(hs, (1, 0, 3, 2, 4)).reshape(B, S, H * dh)[:, :S0]
+    y = (h * gate).astype(x.dtype) @ params["w_down"]
+    return y
+
+
+def mlstm_init_state(cfg: ArchConfig, batch: int, dtype) -> Dict[str, jnp.ndarray]:
+    H = max(cfg.num_heads, 1)
+    dh = 2 * cfg.d_model // H
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+def mlstm_step(params, x_t: jnp.ndarray, state, cfg: ArchConfig):
+    """Recurrent single-token step. x_t: (B,1,d)."""
+    q, k, v, i_log, f_log, gate = _mlstm_qkv_gates(params, x_t, cfg)
+    q, k, v = (t[:, 0].astype(jnp.float32) for t in (q, k, v))  # (B,H,dh)
+    i_log, f_log, gate = i_log[:, 0], f_log[:, 0], gate[:, 0]
+    logf = jax.nn.log_sigmoid(f_log)
+    m_new = jnp.maximum(logf + state["m"], i_log)
+    f_p = jnp.exp(logf + state["m"] - m_new)
+    i_p = jnp.exp(i_log - m_new)
+    C = state["C"] * f_p[..., None, None] + i_p[..., None, None] * k[..., :, None] * v[..., None, :]
+    n = state["n"] * f_p[..., None] + i_p[..., None] * k
+    num = jnp.einsum("bhk,bhkv->bhv", q, C)
+    den = jnp.einsum("bhk,bhk->bh", q, n)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    B = x_t.shape[0]
+    y = ((h.reshape(B, -1) * gate).astype(x_t.dtype) @ params["w_down"])[:, None]
+    return y, {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM scalar-memory cell with hidden-dependent gates)
+# ---------------------------------------------------------------------------
+
+def init_slstm(rng, cfg: ArchConfig) -> Dict[str, jnp.ndarray]:
+    d = cfg.d_model
+    H = max(cfg.num_heads, 1)
+    dh = d // H
+    dt = cfg.dtype()
+    k = jax.random.split(rng, 10)
+    return {
+        "w_i": _init_dense(k[0], (d, d), dt),
+        "w_f": _init_dense(k[1], (d, d), dt),
+        "w_z": _init_dense(k[2], (d, d), dt),
+        "w_o": _init_dense(k[3], (d, d), dt),
+        "r_i": _init_dense(k[4], (H, dh, dh), jnp.float32),
+        "r_f": _init_dense(k[5], (H, dh, dh), jnp.float32),
+        "r_z": _init_dense(k[6], (H, dh, dh), jnp.float32),
+        "r_o": _init_dense(k[7], (H, dh, dh), jnp.float32),
+        "b": jnp.concatenate(
+            [jnp.zeros((d,)), jnp.ones((d,)), jnp.zeros((2 * d,))]
+        ).astype(jnp.float32),  # i, f(+1), z, o biases
+        "w_out": _init_dense(k[8], (d, d), dt),
+    }
+
+
+def slstm_init_state(cfg: ArchConfig, batch: int, dtype) -> Dict[str, jnp.ndarray]:
+    d = cfg.d_model
+    H = max(cfg.num_heads, 1)
+    dh = d // H
+    z = lambda: jnp.zeros((batch, H, dh), jnp.float32)
+    return {"h": z(), "c": z(), "n": z() + 1e-6, "m": z()}
+
+
+def _slstm_cell(params, pre, state, H, dh):
+    """pre: (B, 4d) input projections [i,f,z,o]; state: dict of (B,H,dh)."""
+    B = pre.shape[0]
+    h_prev = state["h"]
+    rec = lambda r: jnp.einsum("bhk,hkj->bhj", h_prev, r)
+    pre = pre.reshape(B, 4, H, dh)
+    i_t = pre[:, 0] + rec(params["r_i"])
+    f_t = pre[:, 1] + rec(params["r_f"])
+    z_t = jnp.tanh(pre[:, 2] + rec(params["r_z"]))
+    o_t = jax.nn.sigmoid(pre[:, 3] + rec(params["r_o"]))
+    m_new = jnp.maximum(f_t + state["m"], i_t)
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(f_t + state["m"] - m_new)
+    c = f_p * state["c"] + i_p * z_t
+    n = f_p * state["n"] + i_p
+    h = o_t * c / jnp.maximum(n, 1e-6)
+    return h, {"h": h, "c": c, "n": n, "m": m_new}
+
+
+def slstm_apply(params, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """Sequential scan over time (no parallel form exists — gates depend on h)."""
+    B, S, d = x.shape
+    H = max(cfg.num_heads, 1)
+    dh = d // H
+    w = jnp.concatenate([params["w_i"], params["w_f"], params["w_z"], params["w_o"]], axis=1)
+    pre_all = (x @ w).astype(jnp.float32) + params["b"]  # (B,S,4d)
+    state = slstm_init_state(cfg, B, x.dtype)
+
+    def body(st, pre_t):
+        h, st = _slstm_cell(params, pre_t, st, H, dh)
+        return st, h
+
+    _, hs = jax.lax.scan(body, state, jnp.swapaxes(pre_all, 0, 1))
+    h = jnp.swapaxes(hs, 0, 1).reshape(B, S, d)
+    return h.astype(x.dtype) @ params["w_out"]
+
+
+def slstm_step(params, x_t: jnp.ndarray, state, cfg: ArchConfig):
+    B, _, d = x_t.shape
+    H = max(cfg.num_heads, 1)
+    dh = d // H
+    w = jnp.concatenate([params["w_i"], params["w_f"], params["w_z"], params["w_o"]], axis=1)
+    pre = (x_t[:, 0] @ w).astype(jnp.float32) + params["b"]
+    h, state = _slstm_cell(params, pre, state, H, dh)
+    y = (h.reshape(B, d).astype(x_t.dtype) @ params["w_out"])[:, None]
+    return y, state

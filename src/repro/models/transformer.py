@@ -1,0 +1,421 @@
+"""Decoder stack: pattern-cycled blocks, scanned superblocks, remat,
+full train/prefill/decode paths, and the LM loss.
+
+The stack is organized as ``num_superblocks`` repetitions of
+``cfg.block_pattern`` (plus an unscanned tail for remainders, e.g.
+recurrentgemma's 38 = 12x(rec,rec,attn) + 2). Superblock parameters are
+stacked on a leading axis and the stack runs under ``jax.lax.scan`` —
+compile-time and HLO size stay flat in depth, which matters when lowering
+61-layer models for 512 devices. ``cfg.remat`` wraps the superblock in
+``jax.checkpoint`` for activation recomputation.
+
+Cross-entropy is computed as logsumexp - target_logit on sharded logits
+(vocab sharded over the `model` axis), never materializing a one-hot.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers, recurrent
+
+PyTree = Any
+
+ATTN_KINDS = ("attn", "local_attn")
+
+
+# ---------------------------------------------------------------------------
+# Single block
+# ---------------------------------------------------------------------------
+
+def init_block(rng, cfg: ArchConfig, kind: str) -> Dict[str, PyTree]:
+    d, dt = cfg.d_model, cfg.dtype()
+    k = jax.random.split(rng, 4)
+    p: Dict[str, PyTree] = {"norm1": layers.init_rmsnorm(d, dt)}
+    if kind in ATTN_KINDS:
+        p["attn"] = layers.init_mla(k[0], cfg) if cfg.mla else layers.init_attention(k[0], cfg)
+        if cfg.moe is not None:
+            p["norm2"] = layers.init_rmsnorm(d, dt)
+            p["moe"] = layers.init_moe(k[1], cfg)
+        elif cfg.d_ff > 0:
+            p["norm2"] = layers.init_rmsnorm(d, dt)
+            p["mlp"] = layers.init_mlp(k[1], d, cfg.d_ff, dt)
+    elif kind == "rglru":
+        p["rnn"] = recurrent.init_rglru(k[0], cfg)
+        if cfg.d_ff > 0:
+            p["norm2"] = layers.init_rmsnorm(d, dt)
+            p["mlp"] = layers.init_mlp(k[1], d, cfg.d_ff, dt)
+    elif kind == "mlstm":
+        p["cell"] = recurrent.init_mlstm(k[0], cfg)
+    elif kind == "slstm":
+        p["cell"] = recurrent.init_slstm(k[0], cfg)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def block_apply(params, x, cfg: ArchConfig, kind: str, positions) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence block. Returns (x, moe_aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = layers.rmsnorm(x, params["norm1"], cfg.norm_eps)
+    if kind in ATTN_KINDS:
+        window = cfg.window if kind == "local_attn" else 0
+        if cfg.mla:
+            y = layers.mla_apply(params["attn"], h, cfg, positions)
+        else:
+            y = layers.attention_apply(params["attn"], h, cfg, positions, window=window)
+        x = x + y
+        if "moe" in params:
+            h2 = layers.rmsnorm(x, params["norm2"], cfg.norm_eps)
+            B, S, d = h2.shape
+            y2, aux = layers.moe_apply(params["moe"], h2.reshape(B * S, d), cfg)
+            x = x + y2.reshape(B, S, d)
+        elif "mlp" in params:
+            x = x + layers.mlp_apply(params["mlp"], layers.rmsnorm(x, params["norm2"], cfg.norm_eps))
+    elif kind == "rglru":
+        x = x + recurrent.rglru_apply(params["rnn"], h, cfg)
+        if "mlp" in params:
+            x = x + layers.mlp_apply(params["mlp"], layers.rmsnorm(x, params["norm2"], cfg.norm_eps))
+    elif kind == "mlstm":
+        x = x + recurrent.mlstm_apply(params["cell"], h, cfg)
+    elif kind == "slstm":
+        x = x + recurrent.slstm_apply(params["cell"], h, cfg)
+    return x, aux
+
+
+def block_init_cache(cfg: ArchConfig, kind: str, batch: int, max_len: int, dtype) -> PyTree:
+    if kind in ATTN_KINDS:
+        if cfg.mla:
+            return layers.init_mla_cache(cfg, batch, max_len, dtype)
+        window = cfg.window if kind == "local_attn" else 0
+        eff = min(max_len, window) if window else max_len
+        return layers.init_kv_cache(cfg, batch, eff if window else max_len, dtype)
+    if kind == "rglru":
+        return recurrent.rglru_init_state(cfg, batch, dtype)
+    if kind == "mlstm":
+        return recurrent.mlstm_init_state(cfg, batch, dtype)
+    if kind == "slstm":
+        return recurrent.slstm_init_state(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def block_decode(params, x, cache, cfg: ArchConfig, kind: str, position) -> Tuple[jnp.ndarray, PyTree]:
+    h = layers.rmsnorm(x, params["norm1"], cfg.norm_eps)
+    if kind in ATTN_KINDS:
+        window = cfg.window if kind == "local_attn" else 0
+        if cfg.mla:
+            y, cache = layers.mla_decode(params["attn"], h, cache, cfg, position)
+        else:
+            y, cache = layers.attention_decode(params["attn"], h, cache, cfg, position, window=window)
+        x = x + y
+        if "moe" in params:
+            h2 = layers.rmsnorm(x, params["norm2"], cfg.norm_eps)
+            B, S, d = h2.shape
+            y2, _ = layers.moe_apply(params["moe"], h2.reshape(B * S, d), cfg)
+            x = x + y2.reshape(B, S, d)
+        elif "mlp" in params:
+            x = x + layers.mlp_apply(params["mlp"], layers.rmsnorm(x, params["norm2"], cfg.norm_eps))
+    elif kind == "rglru":
+        y, cache = recurrent.rglru_step(params["rnn"], h, cache, cfg)
+        x = x + y
+        if "mlp" in params:
+            x = x + layers.mlp_apply(params["mlp"], layers.rmsnorm(x, params["norm2"], cfg.norm_eps))
+    elif kind == "mlstm":
+        y, cache = recurrent.mlstm_step(params["cell"], h, cache, cfg)
+        x = x + y
+    elif kind == "slstm":
+        y, cache = recurrent.slstm_step(params["cell"], h, cache, cfg)
+        x = x + y
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+def init_superblock(rng, cfg: ArchConfig) -> Dict[str, PyTree]:
+    ks = jax.random.split(rng, cfg.pattern_period)
+    return {f"b{i}": init_block(ks[i], cfg, kind) for i, kind in enumerate(cfg.block_pattern)}
+
+
+def init_params(rng, cfg: ArchConfig) -> Dict[str, PyTree]:
+    dt = cfg.dtype()
+    k = jax.random.split(rng, 4 + cfg.tail_layers)
+    params: Dict[str, PyTree] = {}
+    if cfg.embed_inputs:
+        params["embed"] = layers._init_dense(k[0], (cfg.vocab_size, cfg.d_model), dt, scale=1.0)
+    if cfg.scan_layers and cfg.num_superblocks > 0:
+        sb_keys = jax.random.split(k[1], cfg.num_superblocks)
+        params["blocks"] = jax.vmap(lambda kk: init_superblock(kk, cfg))(sb_keys)
+    else:
+        sb_keys = jax.random.split(k[1], cfg.num_layers)
+        params["blocks_unrolled"] = [
+            init_block(sb_keys[i], cfg, cfg.block_pattern[i % cfg.pattern_period])
+            for i in range(cfg.num_layers - cfg.tail_layers)
+        ]
+    for t in range(cfg.tail_layers):
+        params[f"tail{t}"] = init_block(k[3 + t], cfg, cfg.block_pattern[t])
+    params["final_norm"] = layers.init_rmsnorm(cfg.d_model, dt)
+    params["lm_head"] = layers._init_dense(k[2], (cfg.d_model, cfg.vocab_size), dt)
+    return params
+
+
+def _superblock_apply(sb_params, x, cfg, positions):
+    aux = jnp.zeros((), jnp.float32)
+    for i, kind in enumerate(cfg.block_pattern):
+        x, a = block_apply(sb_params[f"b{i}"], x, cfg, kind, positions)
+        aux = aux + a
+    return x, aux
+
+
+def _remat(fn, cfg: ArchConfig):
+    if cfg.remat == "none":
+        return fn
+    policy = None
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots
+    return jax.checkpoint(fn, policy=policy)
+
+
+def backbone(params, cfg: ArchConfig, x: jnp.ndarray, positions: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(B,S,d) -> (B,S,d) hidden states + accumulated moe aux loss."""
+    total_aux = jnp.zeros((), jnp.float32)
+    if cfg.scan_layers and cfg.num_superblocks > 0 and "blocks" in params:
+        sb_fn = _remat(lambda p, h: _superblock_apply(p, h, cfg, positions), cfg)
+
+        def body(carry, sb_params):
+            h, aux = carry
+            h, a = sb_fn(sb_params, h)
+            return (h, aux + a), ()
+
+        (x, total_aux), _ = jax.lax.scan(body, (x, total_aux), params["blocks"])
+    elif "blocks_unrolled" in params:
+        for i, bp in enumerate(params["blocks_unrolled"]):
+            kind = cfg.block_pattern[i % cfg.pattern_period]
+            x, a = block_apply(bp, x, cfg, kind, positions)
+            total_aux = total_aux + a
+    for t in range(cfg.tail_layers):
+        x, a = block_apply(params[f"tail{t}"], x, cfg, cfg.block_pattern[t], positions)
+        total_aux = total_aux + a
+    return x, total_aux
+
+
+def forward(params, cfg: ArchConfig, inputs: jnp.ndarray, positions: Optional[jnp.ndarray] = None):
+    """inputs: int tokens (B,S) if cfg.embed_inputs else embeddings (B,S,d).
+
+    Returns (logits (B,S,V), aux_loss).
+    """
+    if cfg.embed_inputs:
+        x = params["embed"][inputs]
+    else:
+        x = inputs.astype(cfg.dtype())
+    B, S = x.shape[0], x.shape[1]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x, aux = backbone(params, cfg, x, positions)
+    x = layers.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"]
+    return logits, aux
+
+
+def cross_entropy(logits: jnp.ndarray, targets: jnp.ndarray, mask: Optional[jnp.ndarray] = None):
+    """Sharded-vocab-safe CE: logsumexp - target logit. targets: (B,S) int."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    tgt = jnp.take_along_axis(lf, targets[..., None], axis=-1)[..., 0]
+    nll = lse - tgt
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def make_loss_fn(cfg: ArchConfig):
+    """Per-client loss for HierFAVG: loss_fn(params, batch, rng) -> scalar.
+
+    batch: {"inputs": tokens (b,S) or embeds (b,S,d), "targets": (b,S) int32}.
+    """
+
+    def loss_fn(params, batch, rng):
+        logits, aux = forward(params, cfg, batch["inputs"])
+        return cross_entropy(logits, batch["targets"], batch.get("mask")) + aux
+
+    return loss_fn
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + single-token decode with stacked caches
+# ---------------------------------------------------------------------------
+
+def _block_prefill(params, x, cfg, kind, positions, max_len):
+    """Run the block over the prompt AND build its decode cache."""
+    y, _ = block_apply(params, x, cfg, kind, positions)
+    B, S, _ = x.shape
+    dtype = cfg.dtype()
+    cache = block_init_cache(cfg, kind, B, max_len, dtype)
+    if kind in ATTN_KINDS and not cfg.mla:
+        h = layers.rmsnorm(x, params["norm1"], cfg.norm_eps)
+        hd = cfg.resolved_head_dim
+        k = layers._split_heads(h @ params["attn"]["wk"], cfg.num_kv_heads, hd)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+        v = layers._split_heads(h @ params["attn"]["wv"], cfg.num_kv_heads, hd)
+        L = cache["k"].shape[1]
+        take = min(S, L)
+        slots = jnp.mod(positions[:, -take:], L)
+        bidx = jnp.arange(B)[:, None]
+        cache["k"] = cache["k"].at[bidx, slots].set(k[:, -take:].astype(dtype))
+        cache["v"] = cache["v"].at[bidx, slots].set(v[:, -take:].astype(dtype))
+        cache["pos"] = cache["pos"].at[bidx, slots].set(positions[:, -take:])
+    elif kind in ATTN_KINDS and cfg.mla:
+        h = layers.rmsnorm(x, params["norm1"], cfg.norm_eps)
+        m = cfg.mla
+        kv = h @ params["attn"]["wkv_a"]
+        c_kv = layers.rmsnorm(kv[..., : m.kv_lora_rank], params["attn"]["kv_norm"], cfg.norm_eps)
+        k_rope = layers.apply_rope(kv[..., None, m.kv_lora_rank :], positions, cfg.rope_theta)[:, :, 0]
+        cache["c_kv"] = cache["c_kv"].at[:, :S].set(c_kv.astype(dtype))
+        cache["k_rope"] = cache["k_rope"].at[:, :S].set(k_rope.astype(dtype))
+        cache["pos"] = cache["pos"].at[:, :S].set(positions)
+    elif kind == "rglru":
+        h = layers.rmsnorm(x, params["norm1"], cfg.norm_eps)
+        u = h @ params["rnn"]["w_x"]
+        v = recurrent._conv1d_causal(u, params["rnn"]["conv"])
+        a, b = recurrent._rglru_coeffs(params["rnn"], v)
+
+        def combine(l, r):
+            return l[0] * r[0], r[0] * l[1] + r[1]
+
+        af, bf = jax.lax.associative_scan(combine, (a, b), axis=1)
+        cache["h"] = bf[:, -1]  # h_S with h_0 = 0
+        cache["conv"] = u[:, -3:].astype(dtype)
+    elif kind in ("mlstm", "slstm"):
+        # replay the sequence through the recurrent cell to get the state
+        cell = params["cell"]
+        if kind == "mlstm":
+            q, k, v, i_log, f_log, _ = recurrent._mlstm_qkv_gates(cell, x_normed_in(params, x, cfg), cfg)
+            B_, S_, H, dh = q.shape
+            carry = (
+                jnp.zeros((B_, H, dh, dh), jnp.float32),
+                jnp.zeros((B_, H, dh), jnp.float32),
+                jnp.full((B_, H), -1e30, jnp.float32),
+            )
+            W = min(cfg.mlstm_chunk, S_)
+            n_chunks = S_ // W
+
+            def to_chunks(t, has_dh=True):
+                tt = t.reshape(B_, n_chunks, W, H, -1) if has_dh else t.reshape(B_, n_chunks, W, H)
+                return jnp.transpose(tt, (1, 0, 3, 2, 4) if has_dh else (1, 0, 3, 2))
+
+            def body(c, ch):
+                _, c2 = recurrent._mlstm_chunk(*ch, c)
+                return c2, ()
+
+            carry, _ = jax.lax.scan(
+                body,
+                carry,
+                (
+                    to_chunks(q.astype(jnp.float32)),
+                    to_chunks(k.astype(jnp.float32)),
+                    to_chunks(v.astype(jnp.float32)),
+                    to_chunks(i_log, False),
+                    to_chunks(f_log, False),
+                ),
+            )
+            cache = {"C": carry[0], "n": carry[1], "m": carry[2]}
+        else:
+            h = x_normed_in(params, x, cfg)
+            w = jnp.concatenate([cell["w_i"], cell["w_f"], cell["w_z"], cell["w_o"]], axis=1)
+            pre_all = (h @ w).astype(jnp.float32) + cell["b"]
+            H = max(cfg.num_heads, 1)
+            dh = cfg.d_model // H
+            st = recurrent.slstm_init_state(cfg, x.shape[0], cfg.dtype())
+
+            def body(s, p):
+                _, s2 = recurrent._slstm_cell(cell, p, s, H, dh)
+                return s2, ()
+
+            cache, _ = jax.lax.scan(body, st, jnp.swapaxes(pre_all, 0, 1))
+    return y, cache
+
+
+def x_normed_in(params, x, cfg):
+    return layers.rmsnorm(x, params["norm1"], cfg.norm_eps)
+
+
+def prefill(params, cfg: ArchConfig, inputs: jnp.ndarray, max_len: int):
+    """Full-prompt forward building every layer's decode cache.
+
+    Returns (last-position logits (B,V), caches pytree).
+    """
+    if cfg.embed_inputs:
+        x = params["embed"][inputs]
+    else:
+        x = inputs.astype(cfg.dtype())
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    caches = {}
+    if cfg.scan_layers and cfg.num_superblocks > 0 and "blocks" in params:
+        def body(h, sb_params):
+            cs = {}
+            for i, kind in enumerate(cfg.block_pattern):
+                h, c = _block_prefill(sb_params[f"b{i}"], h, cfg, kind, positions, max_len)
+                cs[f"b{i}"] = c
+            return h, cs
+
+        x, caches["blocks"] = jax.lax.scan(body, x, params["blocks"])
+    for t in range(cfg.tail_layers):
+        x, c = _block_prefill(params[f"tail{t}"], x, cfg, cfg.block_pattern[t], positions, max_len)
+        caches[f"tail{t}"] = c
+    x = layers.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = x[:, -1] @ params["lm_head"]
+    return logits, caches
+
+
+def init_decode_caches(params, cfg: ArchConfig, batch: int, max_len: int):
+    """Fresh (empty) caches matching the model structure."""
+    dtype = cfg.dtype()
+    caches = {}
+    if cfg.scan_layers and cfg.num_superblocks > 0 and "blocks" in params:
+        def one(_):
+            return {
+                f"b{i}": block_init_cache(cfg, kind, batch, max_len, dtype)
+                for i, kind in enumerate(cfg.block_pattern)
+            }
+
+        caches["blocks"] = jax.vmap(one)(jnp.arange(cfg.num_superblocks))
+    for t in range(cfg.tail_layers):
+        caches[f"tail{t}"] = block_init_cache(cfg, cfg.block_pattern[t], batch, max_len, dtype)
+    return caches
+
+
+def decode_step(params, cfg: ArchConfig, caches, tokens: jnp.ndarray, position: jnp.ndarray):
+    """One decode step for all requests.
+
+    tokens: (B,) int32 (or (B,d) embeddings for stub-frontend archs);
+    position: (B,) absolute positions. Returns (logits (B,V), caches).
+    """
+    if cfg.embed_inputs:
+        x = params["embed"][tokens][:, None]  # (B,1,d)
+    else:
+        x = tokens.astype(cfg.dtype())[:, None]
+    new_caches = {}
+    if cfg.scan_layers and cfg.num_superblocks > 0 and "blocks" in params:
+        def body(h, xs):
+            sb_params, sb_cache = xs
+            cs = {}
+            for i, kind in enumerate(cfg.block_pattern):
+                h, c = block_decode(sb_params[f"b{i}"], h, sb_cache[f"b{i}"], cfg, kind, position)
+                cs[f"b{i}"] = c
+            return h, cs
+
+        x, new_caches["blocks"] = jax.lax.scan(body, x, (params["blocks"], caches["blocks"]))
+    for t in range(cfg.tail_layers):
+        x, c = block_decode(
+            params[f"tail{t}"], x, caches[f"tail{t}"], cfg, cfg.block_pattern[t], position
+        )
+        new_caches[f"tail{t}"] = c
+    x = layers.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = x[:, 0] @ params["lm_head"]
+    return logits, new_caches

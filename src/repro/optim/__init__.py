@@ -1,0 +1,36 @@
+from repro.optim.transforms import (
+    GradientTransformation,
+    adam,
+    apply_updates,
+    chain,
+    clip_by_global_norm,
+    identity,
+    momentum,
+    scale,
+    scale_by_adam,
+    scale_by_learning_rate,
+    sgd,
+    trace,
+)
+from repro.optim.schedule import constant, cosine_decay, exponential_decay, warmup_cosine
+from repro.optim import compression
+
+__all__ = [
+    "GradientTransformation",
+    "adam",
+    "apply_updates",
+    "chain",
+    "clip_by_global_norm",
+    "identity",
+    "momentum",
+    "scale",
+    "scale_by_adam",
+    "scale_by_learning_rate",
+    "sgd",
+    "trace",
+    "constant",
+    "cosine_decay",
+    "exponential_decay",
+    "warmup_cosine",
+    "compression",
+]

@@ -1,0 +1,106 @@
+"""Communication-compression operators for the expensive cloud (DCN) hop.
+
+The paper's lever for reducing cloud traffic is aggregation frequency (κ₂).
+Production systems compound that with payload compression; we provide the
+standard menu as pure pytree transforms. All compressors are *unbiased or
+error-bounded* and come with exact decompressors, so they compose with
+HierFAVG's weighted averaging (compress deltas w − w_broadcast, aggregate,
+decompress).
+
+int8 quantization also has a Pallas kernel (`repro.kernels.quantize`) used
+on-device; this module is the numpy/jnp-level API and the reference.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class QuantizedTree(NamedTuple):
+    """Per-leaf int8 payload + per-block fp32 scales."""
+
+    payload: PyTree  # int8 arrays, same shapes as the input leaves
+    scales: PyTree  # fp32 arrays, one scale per block of `block` elements
+    block: int
+
+
+def _quantize_leaf(x: jnp.ndarray, block: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    safe = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(blocks / safe), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def _dequantize_leaf(q: jnp.ndarray, scale: jnp.ndarray, shape, dtype, block: int) -> jnp.ndarray:
+    blocks = q.astype(jnp.float32) * scale[:, None]
+    flat = blocks.reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def quantize_int8(tree: PyTree, block: int = 256) -> QuantizedTree:
+    qs = jax.tree_util.tree_map(lambda x: _quantize_leaf(x, block), tree)
+    payload = jax.tree_util.tree_map(lambda t: t[0], qs, is_leaf=lambda t: isinstance(t, tuple))
+    scales = jax.tree_util.tree_map(lambda t: t[1], qs, is_leaf=lambda t: isinstance(t, tuple))
+    return QuantizedTree(payload=payload, scales=scales, block=block)
+
+
+def dequantize_int8(q: QuantizedTree, like: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda p, s, x: _dequantize_leaf(p, s, x.shape, x.dtype, q.block),
+        q.payload,
+        q.scales,
+        like,
+    )
+
+
+def compressed_bytes(q: QuantizedTree) -> int:
+    """Wire size of the compressed tree (payload + scales)."""
+    n = 0
+    for leaf in jax.tree_util.tree_leaves(q.payload):
+        n += leaf.size  # int8 → 1 byte
+    for leaf in jax.tree_util.tree_leaves(q.scales):
+        n += leaf.size * 4
+    return n
+
+
+def topk_sparsify(tree: PyTree, frac: float) -> Tuple[PyTree, PyTree]:
+    """Keep the top-`frac` fraction (by magnitude) of each leaf; zero the rest.
+
+    Returns (sparse_tree, mask). Standard top-k gradient sparsification;
+    callers keep the residual (x - sparse) locally for error feedback.
+    """
+
+    def leaf(x):
+        flat = x.reshape(-1)
+        k = max(int(flat.size * frac), 1)
+        thresh = jnp.sort(jnp.abs(flat))[-k]
+        mask = (jnp.abs(x) >= thresh).astype(x.dtype)
+        return x * mask, mask
+
+    out = jax.tree_util.tree_map(leaf, tree)
+    sparse = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    mask = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    return sparse, mask
+
+
+def randk_sparsify(tree: PyTree, frac: float, rng: jax.Array) -> Tuple[PyTree, PyTree]:
+    """Unbiased random-k sparsification: keep each coordinate w.p. frac, scale by 1/frac."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(rng, len(leaves))
+    sparse, masks = [], []
+    for x, key in zip(leaves, keys):
+        mask = (jax.random.uniform(key, x.shape) < frac).astype(x.dtype)
+        sparse.append(x * mask / frac)
+        masks.append(mask)
+    return jax.tree_util.tree_unflatten(treedef, sparse), jax.tree_util.tree_unflatten(treedef, masks)

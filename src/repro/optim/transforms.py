@@ -1,0 +1,198 @@
+"""Minimal optax-style gradient-transformation library (pure JAX).
+
+optax is not available offline, so the framework carries its own optimizer
+substrate. The interface mirrors optax so downstream code reads familiarly:
+
+    opt = sgd(lr)                    # or momentum(lr, 0.9), adam(lr)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+All transforms are pytree-polymorphic and work unchanged on stacked
+per-client parameters (leading client axis) — each client simply carries its
+own slice of the optimizer state, which is exactly the FedAvg-family
+semantics (local optimizer state, reset/kept across aggregations per config).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+ScalarOrSchedule = Union[float, Schedule]
+
+
+class GradientTransformation(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[..., tuple]  # (grads, state, params=None) -> (updates, state)
+
+
+class EmptyState(NamedTuple):
+    pass
+
+
+class ScaleByScheduleState(NamedTuple):
+    count: jnp.ndarray
+
+
+class TraceState(NamedTuple):
+    trace: PyTree
+
+
+class ScaleByAdamState(NamedTuple):
+    count: jnp.ndarray
+    mu: PyTree
+    nu: PyTree
+
+
+def _lr_value(lr: ScalarOrSchedule, count: jnp.ndarray) -> jnp.ndarray:
+    if callable(lr):
+        return lr(count)
+    return jnp.asarray(lr)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda p, u: (p + u.astype(p.dtype)) if p is not None else None, params, updates
+    )
+
+
+def chain(*transforms: GradientTransformation) -> GradientTransformation:
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(grads, state, params=None):
+        new_state = []
+        for t, s in zip(transforms, state):
+            grads, s = t.update(grads, s, params)
+            new_state.append(s)
+        return grads, tuple(new_state)
+
+    return GradientTransformation(init, update)
+
+
+def identity() -> GradientTransformation:
+    return GradientTransformation(
+        lambda params: EmptyState(),
+        lambda grads, state, params=None: (grads, state),
+    )
+
+
+def scale(factor: float) -> GradientTransformation:
+    def update(grads, state, params=None):
+        return jax.tree_util.tree_map(lambda g: g * factor, grads), state
+
+    return GradientTransformation(lambda params: EmptyState(), update)
+
+
+def scale_by_learning_rate(lr: ScalarOrSchedule, *, flip_sign: bool = True) -> GradientTransformation:
+    sign = -1.0 if flip_sign else 1.0
+
+    def init(params):
+        return ScaleByScheduleState(count=jnp.zeros([], jnp.int32))
+
+    def update(grads, state, params=None):
+        step_lr = _lr_value(lr, state.count) * sign
+        updates = jax.tree_util.tree_map(lambda g: g * step_lr.astype(g.dtype), grads)
+        return updates, ScaleByScheduleState(count=state.count + 1)
+
+    return GradientTransformation(init, update)
+
+
+def trace(decay: float, *, nesterov: bool = False) -> GradientTransformation:
+    """Momentum accumulator (a la optax.trace)."""
+
+    def init(params):
+        return TraceState(trace=jax.tree_util.tree_map(jnp.zeros_like, params))
+
+    def update(grads, state, params=None):
+        new_trace = jax.tree_util.tree_map(lambda g, t: g + decay * t, grads, state.trace)
+        if nesterov:
+            updates = jax.tree_util.tree_map(lambda g, t: g + decay * t, grads, new_trace)
+        else:
+            updates = new_trace
+        return updates, TraceState(trace=new_trace)
+
+    return GradientTransformation(init, update)
+
+
+def clip_by_global_norm(max_norm: float) -> GradientTransformation:
+    def update(grads, state, params=None):
+        leaves = jax.tree_util.tree_leaves(grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+        factor = jnp.minimum(1.0, max_norm / (gnorm + 1e-12))
+        return jax.tree_util.tree_map(lambda g: g * factor.astype(g.dtype), grads), state
+
+    return GradientTransformation(lambda params: EmptyState(), update)
+
+
+def add_decayed_weights(weight_decay: float) -> GradientTransformation:
+    def update(grads, state, params=None):
+        if params is None:
+            raise ValueError("add_decayed_weights requires params")
+        return (
+            jax.tree_util.tree_map(lambda g, p: g + weight_decay * p.astype(g.dtype), grads, params),
+            state,
+        )
+
+    return GradientTransformation(lambda params: EmptyState(), update)
+
+
+def scale_by_adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> GradientTransformation:
+    def init(params):
+        return ScaleByAdamState(
+            count=jnp.zeros([], jnp.int32),
+            mu=jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params),
+            nu=jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params),
+        )
+
+    def update(grads, state, params=None):
+        count = state.count + 1
+        mu = jax.tree_util.tree_map(
+            lambda g, m: b1 * m + (1 - b1) * g.astype(jnp.float32), grads, state.mu
+        )
+        nu = jax.tree_util.tree_map(
+            lambda g, v: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)), grads, state.nu
+        )
+        mu_hat_scale = 1.0 / (1 - b1 ** count.astype(jnp.float32))
+        nu_hat_scale = 1.0 / (1 - b2 ** count.astype(jnp.float32))
+        updates = jax.tree_util.tree_map(
+            lambda m, v, g: ((m * mu_hat_scale) / (jnp.sqrt(v * nu_hat_scale) + eps)).astype(g.dtype),
+            mu,
+            nu,
+            grads,
+        )
+        return updates, ScaleByAdamState(count=count, mu=mu, nu=nu)
+
+    return GradientTransformation(init, update)
+
+
+# ---------------------------------------------------------------------------
+# User-facing optimizers
+# ---------------------------------------------------------------------------
+
+def sgd(lr: ScalarOrSchedule) -> GradientTransformation:
+    """Plain SGD — what the paper uses ("we do not use momentum")."""
+    return scale_by_learning_rate(lr)
+
+
+def momentum(lr: ScalarOrSchedule, decay: float = 0.9, *, nesterov: bool = False) -> GradientTransformation:
+    return chain(trace(decay, nesterov=nesterov), scale_by_learning_rate(lr))
+
+
+def adam(
+    lr: ScalarOrSchedule,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> GradientTransformation:
+    parts = [scale_by_adam(b1, b2, eps)]
+    if weight_decay:
+        parts.append(add_decayed_weights(weight_decay))
+    parts.append(scale_by_learning_rate(lr))
+    return chain(*parts)

@@ -1,0 +1,10 @@
+# NOTE: do NOT set --xla_force_host_platform_device_count here — smoke
+# tests and benches must see the real single CPU device; only the dry-run
+# (repro.launch.dryrun) forces 512 placeholder devices.
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,128 @@
+"""HLO parser unit tests on hand-written modules + roofline algebra."""
+import numpy as np
+import pytest
+
+from repro.analysis import hlo
+from repro.analysis.roofline import RooflineTerms, hierfavg_step_terms
+
+SAMPLE = """\
+HloModule test
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+%body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %d = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16]{1,0} all-reduce(%d), channel_id=1, replica_groups=[4,2]<=[8], use_global_device_ids=true, to_apply=%add
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,16]) tuple(%ni, %ar)
+}
+
+%cond (p: (s32[], f32[8,16])) -> pred[] {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %k = s32[] constant(5)
+  ROOT %c = pred[] compare(%i, %k), direction=LT
+}
+
+ENTRY %main (x: f32[8,16]) -> (s32[], f32[8,16]) {
+  %x = f32[8,16]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %init = (s32[], f32[8,16]) tuple(%z, %x)
+  ROOT %w = (s32[], f32[8,16]) while(%init), condition=%cond, body=%body
+}
+"""
+
+
+def test_parse_and_trip_count():
+    comps = hlo.parse_hlo(SAMPLE)
+    assert set(comps) == {"add", "body", "cond", "main"}
+    assert hlo.while_trip_count(comps["cond"], comps) == 5
+
+
+def test_flops_with_while_multiplier():
+    s = hlo.analyze(SAMPLE)
+    # dot: 2*8*16*16 = 4096 flops, ×5 trips
+    assert s.flops == pytest.approx(5 * 4096)
+    assert s.unresolved_whiles == 0
+
+
+def test_collective_counting_and_ring_model():
+    s = hlo.analyze(SAMPLE)
+    assert len(s.collectives) == 1
+    c = s.collectives[0]
+    assert c.count == 5 and c.group_size == 2
+    # ring all-reduce: 2*(2-1)/2 * 512B = 512B per execution
+    assert s.collective_bytes_per_device() == pytest.approx(5 * 512)
+
+
+def test_tuple_type_with_index_comment():
+    txt = """\
+ENTRY %m (p: f32[4]) -> f32[4] {
+  %p = f32[4]{0} parameter(0)
+  ROOT %ar = (f32[4]{0}, f32[8]{0}, /*index=2*/f32[16]{0}) all-reduce(%p, %p, %p), replica_groups={{0,1},{2,3}}, to_apply=%a
+}
+"""
+    comps = hlo.parse_hlo(txt)
+    op = comps["m"].ops["ar"]
+    assert op.opcode == "all-reduce"
+    assert hlo._shape_bytes(op.type_str) == (4 + 8 + 16) * 4
+
+
+def test_replica_group_reconstruction_iota_with_transpose():
+    g = hlo.parse_replica_groups("replica_groups=[8,2]<=[2,4,2]T(1,0,2)")
+    assert g.shape == (8, 2)
+    arr = np.arange(16).reshape(2, 4, 2).transpose(1, 0, 2).reshape(8, 2)
+    np.testing.assert_array_equal(g, arr)
+
+
+def test_replica_group_explicit():
+    g = hlo.parse_replica_groups("replica_groups={{0,2},{1,3}}")
+    np.testing.assert_array_equal(g, [[0, 2], [1, 3]])
+
+
+def test_roofline_dominant_and_fraction():
+    t = RooflineTerms(
+        name="x", chips=256,
+        flops_per_device=197e12 * 0.5,  # 0.5 s compute
+        hbm_bytes_per_device=819e9 * 0.25,  # 0.25 s memory
+        coll_bytes_per_device=50e9 * 0.1,  # 0.1 s collective
+        coll_breakdown={"model": 50e9 * 0.1},
+        model_flops_global=197e12 * 256 * 0.4,
+    )
+    assert t.dominant == "compute"
+    assert t.roofline_fraction == pytest.approx(0.4 / 0.5)
+
+
+def test_hierfavg_amortization():
+    """Edge bytes /kappa1, cloud bytes /kappa1*kappa2 — the paper's knob."""
+    local = RooflineTerms("l", 256, 1e12, 1e9, 1e9, {"model": 1e9})
+    edge = RooflineTerms("e", 256, 0, 0, 8e9, {"data": 8e9})
+    cloud = RooflineTerms("c", 256, 0, 0, 16e9, {"pod,data": 16e9})
+    amort = hierfavg_step_terms("a", local, edge, cloud, kappa1=4, kappa2=2)
+    assert amort.coll_bytes_per_device == pytest.approx(1e9 + 8e9 / 4 + 16e9 / 8)
+    # DCN-slowdown applies to the pod-axis share
+    assert amort.collective_s > (1e9 + 2e9) / 50e9
+
+
+def test_bf16_promotion_halves_effective_bytes():
+    txt = """\
+ENTRY %m (p: bf16[64]) -> bf16[64] {
+  %p = bf16[64]{0} parameter(0)
+  %c = f32[64]{0} convert(%p)
+  %ar = f32[64]{0} all-reduce(%c), replica_groups=[1,2]<=[2], to_apply=%a
+  ROOT %o = bf16[64]{0} convert(%ar)
+}
+"""
+    s = hlo.analyze(txt)
+    c = s.collectives[0]
+    assert c.bf16_promoted
+    assert c.effective_bytes == pytest.approx(64 * 4 / 2)

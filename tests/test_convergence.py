@@ -1,0 +1,93 @@
+"""Section III closed forms: Lemmas 2-3, Theorems 1-2, Remarks 1-2.
+
+Property-based (hypothesis) where the paper states monotonicity/limits.
+"""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import convergence as cv
+
+ETA = st.floats(1e-4, 0.5)
+BETA = st.floats(0.1, 10.0)
+DELTA = st.floats(0.0, 5.0)
+KAPPA = st.integers(1, 16)
+
+
+@given(x=st.integers(0, 64), delta=DELTA, eta=ETA, beta=BETA)
+def test_h_nonnegative_and_zero_at_zero_divergence(x, delta, eta, beta):
+    assert cv.h(x, 0.0, eta, beta) == pytest.approx(0.0)
+    assert cv.h(x, delta, eta, beta) >= -1e-9
+
+
+@given(delta=DELTA, eta=ETA, beta=BETA, k1=KAPPA, k2=KAPPA)
+def test_G_zero_iff_iid(delta, eta, beta, k1, k2):
+    """Remark 2: delta = Delta = 0 (IID) => G_c = 0. Conversely G > 0 needs
+    non-IID data AND an actual aggregation interval: kappa1*kappa2 = 1 is
+    centralized GD where the deviation vanishes regardless (Remark 1)."""
+    assert cv.G_c_max(k1, k2, 0.0, 0.0, eta, beta) == pytest.approx(0.0)
+    assert cv.G_nc(k1, k2, 0.0, 0.0, eta, beta) == pytest.approx(0.0)
+    if delta > 1e-6 and k1 * k2 > 1:
+        assert cv.G_c_max(k1, k2, delta, delta, eta, beta) > 0
+
+
+@given(eta=ETA, beta=BETA, delta=st.floats(0.01, 5.0), Delta=st.floats(0.01, 5.0), k1=KAPPA, k2=KAPPA)
+@settings(max_examples=60)
+def test_G_monotone_in_kappas(eta, beta, delta, Delta, k1, k2):
+    """Remark 2: the bound increases with either aggregation interval."""
+    g = cv.G_c_max(k1, k2, delta, Delta, eta, beta)
+    assert cv.G_c_max(k1 + 1, k2, delta, Delta, eta, beta) >= g - 1e-9
+    assert cv.G_c_max(k1, k2 + 1, delta, Delta, eta, beta) >= g - 1e-9
+
+
+def test_kappa2_1_consistency():
+    """Remark 1: with kappa2 = 1 the bound collapses to the two-layer form
+    h(k, Delta + delta) (up to the h-subadditivity gap)."""
+    eta, beta, d, D = 0.01, 1.0, 0.5, 0.7
+    k1 = 6
+    # G_c at interval end with kappa2=1: h(k1, Delta) + h(k1, delta)·(small)
+    g = cv.G_c(k1, k1, 1, d, D, eta, beta)
+    two_layer = cv.h(k1, D + d, eta, beta)
+    # exact equality isn't claimed; both vanish together and stay same order
+    assert g <= two_layer * 2 + 1e-9
+    assert (g == 0) == (two_layer == 0)
+
+
+def test_guideline_smaller_kappa1():
+    """Guideline 1: fixed product, smaller kappa1 => smaller deviation."""
+    out = cv.guideline_smaller_kappa1(16, delta=0.5, Delta=0.5, eta=0.01, beta=1.0)
+    gs = [g for _, _, g in out]  # sorted by kappa1 ascending
+    assert all(gs[i] <= gs[i + 1] + 1e-12 for i in range(len(gs) - 1))
+
+
+def test_guideline_edge_iid_kappa2_cheap():
+    """Guideline 2: Delta = 0 => raising kappa2 grows G only polynomially;
+    with Delta > 0 the growth is exponential (dominates for large kappa2)."""
+    eta, beta, delta, k1 = 0.01, 1.0, 0.5, 4
+    iid = cv.guideline_edge_iid_kappa2_free(k1, delta, eta, beta, range(1, 30))
+    ratio_iid = iid[-1][1] / iid[10][1]
+    niid = [cv.G_c_max(k1, k2, delta, 0.5, eta, beta) for k2 in range(1, 30)]
+    ratio_niid = niid[-1] / niid[10]
+    assert ratio_niid > ratio_iid  # exponential beats polynomial growth
+
+
+def test_theorem1_bound_positive_and_tightens_with_K():
+    args = dict(kappa1=4, kappa2=2, delta=0.05, Delta=0.05, eta=0.01, beta=1.0,
+                rho=1.0, epsilon=1.0, varphi=0.5)
+    b1 = cv.theorem1_bound(K=64, **args)
+    b2 = cv.theorem1_bound(K=128, **args)
+    assert 0 < b2 < b1 < math.inf
+
+
+def test_theorem1_infeasible_returns_inf():
+    assert cv.theorem1_bound(
+        K=64, kappa1=16, kappa2=16, delta=50.0, Delta=50.0, eta=0.4, beta=5.0,
+        rho=1.0, epsilon=0.01, varphi=0.01,
+    ) == math.inf
+
+
+def test_theorem2_decreases_with_K():
+    args = dict(kappa1=4, kappa2=2, delta=0.1, Delta=0.1, eta=0.01, beta=1.0,
+                rho=1.0, f0_minus_fstar=10.0)
+    assert cv.theorem2_bound(K=256, **args) < cv.theorem2_bound(K=64, **args)

@@ -1,0 +1,103 @@
+"""Fault tolerance: failure masks, stragglers, cost model (Table I/II)."""
+import numpy as np
+import pytest
+
+from repro.core import cost_model as cm
+from repro.fed.failures import FailureSimulator, StragglerModel, combine_masks
+
+
+def test_failure_simulator_deterministic():
+    a = FailureSimulator(8, p_fail=0.3, seed=1)
+    b = FailureSimulator(8, p_fail=0.3, seed=1)
+    for _ in range(5):
+        np.testing.assert_array_equal(a.step(), b.step())
+
+
+def test_failure_state_roundtrip():
+    a = FailureSimulator(8, p_fail=0.3, p_recover=0.4, seed=1)
+    for _ in range(3):
+        a.step()
+    s = a.state_dict()
+    want = [a.step() for _ in range(3)]
+    b = FailureSimulator(8, p_fail=0.3, p_recover=0.4, seed=99)
+    b.load_state_dict(s)
+    got = [b.step() for _ in range(3)]
+    np.testing.assert_array_equal(np.stack(want), np.stack(got))
+
+
+def test_straggler_deadline_excludes_slow_tail():
+    m = StragglerModel(64, mean_step_s=1.0, sigma=0.4, seed=0)
+    surv, deadline = m.survivors(kappa1=8)
+    assert 0.5 < surv.mean() <= 1.0  # most clients make the deadline
+    assert deadline > 8.0  # above the nominal 8 steps
+
+
+def test_combine_masks():
+    assert combine_masks(None, None) is None
+    a = np.array([1.0, 0.0, 1.0])
+    b = np.array([1.0, 1.0, 0.0])
+    np.testing.assert_array_equal(combine_masks(a, None, b), [1.0, 0.0, 0.0])
+
+
+# ---------------------------------------------------------------------------
+# Cost model: paper Table I values + Table II monotonicity
+# ---------------------------------------------------------------------------
+
+def test_table1_mnist_constants():
+    w = cm.paper_workload("mnist")
+    assert w.t_comp == pytest.approx(0.024, rel=1e-6)  # Table I
+    assert w.e_comp == pytest.approx(0.0024, rel=1e-6)
+    assert w.t_comm_edge == pytest.approx(0.1233, rel=5e-3)
+    assert w.e_comm_edge == pytest.approx(0.0616, rel=5e-3)
+
+
+def test_table1_cifar_constants():
+    w = cm.paper_workload("cifar10")
+    assert w.t_comp == pytest.approx(4.0, rel=1e-6)
+    assert w.e_comp == pytest.approx(0.4, rel=1e-6)
+    assert w.t_comm_edge == pytest.approx(33.0, rel=6e-3)
+    assert w.e_comm_edge == pytest.approx(16.5, rel=6e-3)
+
+
+def test_kappa2_1_reduces_to_cloud_favg():
+    """Schedule algebra: kappa2=1 interval == cloud-based FAVG interval."""
+    w = cm.paper_workload("mnist")
+    t = cm.cloud_interval_time(w, kappa1=60, kappa2=1)
+    expect = 60 * w.t_comp + w.cloud_latency_mult * w.t_comm_edge
+    assert t == pytest.approx(expect, rel=1e-9)
+
+
+def test_time_to_accuracy_decreases_with_kappa2():
+    """Table II trend: frequent edge averaging means FEWER local steps to
+    the target accuracy (guideline 1), and since edge comms are 10× cheaper
+    than cloud comms, T_alpha falls monotonically with kappa2. At FIXED
+    step count, more aggregations cost more time — the win is entirely in
+    the steps-to-accuracy reduction, exactly as the paper argues."""
+    w = cm.paper_workload("mnist")
+    # steps-to-accuracy decreasing in kappa2 (paper Fig. 4a/4b behaviour;
+    # Table II's T ratios imply a ~2.5× step reduction at (6,10) vs (60,1))
+    steps = {(60, 1): 600, (30, 2): 480, (15, 4): 360, (6, 10): 240}
+    times = [cm.time_at_step(w, k1, k2, s) for (k1, k2), s in steps.items()]
+    assert all(times[i] > times[i + 1] for i in range(len(times) - 1))
+    # and at FIXED steps, time grows with aggregation frequency
+    fixed = [cm.time_at_step(w, k1, k2, 600) for (k1, k2) in steps]
+    assert all(fixed[i] <= fixed[i + 1] for i in range(len(fixed) - 1))
+
+
+def test_energy_u_shape_possible():
+    """Energy = compute part (flat in kappa2) + comm part (grows with kappa2):
+    with steps-to-accuracy DECREASING in kappa2 (the empirical behaviour),
+    E_alpha first falls then rises — reproduce the paper's U-shape."""
+    w = cm.paper_workload("mnist")
+    steps = {1: 600, 2: 420, 4: 360, 10: 340}  # fewer steps when averaging more
+    E = {k2: cm.energy_at_step(w, 60 // k2 if k2 != 10 else 6, k2, s) for k2, s in steps.items()}
+    assert E[2] < E[1]  # moderate kappa2 saves energy
+    assert E[10] > E[4]  # too-frequent comms cost energy again
+
+
+def test_tune_kappas_picks_finite_best():
+    w = cm.paper_workload("mnist")
+    k1, k2, val = cm.tune_kappas(
+        w, lambda a, b: 600.0 * (1.0 + 0.1 * (a / (a * b))), [6, 15, 30, 60], [1, 2, 4, 10]
+    )
+    assert val > 0 and k1 in (6, 15, 30, 60)

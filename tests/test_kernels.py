@@ -1,0 +1,79 @@
+"""Per-kernel shape/dtype sweeps: pallas(interpret=True) vs ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+ops.set_interpret(True)
+
+
+@pytest.mark.parametrize("n,groups", [(4, 2), (8, 4), (16, 2), (32, 8)])
+@pytest.mark.parametrize("d", [64, 300, 513])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_grouped_mean_sweep(rng, n, groups, d, dtype):
+    x = jnp.asarray(rng.normal(size=(n, d)), dtype)
+    w = jnp.asarray(rng.uniform(0.5, 4.0, size=n), jnp.float32)
+    got = ops.grouped_mean(x, w, groups, block_d=128)
+    want = ref.grouped_mean_ref(x, w, groups)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol
+    )
+
+
+def test_grouped_mean_masked_and_dead_group(rng):
+    x = jnp.asarray(rng.normal(size=(8, 256)), jnp.float32)
+    w = jnp.asarray(rng.uniform(1, 2, size=8), jnp.float32).at[:4].set(0.0)
+    got = ops.grouped_mean(x, w, 2)
+    want = ref.grouped_mean_ref(x, w, 2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got[:4]), np.asarray(x[:4]))  # dead group
+
+
+@pytest.mark.parametrize("s,window", [(128, 0), (200, 0), (256, 33), (120, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(rng, s, window, dtype):
+    bh, d = 3, 64
+    q = jnp.asarray(rng.normal(size=(bh, s, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(bh, s, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(bh, s, d)), dtype)
+    got = ops.flash_attention(q, k, v, causal=True, window=window, block_q=64, block_k=64)
+    want = ref.attention_ref(q, k, v, causal=True, window=window)
+    tol = 3e-4 if dtype == jnp.float32 else 4e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol
+    )
+
+
+@pytest.mark.parametrize("s,d", [(33, 96), (128, 128), (64, 200)])
+def test_rglru_scan_sweep(rng, s, d):
+    B = 2
+    a = jnp.asarray(rng.uniform(0.7, 0.999, size=(B, s, d)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(B, s, d)) * 0.1, jnp.float32)
+    h0 = jnp.asarray(rng.normal(size=(B, d)), jnp.float32)
+    h, hT = ops.rglru_scan(a, b, h0)
+    hr, hTr = ref.rglru_scan_ref(a, b, h0)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(hTr), atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(37, 129), (8, 2048), (1000,), (3, 5, 7)])
+@pytest.mark.parametrize("qblock", [128, 256])
+def test_quantize_roundtrip_sweep(rng, shape, qblock):
+    x = jnp.asarray(rng.normal(size=shape) * 3.0, jnp.float32)
+    q, s, shp = ops.quantize_int8(x, qblock=qblock)
+    qr, sr, _ = ref.quantize_ref(x, qblock=qblock)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    back = ops.dequantize_int8(q, s, shp)
+    # int8 absmax quantization: error bounded by scale/2 per element
+    scale_max = float(jnp.max(s))
+    assert float(jnp.max(jnp.abs(back - x))) <= scale_max * 0.5 + 1e-6
+
+
+def test_quantize_zero_block(rng):
+    x = jnp.zeros((4, 256), jnp.float32)
+    q, s, shp = ops.quantize_int8(x)
+    assert float(jnp.max(jnp.abs(ops.dequantize_int8(q, s, shp)))) == 0.0
