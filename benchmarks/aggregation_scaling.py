@@ -1,35 +1,96 @@
-"""HierFAVG communication scaling: the paper's amortization knob in bytes.
+"""HierFAVG communication scaling: the paper's amortization knob in bytes,
+for uniform, ragged, and deeper-than-two hierarchies.
 
-Analytic per-step link traffic (ring model) for the production meshes as a
-function of (kappa1, kappa2), plus the compressed-cloud-hop variant — shows
-how the hierarchy moves traffic from the expensive (DCN) link to the cheap
-(ICI) link, and what int8 delta compression buys on top.
+Analytic per-step link traffic (ring model, dist.collectives) for the
+production meshes as a function of the per-level κ schedule — shows how the
+hierarchy moves traffic from the expensive (DCN) link to the cheap (ICI)
+link, what int8 delta compression buys on top, and where the bottleneck
+edge sits when the fan-out is ragged.
+
+    python benchmarks/aggregation_scaling.py                 # default sweep
+    python benchmarks/aggregation_scaling.py --levels 3      # uniform 3-level
+    python benchmarks/aggregation_scaling.py \
+        --fanout 16,12,10,7,5/3,2/2 --kappas 16,2,2          # explicit tree
 """
-from repro.configs.registry import get_config
+import argparse
+
 from repro.configs.base import param_count
-from repro.dist.collectives import hierfavg_traffic_per_step
+from repro.configs.registry import get_config
+from repro.core.hierarchy import HierarchySpec, parse_fanouts
+from repro.dist.collectives import hierarchy_traffic_per_step
+
+ARCHS = ("granite-3-2b", "yi-9b", "deepseek-7b")
+
+# default sweep: the seed's two-level (8 edges x 4 clients) plus a ragged
+# two-level and uniform/ragged three-level variant of the same 32 clients
+SWEEP = {
+    2: (
+        ("uniform", HierarchySpec.uniform(8, 4), ((1, 1), (16, 1), (16, 4), (64, 4))),
+        ("ragged", parse_fanouts("8,6,6,4,3,2,2,1/8"), ((16, 4), (64, 4))),
+    ),
+    3: (
+        ("uniform", parse_fanouts("4,4,4,4,4,4,4,4/4,4/2"), ((16, 2, 2), (64, 2, 2))),
+        ("ragged", parse_fanouts("8,6,6,4,3,2,2,1/5,3/2"), ((16, 2, 2), (64, 2, 2))),
+    ),
+}
 
 
-def main(csv=True):
-    for arch in ("granite-3-2b", "yi-9b", "deepseek-7b"):
+def report(arch: str, shape: str, spec: HierarchySpec, kappas, per_dev: float) -> None:
+    per_level = hierarchy_traffic_per_step(per_dev, spec, kappas)
+    cells = ",".join(
+        f"L{i+1}_MBps_per_step={b / 1e6:.2f}" for i, b in enumerate(per_level)
+    )
+    cloud = per_level[-1]
+    kstr = "x".join(str(k) for k in kappas)
+    print(
+        f"agg_scaling_{arch}_{shape}_{spec.describe().split()[0]}_k={kstr},"
+        f"{cells},cloud_int8={cloud / 4 / 1e6:.3f}"
+    )
+
+
+def main(argv=None, csv=True):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--levels", type=int, default=0,
+                    help="restrict the sweep to trees of this depth (0 = all)")
+    ap.add_argument("--fanout", type=str, default=None,
+                    help="explicit bottom-up fan-out, e.g. 16,12,10,7,5/3,2/2")
+    ap.add_argument("--kappas", type=str, default=None,
+                    help="per-level schedule for --fanout, e.g. 16,2,2")
+    ap.add_argument("--archs", type=str, default=",".join(ARCHS))
+    # tolerate the harness's own flags when driven by benchmarks.run
+    args, _ = ap.parse_known_args(argv)
+
+    if args.fanout:
+        spec = parse_fanouts(args.fanout)
+        if args.kappas:
+            kappas = tuple(int(k) for k in args.kappas.split(","))
+        else:
+            kappas = (16,) + (2,) * (spec.depth - 1)
+        sweep = {spec.depth: (("custom", spec, (kappas,)),)}
+    else:
+        if args.kappas:
+            ap.error("--kappas needs --fanout (the default sweep fixes its own schedules)")
+        sweep = {d: v for d, v in SWEEP.items() if not args.levels or d == args.levels}
+
+    for arch in args.archs.split(","):
         cfg = get_config(arch)
         pbytes = param_count(cfg) * 2  # bf16
         per_dev = pbytes / 16  # TP-sharded within a client group
-        for k1, k2 in ((1, 1), (16, 1), (16, 4), (64, 4)):
-            edge, cloud = hierfavg_traffic_per_step(
-                per_dev, clients_per_edge=4, num_edges=8, kappa1=k1, kappa2=k2
-            )
-            print(
-                f"agg_scaling_{arch}_k1={k1}_k2={k2},"
-                f"edge_MBps_per_step={edge/1e6:.1f},cloud_MBps_per_step={cloud/1e6:.1f},"
-                f"cloud_int8={cloud/4/1e6:.2f}"
-            )
-    # headline: (16,4) vs (1,1) cloud-traffic reduction
+        for depth in sorted(sweep):
+            for shape, spec, kappa_list in sweep[depth]:
+                for kappas in kappa_list:
+                    report(arch, shape, spec, kappas, per_dev)
+
+    # headline: (16,4) vs (1,1) cloud-traffic reduction on the seed topology
     cfg = get_config("granite-3-2b")
     per_dev = param_count(cfg) * 2 / 16
-    _, c11 = hierfavg_traffic_per_step(per_dev, 4, 8, 1, 1)
-    _, c164 = hierfavg_traffic_per_step(per_dev, 4, 8, 16, 4)
-    print(f"agg_scaling_headline,cloud_traffic_reduction={(c11/c164):.0f}x,with_int8={(4*c11/c164):.0f}x")
+    uni = HierarchySpec.uniform(8, 4)
+    c11 = hierarchy_traffic_per_step(per_dev, uni, (1, 1))[-1]
+    c164 = hierarchy_traffic_per_step(per_dev, uni, (16, 4))[-1]
+    print(
+        f"agg_scaling_headline,cloud_traffic_reduction={c11 / c164:.0f}x,"
+        f"with_int8={4 * c11 / c164:.0f}x"
+    )
 
 
 if __name__ == "__main__":

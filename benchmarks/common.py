@@ -15,19 +15,24 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import FedTopology, HierFAVGConfig, cost_model as cm
-from repro.data import FederatedBatcher, clustered_gaussians, make_partition
+from repro.data import FederatedBatcher, clustered_gaussians, make_partition, partition_hierarchy
 from repro.fed import FederatedRunner, RunnerConfig
 from repro.models import cnn
 from repro.optim import exponential_decay, sgd
 
 
 def build_problem(seed=0, partition="edge_iid", num_clients=50, num_edges=5,
-                  num_samples=3000, dim=16, class_sep=3.5):
+                  num_samples=3000, dim=16, class_sep=3.5, spec=None):
+    """``spec`` (a HierarchySpec) switches the partition to the ragged tree;
+    otherwise the uniform (num_edges, num_clients) split applies."""
     rng = np.random.default_rng(seed)
     data = clustered_gaussians(
         rng, num_samples=num_samples, num_classes=10, dim=(dim,), class_sep=class_sep
     )
-    parts = make_partition(partition, data.y, num_edges, num_clients // num_edges, rng)
+    if spec is not None:
+        parts = partition_hierarchy(partition, data.y, spec, rng)
+    else:
+        parts = make_partition(partition, data.y, num_edges, num_clients // num_edges, rng)
     batcher = FederatedBatcher(
         {"inputs": data.x, "targets": data.y}, parts, batch_size=8, seed=seed
     )
@@ -66,6 +71,33 @@ def run_schedule(kappa1, kappa2, *, partition="edge_iid", rounds=None, seed=0,
         loss_fn=cnn.make_cnn_loss_fn(apply_fn),
         optimizer=sgd(exponential_decay(lr, 0.995, 50)),
         topology=topo,
+        hier_config=hier,
+        data_sizes=batcher.data_sizes,
+        batcher=batcher,
+        runner_config=RunnerConfig(num_rounds=rounds, eval_every=eval_every),
+        eval_fn=eval_fn,
+        costs=cm.paper_workload(workload),
+    )
+    state = runner.init(jax.random.PRNGKey(seed), init(jax.random.PRNGKey(seed + 1)))
+    runner.run(state)
+    return runner
+
+
+def run_hierarchy_schedule(spec, kappas, *, partition="edge_iid", rounds=None, seed=0,
+                           workload="mnist", eval_every=1, lr=0.15, class_sep=3.5):
+    """Train one κ-vector schedule on an arbitrary (possibly ragged)
+    HierarchySpec; returns the runner. The two-level uniform call is
+    equivalent to ``run_schedule`` on the matching FedTopology."""
+    init, apply_fn, eval_fn, batcher, _ = build_problem(
+        seed=seed, partition=partition, class_sep=class_sep, spec=spec
+    )
+    hier = HierFAVGConfig.multi_level(kappas)
+    if rounds is None:
+        rounds = max(240 // hier.kappa1, 6)
+    runner = FederatedRunner(
+        loss_fn=cnn.make_cnn_loss_fn(apply_fn),
+        optimizer=sgd(exponential_decay(lr, 0.995, 50)),
+        topology=spec,
         hier_config=hier,
         data_sizes=batcher.data_sizes,
         batcher=batcher,

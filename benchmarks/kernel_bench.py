@@ -8,6 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import timed
+from repro.core.hierarchy import parse_fanouts
 from repro.kernels import ops, ref
 
 
@@ -22,6 +23,23 @@ def main(csv=True):
     ok = np.allclose(ops.grouped_mean(x, w, 8), out_ref, atol=1e-5)
     # traffic: kernel = 2 passes (read+write) vs ref ~4 passes
     print(f"kernel_hier_aggregate,ref_us={t_ref*1e6:.0f},allclose={ok},hbm_passes=2_vs_4")
+
+    # ragged vs uniform kernel at EQUAL total parameters (same (N, D) stack,
+    # same 8 groups; ragged fan-out 8,6,6,4,3,2,2,1). Acceptance: the
+    # segment-boundary encoding costs < 1.25x the uniform reshape path.
+    n, d, bd = 32, 1 << 16, 8192
+    spec = parse_fanouts("8,6,6,4,3,2,2,1/8")
+    seg = spec.segments(1)
+    xs = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    t_uni, _ = timed(lambda: ops.grouped_mean(xs, w, 8, block_d=bd), iters=5)
+    t_rag, out_rag = timed(lambda: ops.segment_mean(xs, w, seg, 8, block_d=bd), iters=5)
+    ok = np.allclose(out_rag, ref.segment_mean_ref(xs, w, seg, 8, block_d=bd), atol=1e-5)
+    ratio = t_rag / t_uni
+    print(
+        f"kernel_hier_aggregate_ragged,uniform_us={t_uni*1e6:.0f},"
+        f"ragged_us={t_rag*1e6:.0f},ratio={ratio:.2f},within_1.25x={ratio <= 1.25},"
+        f"allclose={ok}"
+    )
 
     # flash attention: 1k seq
     q = jnp.asarray(rng.normal(size=(4, 1024, 64)), jnp.bfloat16)

@@ -61,6 +61,14 @@ class FedPlan:
       sharded P(("pod","data")); TP within client over "model".
     layout "sharded": one client per pod (cross-silo); leading axis = num_pods,
       inner dims sharded over ("data","model") (FSDP x TP/EP).
+
+    ``fanouts``/``kappas`` opt into ragged / deeper-than-two trees
+    (see ``core.hierarchy``): fanouts is the bottom-up child-count nest of
+    ``HierarchySpec.from_fanouts`` and describes the FULL tree across all
+    pods (unlike the uniform path, which scales edges_per_pod by the
+    mesh's pod count); kappas the matching per-level schedule. When None,
+    the uniform two-level (edges_per_pod, clients_per_edge, kappa1,
+    kappa2) plan applies unchanged.
     """
 
     layout: str = "stacked"  # "stacked" | "sharded"
@@ -68,6 +76,26 @@ class FedPlan:
     clients_per_edge: int = 4
     kappa1: int = 16
     kappa2: int = 4
+    fanouts: Optional[Tuple[Tuple[int, ...], ...]] = None  # ragged tree (None -> uniform)
+    kappas: Optional[Tuple[int, ...]] = None  # per-level schedule (None -> (κ₁, κ₂))
+
+    def hierarchy(self, num_pods: int = 1):
+        """The aggregation tree this plan describes (lazy import: configs
+        stay importable without the core package initialized). ``num_pods``
+        scales the uniform path only — explicit ``fanouts`` are the full
+        tree already."""
+        from repro.core.hierarchy import HierarchySpec
+
+        if self.fanouts is not None:
+            return HierarchySpec.from_fanouts([list(l) for l in self.fanouts])
+        return HierarchySpec.uniform(num_pods * self.edges_per_pod, self.clients_per_edge)
+
+    def schedule(self):
+        from repro.core.hierfavg import HierFAVGConfig
+
+        if self.kappas is not None:
+            return HierFAVGConfig.multi_level(self.kappas)
+        return HierFAVGConfig(kappa1=self.kappa1, kappa2=self.kappa2)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -29,6 +29,12 @@ class PaperFLConfig:
     def clients_per_edge(self) -> int:
         return self.num_clients // self.num_edges
 
+    def hierarchy(self):
+        """The paper topology as a (uniform two-level) HierarchySpec."""
+        from repro.core.hierarchy import HierarchySpec
+
+        return HierarchySpec.uniform(self.num_edges, self.clients_per_edge)
+
 
 MNIST = PaperFLConfig(name="paper_mnist", lr=0.01, lr_decay=0.995)
 CIFAR10 = PaperFLConfig(name="paper_cifar10", lr=0.1, lr_decay=0.992)
@@ -36,6 +42,13 @@ CIFAR10 = PaperFLConfig(name="paper_cifar10", lr=0.1, lr_decay=0.992)
 # Table II κ sweeps
 MNIST_KAPPAS = ((60, 1), (30, 2), (15, 4), (6, 10))
 CIFAR_KAPPAS = ((50, 1), (25, 2), (10, 5), (5, 10))
+
+# Beyond-paper topologies for the ragged-hierarchy engine: the same 50
+# clients under (a) uneven edge fan-out (metro edges serve more clients
+# than rural ones) and (b) a three-level client/edge/region/cloud tree.
+RAGGED_EDGE_FANOUT = ((16, 12, 10, 7, 5), (5,))
+THREE_LEVEL_FANOUT = ((16, 12, 10, 7, 5), (2, 3), (2,))
+THREE_LEVEL_KAPPAS = (15, 2, 2)  # ≈ the paper's (15, 4) budget, split over 3 hops
 
 
 LM_100M = ArchConfig(

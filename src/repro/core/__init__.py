@@ -1,4 +1,5 @@
 """The paper's primary contribution: HierFAVG + its analysis + cost model."""
+from repro.core.hierarchy import HierarchySpec, as_hierarchy, parse_fanouts
 from repro.core.hierfavg import (
     FedState,
     FedTopology,
@@ -7,6 +8,7 @@ from repro.core.hierfavg import (
     build_edge_sync,
     build_hier_round,
     build_hier_round_async,
+    build_level_sync,
     build_local_step,
     build_train_step,
     init_state,
@@ -17,7 +19,11 @@ from repro.core import aggregation, convergence, cost_model, divergence, referen
 __all__ = [
     "FedState",
     "FedTopology",
+    "HierarchySpec",
     "HierFAVGConfig",
+    "as_hierarchy",
+    "parse_fanouts",
+    "build_level_sync",
     "build_cloud_sync",
     "build_edge_sync",
     "build_hier_round",

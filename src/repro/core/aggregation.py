@@ -3,17 +3,27 @@ CloudAggregation, Algorithm 1 lines 25-31) as pytree operators.
 
 Representation
 --------------
-All federated parameters carry a leading **client axis** of size
-N = num_edges * clients_per_edge, laid out edge-major:
+All federated parameters carry a leading **client axis** of size N, laid
+out so that clients of the same aggregation group are contiguous:
 
-    leaf.shape == (N, *param_shape)        clients of edge l occupy
-                                           leaf[l*C : (l+1)*C]
+    leaf.shape == (N, *param_shape)
 
-Edge aggregation is a weighted mean over each contiguous block of C clients
-(broadcast back to every member); cloud aggregation is the weighted mean over
-the whole axis. Under a mesh sharding of `P(("pod","data"), ...)` these lower
-to *grouped* all-reduces over exactly the edge's devices (intra-pod ICI) and
-a global all-reduce (crossing the pod/DCN axis) respectively — the paper's
+Two group encodings are supported:
+
+* **uniform** — ``num_groups`` equal contiguous blocks (the paper's
+  num_edges × clients_per_edge tree): ``grouped_weighted_mean`` reduces via
+  a (G, C, ...) reshape.
+* **ragged**  — an explicit sorted ``segment_ids`` vector mapping each
+  client to its group (arbitrary fan-out, any level of a
+  ``core.hierarchy.HierarchySpec``): ``segment_weighted_mean`` reduces via
+  ``jax.ops.segment_sum`` and gathers the group means back. When the
+  segment ids describe equal contiguous blocks it dispatches to the
+  uniform reshape path, so the paper topology pays nothing for the
+  generality.
+
+Under a mesh sharding of `P(("pod","data"), ...)` these lower to *grouped*
+all-reduces over exactly the group's devices (intra-pod ICI) and a global
+all-reduce (crossing the pod/DCN axis) respectively — the paper's
 two-tier communication pattern, verified in the dry-run HLO.
 
 Fault tolerance: every operator takes an optional survival ``mask`` (N,) and
@@ -24,10 +34,11 @@ next aggregation).
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 PyTree = Any
 
@@ -91,6 +102,93 @@ def grouped_weighted_mean(
         return out.reshape(x.shape).astype(x.dtype)
 
     return jax.tree_util.tree_map(leaf_fn, tree)
+
+
+def _static_uniform_groups(segment_ids, num_segments: int) -> Optional[int]:
+    """If the segment ids are statically known to form equal contiguous
+    blocks, return the block count (the uniform fast path); else None."""
+    if isinstance(segment_ids, jax.core.Tracer):
+        return None
+    ids = np.asarray(segment_ids)
+    n = ids.shape[0]
+    if num_segments <= 0 or n % num_segments:
+        return None
+    uniform = np.repeat(np.arange(num_segments, dtype=ids.dtype), n // num_segments)
+    return num_segments if np.array_equal(ids, uniform) else None
+
+
+def segment_weighted_mean(
+    tree: PyTree,
+    weights: jnp.ndarray,
+    segment_ids: Union[jnp.ndarray, np.ndarray, Sequence[int]],
+    num_segments: int,
+    mask: Optional[jnp.ndarray] = None,
+) -> PyTree:
+    """Ragged edge/region aggregation: per-segment weighted mean, broadcast
+    back to the members.
+
+    tree leaves: (N, ...); weights/mask: (N,); segment_ids: (N,) sorted ints
+    in [0, num_segments) (a level of ``HierarchySpec.segments``). Equals
+    ``grouped_weighted_mean`` exactly when the segments are equal contiguous
+    blocks (and dispatches to it, keeping the reshape fast path).
+    """
+    uniform = _static_uniform_groups(segment_ids, num_segments)
+    if uniform is not None:
+        return grouped_weighted_mean(tree, weights, uniform, mask)
+    seg = jnp.asarray(segment_ids, jnp.int32)
+    w = weights.astype(jnp.float32)
+    if mask is not None:
+        w = w * mask.astype(jnp.float32)
+    denom = jax.ops.segment_sum(w, seg, num_segments)  # (G,)
+    safe = jnp.where(denom > 0, denom, 1.0)
+    alive = denom > 0
+
+    def leaf_fn(x):
+        wb = _bcast_weights(w, x)
+        sums = jax.ops.segment_sum(x.astype(jnp.float32) * wb, seg, num_segments)  # (G, ...)
+        mean = sums / _bcast_weights(safe, sums)
+        back = jnp.take(mean, seg, axis=0)  # (N, ...)
+        keep = _bcast_weights(jnp.take(alive, seg), back)
+        return jnp.where(keep, back, x.astype(jnp.float32)).astype(x.dtype)
+
+    return jax.tree_util.tree_map(leaf_fn, tree)
+
+
+def segment_weights(
+    weights: jnp.ndarray,
+    segment_ids: Union[jnp.ndarray, np.ndarray, Sequence[int]],
+    num_segments: int,
+    mask: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """|D^g| per segment: sum of member dataset sizes (masked)."""
+    w = weights.astype(jnp.float32)
+    if mask is not None:
+        w = w * mask.astype(jnp.float32)
+    return jax.ops.segment_sum(w, jnp.asarray(segment_ids, jnp.int32), num_segments)
+
+
+def hierarchical_segment_mean(
+    tree: PyTree,
+    weights: jnp.ndarray,
+    spec,  # core.hierarchy.HierarchySpec
+    level: Optional[int] = None,
+    mask: Optional[jnp.ndarray] = None,
+) -> PyTree:
+    """Level-``level`` aggregation expressed as the staged bottom-up
+    composition (edge means, then region means of edge means, ...).
+
+    Numerically equal to the flat ``segment_weighted_mean`` at that level —
+    the |D_i| weights compose (each stage's members already hold their
+    group's mean, so the next weighted mean over clients equals the mean
+    over groups with weights |D^g|) — but kept staged so GSPMD emits the
+    hierarchical reduce(ICI) -> reduce(DCN) schedule. ``level=None`` means
+    the top (cloud) level.
+    """
+    lvl = spec.depth if level is None else level
+    out = tree
+    for t in range(1, lvl + 1):
+        out = segment_weighted_mean(out, weights, spec.segments(t), spec.num_nodes(t), mask)
+    return out
 
 
 def group_weights(weights: jnp.ndarray, num_groups: int, mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:

@@ -5,32 +5,43 @@ a leading client axis (see ``core.aggregation``); a single ``jax.grad`` of
 the summed per-client loss yields every client's local gradient at once
 (client losses are block-separable in the stacked parameters), so one jitted
 ``train_step`` advances all N clients one local update and applies the
-two-level aggregation schedule:
+per-level aggregation schedule. With the paper's κ-vector (κ₁, κ₂):
 
     k % kappa1 == 0                -> edge aggregation  (grouped, ICI)
     k % (kappa1 * kappa2) == 0     -> cloud aggregation (global, DCN)
+
+and in general, for a depth-L ``HierarchySpec`` with κ = (κ₁, ..., κ_L),
+level ℓ aggregates whenever ``k % prod(κ[:ℓ]) == 0`` — the deepest
+triggered level wins (its staged mean subsumes all finer levels).
 
 Special cases (paper Remark 1, used as test anchors):
     kappa2 == 1              -> FAVG (two-layer FedAvg)
     kappa1 == kappa2 == 1    -> centralized gradient descent
 
 Two driving modes are exposed:
-  * ``build_train_step``  — fused step, aggregation under ``lax.cond`` (the
-    normal training loop; one compiled executable regardless of k).
-  * ``build_local_step`` / ``build_edge_sync`` / ``build_cloud_sync`` — the
-    phases as separate jittables (used by the dry-run for clean per-phase
-    roofline accounting and by the fault-tolerant runner, which injects
+  * ``build_train_step``  — fused step, aggregation under ``lax.switch``
+    (the normal training loop; one compiled executable regardless of k).
+  * ``build_local_step`` / ``build_level_sync`` (and the two-level
+    ``build_edge_sync`` / ``build_cloud_sync`` wrappers) — the phases as
+    separate jittables (used by the dry-run for clean per-phase roofline
+    accounting and by the fault-tolerant runner, which injects
     host-detected survival masks at aggregation boundaries).
+
+Topology arguments accept either the seed's two-level ``FedTopology`` or a
+ragged ``core.hierarchy.HierarchySpec``; the former is the
+``levels=2, uniform`` special case with unchanged numerics.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+import math
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import aggregation
+from repro.core.hierarchy import HierarchySpec, as_hierarchy
 from repro.optim import GradientTransformation, apply_updates
 
 PyTree = Any
@@ -39,7 +50,11 @@ LossFn = Callable[[PyTree, PyTree, jax.Array], jnp.ndarray]  # (params_i, batch_
 
 @dataclasses.dataclass(frozen=True)
 class FedTopology:
-    """Client-edge-cloud topology: N = num_edges * clients_per_edge clients."""
+    """Client-edge-cloud topology: N = num_edges * clients_per_edge clients.
+
+    The uniform two-level special case; ``hierarchy()`` lifts it into the
+    general ragged-tree representation.
+    """
 
     num_edges: int
     clients_per_edge: int
@@ -51,27 +66,80 @@ class FedTopology:
     def edge_of(self, client: int) -> int:
         return client // self.clients_per_edge
 
+    def hierarchy(self) -> HierarchySpec:
+        return HierarchySpec.uniform(self.num_edges, self.clients_per_edge)
+
+
+Topology = Union[FedTopology, HierarchySpec]
+
 
 @dataclasses.dataclass(frozen=True)
 class HierFAVGConfig:
     """Aggregation schedule. kappa1: local steps per edge agg; kappa2: edge
-    aggs per cloud agg (paper's κ₁, κ₂)."""
+    aggs per cloud agg (paper's κ₁, κ₂). For deeper trees, ``kappas`` holds
+    the full per-level vector (κ₁, ..., κ_L): κ_ℓ level-(ℓ-1) intervals per
+    level-ℓ aggregation; ``multi_level`` builds a consistent config."""
 
     kappa1: int
     kappa2: int
     sync_opt_state: bool = False  # also average optimizer state at aggregations
     delta_cloud: bool = False  # cloud agg in delta-vs-anchor form (compressible)
     async_cloud: bool = False  # 1-interval-stale cloud agg (overlaps DCN; beyond paper)
+    kappas: Optional[Tuple[int, ...]] = None  # per-level κ vector (None -> (κ₁, κ₂))
+
+    def __post_init__(self):
+        if self.kappas is not None:
+            kv = tuple(int(k) for k in self.kappas)
+            object.__setattr__(self, "kappas", kv)
+            if len(kv) < 1 or any(k < 1 for k in kv):
+                raise ValueError(f"kappas must be >= 1 per level, got {kv}")
+            if kv[0] != self.kappa1 or (len(kv) > 1 and kv[1] != self.kappa2):
+                raise ValueError(
+                    f"kappas {kv} inconsistent with kappa1={self.kappa1}, "
+                    f"kappa2={self.kappa2}; use HierFAVGConfig.multi_level"
+                )
+        if self.kappa1 < 1 or self.kappa2 < 1:
+            raise ValueError("kappa1/kappa2 must be >= 1")
+
+    @classmethod
+    def multi_level(cls, kappas: Sequence[int], **kwargs) -> "HierFAVGConfig":
+        kv = tuple(int(k) for k in kappas)
+        if not kv:
+            raise ValueError("kappas must have at least one level")
+        # a 1-vector is a depth-1 tree (clients -> cloud, classic two-tier
+        # FedAvg); kappa2 degrades to 1 for two-level consumers
+        return cls(kappa1=kv[0], kappa2=kv[1] if len(kv) > 1 else 1, kappas=kv, **kwargs)
+
+    @property
+    def kappa_vector(self) -> Tuple[int, ...]:
+        return self.kappas if self.kappas is not None else (self.kappa1, self.kappa2)
+
+    @property
+    def num_levels(self) -> int:
+        return len(self.kappa_vector)
+
+    def level_interval(self, level: int) -> int:
+        """Local steps between level-ℓ aggregations: prod(κ[:ℓ])."""
+        return math.prod(self.kappa_vector[:level])
 
     @property
     def cloud_interval(self) -> int:
-        return self.kappa1 * self.kappa2
+        return self.level_interval(self.num_levels)
+
+    @property
+    def kappa2_effective(self) -> int:
+        """Edge intervals per cloud interval (= κ₂ for two levels) — the
+        two-level quantity the paper's cost model consumes."""
+        return math.prod(self.kappa_vector[1:])
+
+    def is_level_step(self, level: int, k) -> jnp.ndarray:
+        return (k % self.level_interval(level)) == 0
 
     def is_edge_step(self, k) -> jnp.ndarray:
-        return (k % self.kappa1) == 0
+        return self.is_level_step(1, k)
 
     def is_cloud_step(self, k) -> jnp.ndarray:
-        return (k % self.cloud_interval) == 0
+        return self.is_level_step(self.num_levels, k)
 
 
 class FedState(NamedTuple):
@@ -93,7 +161,7 @@ def init_state(
     rng: jax.Array,
     params: PyTree,
     optimizer: GradientTransformation,
-    topology: FedTopology,
+    topology: Topology,
     config: HierFAVGConfig,
     *,
     already_stacked: bool = False,
@@ -185,74 +253,93 @@ def _maybe_sync_opt_state(opt_state, agg_fn, sync: bool):
     return jax.tree_util.tree_map(lambda x: agg_fn(x) if leaf_ok(x) else x, opt_state)
 
 
-def build_edge_sync(topology: FedTopology, config: HierFAVGConfig, weights: jnp.ndarray):
-    """Edge aggregation (Algorithm 1 l.8, 25-28) with optional survival mask."""
+def build_level_sync(topology: Topology, config: HierFAVGConfig, weights: jnp.ndarray, level: int):
+    """Aggregation at one hierarchy level (Algorithm 1 l.25-31 generalized)
+    with optional survival mask.
 
-    def edge_sync(state: FedState, mask: Optional[jnp.ndarray] = None) -> FedState:
-        agg = lambda t: aggregation.grouped_weighted_mean(t, weights, topology.num_edges, mask)
-        params = agg(state.params)
-        opt_state = _maybe_sync_opt_state(state.opt_state, agg, config.sync_opt_state)
-        return state._replace(params=params, opt_state=opt_state)
-
-    return edge_sync
-
-
-def build_cloud_sync(topology: FedTopology, config: HierFAVGConfig, weights: jnp.ndarray):
-    """Cloud aggregation (Algorithm 1 l.18-21, 29-31) with optional mask.
-
-    Expressed hierarchically (edge means first, then global) so GSPMD emits
-    the ICI-then-DCN reduce schedule; numerically equal to the flat weighted
-    mean because the |D_i| weights compose.
+    Level 1 is edge aggregation; level ``spec.depth`` is cloud aggregation.
+    Expressed as the staged bottom-up composition (edge means first, then
+    region means, then global) so GSPMD emits the ICI-then-DCN reduce
+    schedule; numerically equal to the flat level-ℓ segment mean because
+    the |D_i| weights compose. The top level honors ``delta_cloud``.
     """
+    spec = as_hierarchy(topology)
+    if not 1 <= level <= spec.depth:
+        raise ValueError(f"level {level} outside 1..{spec.depth}")
+    is_top = level == spec.depth
 
-    def cloud_sync(state: FedState, mask: Optional[jnp.ndarray] = None) -> FedState:
-        if config.delta_cloud and state.anchor is not None:
+    def level_sync(state: FedState, mask: Optional[jnp.ndarray] = None) -> FedState:
+        if is_top and config.delta_cloud and state.anchor is not None:
             agg = lambda t: aggregation.delta_weighted_mean(t, state.anchor, weights, mask)
             params = agg(state.params)
             anchor = jax.tree_util.tree_map(jnp.copy, params)
         else:
-            agg = lambda t: aggregation.hierarchical_mean(t, weights, topology.num_edges, mask)
+            agg = lambda t: aggregation.hierarchical_segment_mean(t, weights, spec, level, mask)
             params = agg(state.params)
             anchor = state.anchor
         opt_state = _maybe_sync_opt_state(state.opt_state, agg, config.sync_opt_state)
         return state._replace(params=params, opt_state=opt_state, anchor=anchor)
 
-    return cloud_sync
+    return level_sync
+
+
+def build_edge_sync(topology: Topology, config: HierFAVGConfig, weights: jnp.ndarray):
+    """Edge aggregation (Algorithm 1 l.8, 25-28): level-1 sync."""
+    return build_level_sync(topology, config, weights, 1)
+
+
+def build_cloud_sync(topology: Topology, config: HierFAVGConfig, weights: jnp.ndarray):
+    """Cloud aggregation (Algorithm 1 l.18-21, 29-31): top-level sync."""
+    return build_level_sync(topology, config, weights, as_hierarchy(topology).depth)
 
 
 # ---------------------------------------------------------------------------
 # Fused train step
 # ---------------------------------------------------------------------------
 
+def _check_levels(spec: HierarchySpec, config: HierFAVGConfig) -> int:
+    if config.num_levels != spec.depth:
+        raise ValueError(
+            f"schedule has {config.num_levels} levels (kappas="
+            f"{config.kappa_vector}) but the hierarchy has depth {spec.depth}"
+        )
+    return spec.depth
+
+
 def build_train_step(
     loss_fn: LossFn,
     optimizer: GradientTransformation,
-    topology: FedTopology,
+    topology: Topology,
     config: HierFAVGConfig,
     weights: jnp.ndarray,
     *,
     grad_accum: int = 1,
 ):
-    """Fused HierFAVG step: local update + conditional two-level aggregation.
+    """Fused HierFAVG step: local update + conditional per-level aggregation.
 
     train_step(state, batch, mask=None) -> (state, metrics). ``mask`` is the
     (N,) survival vector from the failure detector (None == all alive).
+
+    The level intervals nest (prod(κ[:ℓ]) divides prod(κ[:ℓ+1])), so the set
+    of levels triggered at step k is a prefix 1..m; a single ``lax.switch``
+    on m picks the deepest triggered level, whose staged mean subsumes the
+    finer ones. m=0 (no boundary) is the identity branch.
     """
+    spec = as_hierarchy(topology)
+    depth = _check_levels(spec, config)
     local_step = build_local_step(loss_fn, optimizer, grad_accum=grad_accum)
-    edge_sync = build_edge_sync(topology, config, weights)
-    cloud_sync = build_cloud_sync(topology, config, weights)
+    level_syncs = [build_level_sync(spec, config, weights, l) for l in range(1, depth + 1)]
 
     def train_step(state: FedState, batch: PyTree, mask: Optional[jnp.ndarray] = None):
         state, metrics = local_step(state, batch)
         k = state.step
-
-        def do_cloud(s):
-            return cloud_sync(s, mask)
-
-        def do_edge_or_nothing(s):
-            return jax.lax.cond(config.is_edge_step(k), lambda t: edge_sync(t, mask), lambda t: t, s)
-
-        state = jax.lax.cond(config.is_cloud_step(k), do_cloud, do_edge_or_nothing, state)
+        deepest = sum(
+            config.is_level_step(l, k).astype(jnp.int32) for l in range(1, depth + 1)
+        )
+        branches = [lambda s: s] + [
+            (lambda sync: lambda s: sync(s, mask))(sync) for sync in level_syncs
+        ]
+        state = jax.lax.switch(deepest, branches, state)
         metrics["step"] = k
         return state, metrics
 
@@ -262,7 +349,7 @@ def build_train_step(
 def build_hier_round_async(
     loss_fn: LossFn,
     optimizer: GradientTransformation,
-    topology: FedTopology,
+    topology: Topology,
     config: HierFAVGConfig,
     weights: jnp.ndarray,
     *,
@@ -287,9 +374,17 @@ def build_hier_round_async(
     CloudMean − EdgeMean of the last snapshot (init_state must be built
     with ``delta_cloud=True`` so the anchor slot exists).
     """
+    spec = as_hierarchy(topology)
+    _check_levels(spec, config)
+    if spec.depth != 2:
+        # the stale-correction algebra is inherently two-level (edge mean +
+        # stale cross-edge term); mid-tier syncs would be silently skipped
+        raise ValueError(
+            f"build_hier_round_async supports two-level hierarchies only, got depth {spec.depth}"
+        )
     local_step = build_local_step(loss_fn, optimizer, grad_accum=grad_accum)
-    edge = lambda t, m: aggregation.grouped_weighted_mean(t, weights, topology.num_edges, m)
-    cloud = lambda t, m: aggregation.hierarchical_mean(t, weights, topology.num_edges, m)
+    edge = lambda t, m: aggregation.hierarchical_segment_mean(t, weights, spec, 1, m)
+    cloud = lambda t, m: aggregation.hierarchical_segment_mean(t, weights, spec, None, m)
 
     def hier_round(state: FedState, batches: PyTree, round_index: jnp.ndarray, mask=None):
         def body(s, b):
@@ -297,7 +392,7 @@ def build_hier_round_async(
             return s, m["loss"]
 
         state, losses = jax.lax.scan(body, state, batches)
-        is_cloud = ((round_index + 1) % config.kappa2) == 0
+        is_cloud = ((round_index + 1) % config.kappa2_effective) == 0
 
         def cloud_boundary(s: FedState) -> FedState:
             edge_now = edge(s.params, mask)
@@ -330,21 +425,27 @@ def build_hier_round_async(
 def build_hier_round(
     loss_fn: LossFn,
     optimizer: GradientTransformation,
-    topology: FedTopology,
+    topology: Topology,
     config: HierFAVGConfig,
     weights: jnp.ndarray,
     *,
     grad_accum: int = 1,
 ):
     """One full *edge interval* as a single jittable: kappa1 local steps
-    (scanned) + edge aggregation [+ cloud aggregation every kappa2 calls].
+    (scanned) + the deepest due aggregation (edge every round, level ℓ
+    every prod(κ₂..κ_ℓ) rounds).
 
     This is the deployable unit the dry-run lowers: batch leaves carry a
-    leading (kappa1,) axis; the cloud branch is selected by the round index.
+    leading (kappa1,) axis; the aggregation level is selected by the round
+    index via one ``lax.switch``.
     """
+    spec = as_hierarchy(topology)
+    depth = _check_levels(spec, config)
     local_step = build_local_step(loss_fn, optimizer, grad_accum=grad_accum)
-    edge_sync = build_edge_sync(topology, config, weights)
-    cloud_sync = build_cloud_sync(topology, config, weights)
+    level_syncs = [build_level_sync(spec, config, weights, l) for l in range(1, depth + 1)]
+    kv = config.kappa_vector
+    # rounds between level-ℓ aggregations: prod(κ₂..κ_ℓ)  (level 1 = every round)
+    round_intervals = [math.prod(kv[1:l]) for l in range(1, depth + 1)]
 
     def hier_round(state: FedState, batches: PyTree, round_index: jnp.ndarray, mask=None):
         def body(s, b):
@@ -352,10 +453,13 @@ def build_hier_round(
             return s, m["loss"]
 
         state, losses = jax.lax.scan(body, state, batches)
-        is_cloud = ((round_index + 1) % config.kappa2) == 0
-        state = jax.lax.cond(
-            is_cloud, lambda s: cloud_sync(s, mask), lambda s: edge_sync(s, mask), state
+        rounds_done = round_index + 1
+        deepest = sum(
+            ((rounds_done % iv) == 0).astype(jnp.int32) for iv in round_intervals
         )
+        # every round ends with at least the edge sync -> branch index deepest-1
+        branches = [(lambda sync: lambda s: sync(s, mask))(sync) for sync in level_syncs]
+        state = jax.lax.switch(deepest - 1, branches, state)
         return state, {"loss": jnp.mean(losses)}
 
     return hier_round

@@ -1,5 +1,5 @@
 from repro.data import partition, pipeline, synthetic
-from repro.data.partition import partition as make_partition, partition_stats
+from repro.data.partition import partition as make_partition, partition_hierarchy, partition_stats
 from repro.data.pipeline import FederatedBatcher, global_batch_iterator
 from repro.data.synthetic import ClassificationData, TokenCorpus, clustered_gaussians, embedding_corpus, token_corpus
 
@@ -8,6 +8,7 @@ __all__ = [
     "pipeline",
     "synthetic",
     "make_partition",
+    "partition_hierarchy",
     "partition_stats",
     "FederatedBatcher",
     "global_batch_iterator",

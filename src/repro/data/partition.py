@@ -135,6 +135,50 @@ def partition(
     raise ValueError(f"unknown partition kind: {kind}")
 
 
+def partition_hierarchy(
+    kind: str,
+    labels: np.ndarray,
+    spec,  # core.hierarchy.HierarchySpec
+    rng: np.random.Generator,
+    **kw,
+) -> List[np.ndarray]:
+    """Partition for a (possibly ragged) ``HierarchySpec``: same protocols,
+    but each edge deals to however many clients it actually has.
+
+    ``iid``/``simple_niid`` ignore the tree shape (client-level protocols);
+    ``edge_iid``/``edge_niid`` walk the level-1 fan-out so an edge with 7
+    clients covers 7 classes (edge_iid) or 7//2 = 3 classes (edge_niid,
+    the paper's C/2 rule).
+    """
+    n = spec.num_clients
+    if kind == "iid":
+        return partition_iid(labels, n, rng)
+    if kind == "simple_niid":
+        return partition_simple_niid(labels, n, rng, **kw)
+    if kind not in ("edge_iid", "edge_niid"):
+        raise ValueError(f"unknown partition kind: {kind}")
+
+    num_classes = int(labels.max()) + 1
+    sizes = spec.group_sizes(1)
+    if kind == "edge_iid" and int(sizes.max()) > num_classes:
+        raise ValueError("edge_iid needs clients_per_edge <= num_classes at every edge")
+    pools = _shards_by_class(labels, rng)
+    cursors = [0] * num_classes
+    per_client = labels.shape[0] // n
+    out: List[np.ndarray] = []
+    for l, c_l in enumerate(sizes):
+        cpe = kw.get("classes_per_edge", 0) or max(int(c_l) // 2, 1)
+        base = (l * cpe) % num_classes
+        for j in range(int(c_l)):
+            if kind == "edge_iid":
+                c = (j + l) % num_classes
+            else:
+                c = (base + (j % cpe)) % num_classes
+            take, cursors[c] = _balanced_take(pools[c], per_client, cursors[c])
+            out.append(np.sort(take))
+    return out
+
+
 def partition_stats(parts: List[np.ndarray], labels: np.ndarray) -> np.ndarray:
     """(num_clients, num_classes) label histogram — used by tests and the
     divergence probes to verify the protocol produced the intended skew."""

@@ -1,0 +1,3 @@
+from repro.dist import collectives, sharding
+
+__all__ = ["collectives", "sharding"]

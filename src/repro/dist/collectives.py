@@ -1,0 +1,60 @@
+"""Analytic per-link traffic of the HierFAVG collective schedule.
+
+Ring model: an all-reduce of S bytes over n participants moves
+2·S·(n−1)/n per participant. Edge aggregation is a grouped all-reduce over
+each edge's clients every κ₁ steps (ICI); cloud aggregation is an
+all-reduce over edges every κ₁κ₂ steps (DCN) — amortizing both by their
+interval gives steady-state bytes *per local step*, the paper's
+communication-frequency knob in bytes.
+
+``hierarchy_traffic_per_step`` generalizes to any (possibly ragged)
+``HierarchySpec``: level ℓ's hop is a grouped all-reduce over each tier-ℓ
+node's children every prod(κ[:ℓ]) steps. Ragged fan-out uses each group's
+own size; the returned per-level figure is the *maximum* over groups (the
+bottleneck link that sets the wall-clock of the hop).
+"""
+from __future__ import annotations
+
+from math import prod
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+
+def ring_allreduce_bytes(payload_bytes: float, participants: int) -> float:
+    """Per-participant wire bytes of a ring all-reduce."""
+    n = max(int(participants), 1)
+    return 2.0 * payload_bytes * (n - 1) / n
+
+
+def hierfavg_traffic_per_step(
+    per_dev_bytes: float,
+    clients_per_edge: int,
+    num_edges: int,
+    kappa1: int,
+    kappa2: int,
+) -> Tuple[float, float]:
+    """(edge_bytes_per_step, cloud_bytes_per_step) for the two-level tree."""
+    edge = ring_allreduce_bytes(per_dev_bytes, clients_per_edge) / kappa1
+    cloud = ring_allreduce_bytes(per_dev_bytes, num_edges) / (kappa1 * kappa2)
+    return edge, cloud
+
+
+def hierarchy_traffic_per_step(
+    per_dev_bytes: float,
+    spec,  # core.hierarchy.HierarchySpec
+    kappas: Sequence[int],
+) -> List[float]:
+    """Per-level bottleneck bytes per local step, bottom-up (level 1 = edge
+    hop ... level depth = cloud hop)."""
+    kv = tuple(int(k) for k in kappas)
+    if len(kv) != spec.depth:
+        raise ValueError(f"kappas {kv} vs hierarchy depth {spec.depth}")
+    out = []
+    for level in range(1, spec.depth + 1):
+        # participants of a tier-level node = its tier-(level-1) children
+        parents = np.asarray(spec.parents[level - 1])
+        sizes = np.bincount(parents, minlength=spec.num_nodes(level))
+        interval = prod(kv[:level])
+        out.append(ring_allreduce_bytes(per_dev_bytes, int(sizes.max())) / interval)
+    return out

@@ -1,7 +1,18 @@
 from repro.fed import failures, runner, topology
-from repro.fed.failures import FailureSimulator, StragglerModel, combine_masks
+from repro.fed.failures import (
+    FailureSimulator,
+    StragglerModel,
+    SubtreeOutageSimulator,
+    combine_masks,
+)
 from repro.fed.runner import FederatedRunner, RunnerConfig
-from repro.fed.topology import MeshFedPlan, edge_replica_groups, plan_for_mesh
+from repro.fed.topology import (
+    MeshFedPlan,
+    edge_replica_groups,
+    plan_for_hierarchy,
+    plan_for_mesh,
+    replica_groups,
+)
 
 __all__ = [
     "failures",
@@ -9,10 +20,13 @@ __all__ = [
     "topology",
     "FailureSimulator",
     "StragglerModel",
+    "SubtreeOutageSimulator",
     "combine_masks",
     "FederatedRunner",
     "RunnerConfig",
     "MeshFedPlan",
     "edge_replica_groups",
+    "plan_for_hierarchy",
     "plan_for_mesh",
+    "replica_groups",
 ]

@@ -12,6 +12,13 @@ over survivors — this module produces those masks:
   aggregation (deadline-based partial aggregation) but keeps its local
   model and rejoins at the next boundary — exactly the paper's weighted
   mean restricted to the participating set.
+* ``SubtreeOutageSimulator`` — *correlated* failures: an edge server (or a
+  whole region, any tier of a ragged ``HierarchySpec``) goes down and
+  takes every client beneath it out of the aggregation at once — the
+  realistic failure unit of a hierarchical deployment (a client loses its
+  uplink when its edge does). The zero-survivor-group rule in
+  ``core.aggregation`` then keeps the subtree's parameters frozen until
+  the node recovers.
 * ``deadline_for`` — the auto-deadline policy: p-th percentile of the
   latency model times a slack factor.
 
@@ -87,6 +94,48 @@ class StragglerModel:
         lat = self.interval_latency(kappa1)
         d = deadline if deadline is not None else self.deadline_for(kappa1)
         return (lat <= d).astype(np.float32), d
+
+
+@dataclasses.dataclass
+class SubtreeOutageSimulator:
+    """Two-state Markov chain per tier-``tier`` node of a hierarchy: when a
+    node is down, every client in its subtree is masked out together.
+
+    spec: a ``core.hierarchy.HierarchySpec`` (or FedTopology via
+    ``as_hierarchy``); tier 1 = edge servers, higher tiers = regions.
+    """
+
+    spec: object
+    tier: int = 1
+    p_fail: float = 0.0
+    p_recover: float = 0.5
+    seed: int = 0
+
+    def __post_init__(self):
+        from repro.core.hierarchy import as_hierarchy
+
+        self.spec = as_hierarchy(self.spec)
+        if not 1 <= self.tier <= self.spec.depth:
+            raise ValueError(f"tier {self.tier} outside 1..{self.spec.depth}")
+        self._segments = self.spec.segments(self.tier)
+        self._num_nodes = self.spec.num_nodes(self.tier)
+        self._rng = np.random.default_rng(self.seed)
+        self.alive = np.ones(self._num_nodes, bool)
+
+    def step(self) -> np.ndarray:
+        """Advance one boundary; returns the (N,) client survival mask."""
+        u = self._rng.random(self._num_nodes)
+        die = self.alive & (u < self.p_fail)
+        recover = (~self.alive) & (u < self.p_recover)
+        self.alive = (self.alive & ~die) | recover
+        return self.alive[self._segments].astype(np.float32)
+
+    def state_dict(self):
+        return {"alive": self.alive.copy(), "rng": self._rng.bit_generator.state}
+
+    def load_state_dict(self, s):
+        self.alive = s["alive"].copy()
+        self._rng.bit_generator.state = s["rng"]
 
 
 def combine_masks(*masks: Optional[np.ndarray]) -> Optional[np.ndarray]:

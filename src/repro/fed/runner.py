@@ -16,7 +16,6 @@ so experiments read time-to-accuracy directly off the run log.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
@@ -24,7 +23,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cost_model as cm
-from repro.core.hierfavg import FedState, FedTopology, HierFAVGConfig, build_hier_round, init_state
+from repro.core.hierfavg import (
+    FedState,
+    HierFAVGConfig,
+    Topology,
+    build_hier_round,
+    init_state,
+)
 from repro.fed.failures import FailureSimulator, StragglerModel, combine_masks
 
 PyTree = Any
@@ -56,7 +61,7 @@ class FederatedRunner:
         *,
         loss_fn,
         optimizer,
-        topology: FedTopology,
+        topology: Topology,  # FedTopology or a ragged HierarchySpec
         hier_config: HierFAVGConfig,
         data_sizes: np.ndarray,
         batcher,  # FederatedBatcher
@@ -137,8 +142,9 @@ class FederatedRunner:
 
             sim_t = sim_e = 0.0
             if self.costs is not None:
-                sim_t = cm.time_at_step(self.costs, k1, self.hier_config.kappa2, step)
-                sim_e = cm.energy_at_step(self.costs, k1, self.hier_config.kappa2, step)
+                k2 = self.hier_config.kappa2_effective
+                sim_t = cm.time_at_step(self.costs, k1, k2, step)
+                sim_e = cm.energy_at_step(self.costs, k1, k2, step)
 
             acc = None
             if self.eval_fn is not None and self.cfg.eval_every and (r + 1) % self.cfg.eval_every == 0:

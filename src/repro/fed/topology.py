@@ -15,6 +15,11 @@ sharded over them; edges are contiguous groups of clients; pods are
 contiguous groups of edges. ``client_axis_sharding`` returns the
 PartitionSpec members for the leading client axis, and ``replica_groups``
 exposes the expected grouped-collective structure for HLO verification.
+
+Ragged / deeper trees: ``plan_for_hierarchy`` maps any
+``core.hierarchy.HierarchySpec`` onto the same meshes — segment
+boundaries need not align with device boundaries, and ``replica_groups``
+reports the per-level grouped-collective structure for any tier.
 """
 from __future__ import annotations
 
@@ -23,6 +28,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.hierarchy import HierarchySpec, as_hierarchy
 from repro.core.hierfavg import FedTopology
 
 
@@ -34,14 +40,21 @@ class MeshFedPlan:
     fed_axes: Tuple[str, ...]  # mesh axes the client dim is sharded over
     num_pods: int
     edges_per_pod: int
+    hierarchy: Optional[HierarchySpec] = None  # ragged tree (None -> uniform)
 
     @property
     def num_clients(self) -> int:
-        return self.topology.num_clients
+        # the spec is authoritative for ragged trees (the uniform FedTopology
+        # view is only exact for equal fan-out)
+        return self.spec.num_clients
 
     @property
     def num_edges(self) -> int:
-        return self.topology.num_edges
+        return self.spec.num_nodes(1)
+
+    @property
+    def spec(self) -> HierarchySpec:
+        return self.hierarchy if self.hierarchy is not None else self.topology.hierarchy()
 
 
 def plan_for_mesh(
@@ -66,10 +79,43 @@ def plan_for_mesh(
     )
 
 
+def plan_for_hierarchy(mesh, spec: HierarchySpec) -> MeshFedPlan:
+    """Build a plan for an arbitrary ragged tree on a ("pod",)? ("data","model")
+    mesh. The client axis is sharded over the federated axes exactly as in
+    the uniform case — segment boundaries need not align with device
+    boundaries (segment_sum lowers to grouped collectives over whichever
+    devices hold the segment's rows)."""
+    axis_names = mesh.axis_names
+    num_pods = mesh.shape["pod"] if "pod" in axis_names else 1
+    fed_axes = tuple(a for a in ("pod", "data") if a in axis_names)
+    num_edges = spec.num_nodes(1)
+    sizes = spec.group_sizes(1)
+    # the uniform FedTopology view (used by two-level consumers) is exact
+    # only for equal fan-out; ragged plans expose the spec directly
+    cpe = int(sizes[0]) if spec.is_uniform(1) else int(round(spec.num_clients / num_edges))
+    topo = FedTopology(num_edges=num_edges, clients_per_edge=max(cpe, 1))
+    return MeshFedPlan(
+        topology=topo,
+        fed_axes=fed_axes,
+        num_pods=num_pods,
+        edges_per_pod=max(num_edges // num_pods, 1),
+        hierarchy=spec,
+    )
+
+
+def replica_groups(plan_or_spec, level: int = 1) -> List[List[int]]:
+    """Client-index groups for the level-``level`` grouped collective —
+    the expected replica_groups of the lowered HLO at that hop."""
+    if isinstance(plan_or_spec, MeshFedPlan):
+        spec = plan_or_spec.spec
+    else:
+        spec = as_hierarchy(plan_or_spec)
+    return spec.replica_groups(level)
+
+
 def edge_replica_groups(plan: MeshFedPlan) -> List[List[int]]:
     """Client-index groups for edge aggregation (contiguous blocks)."""
-    c = plan.topology.clients_per_edge
-    return [list(range(l * c, (l + 1) * c)) for l in range(plan.num_edges)]
+    return replica_groups(plan, 1)
 
 
 def pod_of_edge(plan: MeshFedPlan, edge: int) -> int:

@@ -1,19 +1,31 @@
-"""Pallas TPU kernel for the paper's aggregation operator.
+"""Pallas TPU kernels for the paper's aggregation operator — uniform and
+ragged group shapes.
 
-Fuses, per parameter tile, the whole EdgeAggregation/CloudAggregation body:
-  masked-weighted sum over each contiguous client group, safe divide,
-  broadcast back to the members — one HBM read + one HBM write of the
-  stacked parameters (the jnp reference does reshape/sum/where in ~4
-  passes). On the aggregation-bound cloud hop, this halves HBM traffic.
+Both kernels fuse, per parameter tile, the whole EdgeAggregation/
+CloudAggregation body: masked-weighted sum over each client group, safe
+divide, broadcast back to the members — one HBM read + one HBM write of the
+stacked parameters (the jnp reference does reshape/sum/where in ~4 passes).
+On the aggregation-bound cloud hop, this halves HBM traffic.
 
 TPU adaptation: the client axis N is tiny (16-32) and the parameter axis is
 huge, so we tile the *parameter* dim into lane-aligned blocks of 128·k and
-keep the whole client column resident in VMEM: block (N, bd). Group
-reduction happens in-register via a (G, C, bd) reshape — no cross-block
-communication, perfectly parallel grid. The weighted sum runs in f32 on the
-VPU regardless of the storage dtype.
+keep the whole client column resident in VMEM: block (N, bd). The weighted
+sum runs in f32 on the VPU/MXU regardless of the storage dtype.
 
-Grid: (ceil(D / bd),). VMEM per step: N·bd·(bytes) ≈ 32·512·4 = 64 KiB.
+* ``grouped_mean_pallas`` — equal contiguous groups. Reduction in-register
+  via a (G, C, bd) reshape; no cross-block communication, perfectly
+  parallel grid.
+* ``segment_mean_pallas`` — ragged groups. The sorted per-client segment
+  ids ride in as a scalar-prefetch argument (SMEM-resident, shared by all
+  grid steps; see ``docs/hierarchy.md``). The kernel builds the (G, N)
+  membership one-hot from the ids with a broadcasted iota compare and
+  reduces with two small matmuls: ``onehot @ (x*w)`` for the group sums
+  and ``onehotᵀ @ mean`` for the broadcast-back — MXU work of size
+  G×N×bd per tile, still exactly one HBM read + one HBM write of x.
+  Zero-survivor groups keep their members' rows via the alive column.
+
+Grid: (ceil(D / bd),). VMEM per step: N·bd·(bytes) ≈ 32·512·4 = 64 KiB
+(uniform) plus the (G,N)+(G,bd) one-hot/means scratch for ragged.
 """
 from __future__ import annotations
 
@@ -22,6 +34,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _agg_kernel(x_ref, w_ref, o_ref, *, num_groups: int):
@@ -72,4 +85,67 @@ def grouped_mean_pallas(
         out_shape=jax.ShapeDtypeStruct((n, dp), x.dtype),
         interpret=interpret,
     )(xp, w2)
+    return out[:, :d] if pad else out
+
+
+def _segment_kernel(seg_ref, x_ref, w_ref, o_ref, *, num_segments: int):
+    """seg: (N,) int32 in SMEM; x: (N, bd) tile; w: (N, 1); o: (N, bd)."""
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    n, _ = x.shape
+    seg = seg_ref[...]
+    gids = jax.lax.broadcasted_iota(jnp.int32, (num_segments, n), 0)
+    onehot = (seg[None, :] == gids).astype(jnp.float32)  # (G, N)
+    num = jnp.dot(onehot, x * w, preferred_element_type=jnp.float32)  # (G, bd)
+    den = jnp.dot(onehot, w, preferred_element_type=jnp.float32)  # (G, 1)
+    mean = num / jnp.where(den > 0, den, 1.0)
+    alive = (den > 0).astype(jnp.float32)  # (G, 1)
+    # broadcast-back: members of alive groups get the mean, dead groups
+    # keep their input rows (onehotᵀ @ alive is each member's liveness)
+    back = jnp.dot(onehot.T, mean * alive, preferred_element_type=jnp.float32)
+    keep = 1.0 - jnp.dot(onehot.T, alive, preferred_element_type=jnp.float32)
+    o_ref[...] = (back + x * keep).astype(o_ref.dtype)
+
+
+def segment_mean_pallas(
+    x: jnp.ndarray,
+    weights: jnp.ndarray,
+    segment_ids,
+    num_segments: int,
+    *,
+    block_d: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Ragged-group aggregation: x (N, D) stacked flat params; weights (N,)
+    already masked; segment_ids (N,) sorted ints in [0, num_segments).
+
+    Returns the per-segment weighted mean broadcast back to members, (N, D);
+    zero-weight segments keep their rows. D is padded to a block multiple
+    internally. The ids travel via scalar prefetch and are resident in SMEM
+    for every grid step.
+    """
+    n, d = x.shape
+    seg = jnp.asarray(segment_ids, jnp.int32)
+    if seg.shape != (n,):
+        raise ValueError(f"segment_ids shape {seg.shape} != ({n},)")
+    pad = (-d) % block_d
+    xp = jnp.pad(x, ((0, 0), (0, pad))) if pad else x
+    dp = d + pad
+    w2 = weights.reshape(n, 1).astype(jnp.float32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(dp // block_d,),
+        in_specs=[
+            pl.BlockSpec((n, block_d), lambda i, seg_ref: (0, i)),
+            pl.BlockSpec((n, 1), lambda i, seg_ref: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n, block_d), lambda i, seg_ref: (0, i)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_segment_kernel, num_segments=num_segments),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, dp), x.dtype),
+        interpret=interpret,
+    )(seg, xp, w2)
     return out[:, :d] if pad else out

@@ -45,6 +45,19 @@ def grouped_mean(x, weights, num_groups, *, block_d: int = 512):
     )
 
 
+def segment_mean(x, weights, segment_ids, num_segments, *, block_d: int = 512):
+    """Ragged-group aggregation over sorted segment ids (N,). Dispatches to
+    the uniform reshape kernel when the ids form equal contiguous blocks
+    (same predicate as the jnp path in core.aggregation)."""
+    from repro.core.aggregation import _static_uniform_groups
+
+    if _static_uniform_groups(segment_ids, num_segments) is not None:
+        return grouped_mean(x, weights, num_segments, block_d=block_d)
+    return _ha.segment_mean_pallas(
+        x, weights, segment_ids, num_segments, block_d=block_d, interpret=use_interpret()
+    )
+
+
 def flash_attention(q, k, v, *, causal=True, window=0, block_q=128, block_k=128):
     """(BH, S, d) fused attention; falls back to ref for tiny heads."""
     return _fa.flash_attention_pallas(

@@ -22,6 +22,42 @@ def grouped_mean_ref(x: jnp.ndarray, weights: jnp.ndarray, num_groups: int) -> j
     return out.reshape(n, d).astype(x.dtype)
 
 
+def segment_mean_ref(
+    x: jnp.ndarray, weights: jnp.ndarray, segment_ids, num_segments: int,
+    block_d: int = 512,
+) -> jnp.ndarray:
+    """(N, D) stacked params, (N,) masked weights, (N,) sorted segment ids
+    -> per-segment weighted mean broadcast back; zero-weight segments keep
+    their rows.
+
+    Mirrors the Pallas kernel exactly — same one-hot matmul formulation AND
+    the same block_d column tiling — so interpret-mode kernel output is
+    bit-identical for f32 (XLA's matmul reduction order depends on the
+    operand widths, so matching the tiling is part of matching the math).
+    """
+    seg = jnp.asarray(segment_ids, jnp.int32)
+    n, d = x.shape
+    w = weights.reshape(-1, 1).astype(jnp.float32)
+    gids = jax.lax.broadcasted_iota(jnp.int32, (num_segments, n), 0)
+    onehot = (seg[None, :] == gids).astype(jnp.float32)  # (G, N)
+    den = jnp.dot(onehot, w, preferred_element_type=jnp.float32)
+    safe = jnp.where(den > 0, den, 1.0)
+    alive = (den > 0).astype(jnp.float32)
+    keep = 1.0 - jnp.dot(onehot.T, alive, preferred_element_type=jnp.float32)
+
+    pad = (-d) % block_d
+    xp = jnp.pad(x, ((0, 0), (0, pad))) if pad else x
+    outs = []
+    for i in range(xp.shape[1] // block_d):
+        xt = xp[:, i * block_d : (i + 1) * block_d].astype(jnp.float32)
+        num = jnp.dot(onehot, xt * w, preferred_element_type=jnp.float32)
+        mean = num / safe
+        back = jnp.dot(onehot.T, mean * alive, preferred_element_type=jnp.float32)
+        outs.append(back + xt * keep)
+    out = jnp.concatenate(outs, axis=1)[:, :d]
+    return out.astype(x.dtype)
+
+
 def attention_ref(
     q: jnp.ndarray,
     k: jnp.ndarray,

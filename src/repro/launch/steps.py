@@ -19,8 +19,8 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeSpec
-from repro.core.hierfavg import HierFAVGConfig, build_train_step, init_state
-from repro.dist.sharding import ShardingRules, fed_rules, serve_rules, topology_for
+from repro.core.hierfavg import build_train_step, init_state
+from repro.dist.sharding import fed_rules, serve_rules, topology_for
 from repro.launch import specs as specs_mod
 from repro.models import transformer
 from repro.optim import sgd
@@ -86,7 +86,7 @@ def build_train_cell(
     rules = fed_rules(cfg, mesh)
     topo = topology_for(cfg, mesh)
     n = topo.num_clients
-    hier = HierFAVGConfig(kappa1=cfg.fed.kappa1, kappa2=cfg.fed.kappa2)
+    hier = cfg.fed.schedule()
     weights = jnp.ones((n,), jnp.float32)
     loss_fn = transformer.make_loss_fn(cfg)
     opt = sgd(lr)
@@ -194,7 +194,7 @@ def build_aggregation_cells(cfg: ArchConfig, mesh) -> Tuple[Cell, Cell]:
     rules = fed_rules(cfg, mesh)
     topo = topology_for(cfg, mesh)
     n = topo.num_clients
-    hier = HierFAVGConfig(kappa1=cfg.fed.kappa1, kappa2=cfg.fed.kappa2)
+    hier = cfg.fed.schedule()
     weights = jnp.ones((n,), jnp.float32)
 
     def init_fn():

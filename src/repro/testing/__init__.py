@@ -1,0 +1,3 @@
+from repro.testing.property import HAVE_HYPOTHESIS, given, settings, st
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

@@ -5,7 +5,7 @@ Property-based (hypothesis) where the paper states monotonicity/limits.
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing import given, settings, st
 
 from repro.core import convergence as cv
 

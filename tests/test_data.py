@@ -1,7 +1,7 @@
 """Data pipeline: partition protocols (Section IV-A) + restart-safe batching."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing import given, settings, st
 
 from repro.data import partition as pt
 from repro.data.pipeline import FederatedBatcher
