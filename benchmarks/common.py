@@ -16,7 +16,7 @@ import numpy as np
 
 from repro.core import FedTopology, HierFAVGConfig, cost_model as cm
 from repro.data import FederatedBatcher, clustered_gaussians, make_partition, partition_hierarchy
-from repro.fed import FederatedRunner, RunnerConfig
+from repro.fed import FederatedRunner, RunnerConfig, TransportSpec
 from repro.models import cnn
 from repro.optim import exponential_decay, sgd
 
@@ -57,14 +57,19 @@ def build_problem(seed=0, partition="edge_iid", num_clients=50, num_edges=5,
 
 
 def run_schedule(kappa1, kappa2, *, partition="edge_iid", rounds=None, seed=0,
-                 workload="mnist", eval_every=1, lr=0.15, class_sep=3.5):
+                 workload="mnist", eval_every=1, lr=0.15, class_sep=3.5,
+                 transport=None):
     """Train one (kappa1, kappa2) schedule; returns the runner (history has
-    loss/accuracy/T/E per round)."""
+    loss/accuracy/T/E per round). ``transport`` (a ``fed.transport.
+    TransportSpec`` or codec string like 'identity/int8') compresses the
+    uplinks; T/E/wire accounting then reflects the compressed bytes."""
+    if isinstance(transport, str):
+        transport = TransportSpec.parse(transport)
     init, apply_fn, eval_fn, batcher, _ = build_problem(
         seed=seed, partition=partition, class_sep=class_sep
     )
     topo = FedTopology(num_edges=5, clients_per_edge=10)
-    hier = HierFAVGConfig(kappa1=kappa1, kappa2=kappa2)
+    hier = HierFAVGConfig(kappa1=kappa1, kappa2=kappa2, transport=transport)
     if rounds is None:
         rounds = max(240 // kappa1, 6)
     runner = FederatedRunner(
@@ -84,14 +89,17 @@ def run_schedule(kappa1, kappa2, *, partition="edge_iid", rounds=None, seed=0,
 
 
 def run_hierarchy_schedule(spec, kappas, *, partition="edge_iid", rounds=None, seed=0,
-                           workload="mnist", eval_every=1, lr=0.15, class_sep=3.5):
+                           workload="mnist", eval_every=1, lr=0.15, class_sep=3.5,
+                           transport=None):
     """Train one κ-vector schedule on an arbitrary (possibly ragged)
     HierarchySpec; returns the runner. The two-level uniform call is
     equivalent to ``run_schedule`` on the matching FedTopology."""
+    if isinstance(transport, str):
+        transport = TransportSpec.parse(transport)
     init, apply_fn, eval_fn, batcher, _ = build_problem(
         seed=seed, partition=partition, class_sep=class_sep, spec=spec
     )
-    hier = HierFAVGConfig.multi_level(kappas)
+    hier = HierFAVGConfig.multi_level(kappas, transport=transport)
     if rounds is None:
         rounds = max(240 // hier.kappa1, 6)
     runner = FederatedRunner(

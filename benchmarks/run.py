@@ -1,11 +1,20 @@
 """Benchmark entry point: one bench per paper table/figure + framework
-benches. ``PYTHONPATH=src python -m benchmarks.run [--only name]``."""
+benches. ``PYTHONPATH=src python -m benchmarks.run [--only name]
+[--json out.json]``.
+
+``--json`` writes per-bench machine-readable results (status, wall time,
+and whatever the bench's ``main()`` returned) — the start of the
+``BENCH_*.json`` perf trajectory; CI runs the kernel bench through it as
+an interpret-mode smoke gate.
+"""
 import argparse
+import json
 import time
 import traceback
 
 from benchmarks import (
     aggregation_scaling,
+    compression_tradeoff,
     fig2_topologies,
     fig4_convergence,
     kernel_bench,
@@ -21,6 +30,7 @@ BENCHES = {
     "fig2_topologies": fig2_topologies.main,
     "kernel_bench": kernel_bench.main,
     "aggregation_scaling": aggregation_scaling.main,
+    "compression_tradeoff": compression_tradeoff.main,
     "roofline_report": roofline_report.main,
 }
 
@@ -28,20 +38,37 @@ BENCHES = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, metavar="OUT.json",
+                    help="write per-bench machine-readable results")
     args = ap.parse_args()
+    if args.only and args.only not in BENCHES:
+        # an unknown name must not silently pass (CI gates on this entry point)
+        raise SystemExit(f"unknown bench {args.only!r}; choose from {sorted(BENCHES)}")
     failures = []
+    results = {}
     for name, fn in BENCHES.items():
         if args.only and args.only != name:
             continue
         print(f"\n===== {name} =====", flush=True)
         t0 = time.time()
         try:
-            fn()
-            print(f"{name},elapsed_s={time.time()-t0:.1f}")
+            ret = fn()
+            elapsed = time.time() - t0
+            results[name] = {"status": "ok", "elapsed_s": round(elapsed, 3), "result": ret}
+            print(f"{name},elapsed_s={elapsed:.1f}")
         except Exception as e:
             failures.append(name)
+            results[name] = {
+                "status": "failed", "elapsed_s": round(time.time() - t0, 3),
+                "error": f"{type(e).__name__}: {e}",
+            }
             print(f"{name},FAILED: {e}")
             traceback.print_exc()
+    if args.json:
+        with open(args.json, "w") as f:
+            # default=str keeps numpy scalars / dataclasses serializable
+            json.dump(results, f, indent=2, default=str)
+        print(f"wrote {args.json}")
     if failures:
         raise SystemExit(f"benches failed: {failures}")
 

@@ -5,6 +5,10 @@ IIb: CIFAR-workload constants, simple-NIID partition, alpha=0.70.
 Steps-to-accuracy are MEASURED on the synthetic stand-in; T/E use the
 paper's Table I cost constants — the trade-off structure (T falls with
 kappa2; E is U-shaped) is the reproduction target.
+
+IIc [beyond paper]: the IIa edge-IID sweep rerun with an int8 cloud hop
+(``fed.transport``) — same schedules, ~¼ the DCN bytes, so the T_alpha
+accounting reflects the compressed wire.
 """
 from benchmarks.common import first_reach, run_schedule
 
@@ -22,6 +26,18 @@ def main(csv=True):
             steps, T, E = hit
             rows.append((dist, k1, k2, steps, T, E))
             print(f"table2a_{dist}_k1={k1}_k2={k2},steps={steps},T={T:.1f}s,E={E:.2f}J")
+
+    print("# Table IIc (mnist costs, alpha=0.85, edge IID, int8 cloud hop)")
+    for k1, k2 in ((30, 2), (15, 4), (6, 10)):
+        r = run_schedule(k1, k2, partition="edge_iid", workload="mnist",
+                         rounds=360 // k1, transport="identity/int8")
+        hit = first_reach(r, 0.85)
+        if hit is None:
+            print(f"table2c_int8_k1={k1}_k2={k2},NOT_REACHED")
+            continue
+        steps, T, E = hit
+        rows.append(("edge_iid_int8_cloud", k1, k2, steps, T, E))
+        print(f"table2c_int8_k1={k1}_k2={k2},steps={steps},T={T:.1f}s,E={E:.2f}J")
 
     print("# Table IIb (cifar costs, alpha=0.70, simple NIID)")
     for k1, k2 in ((50, 1), (25, 2), (10, 5), (5, 10)):

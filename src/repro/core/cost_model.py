@@ -69,6 +69,26 @@ class WorkloadCosts:
     def t_comm_cloud(self) -> float:
         return self.cloud_latency_mult * self.t_comm_edge
 
+    def with_bits(self, edge_bits_per_param: float = 32.0, cloud_bits_per_param: float = 32.0) -> "WorkloadCosts":
+        """Costs under a compressed transport (``fed.transport``): uploads
+        carry ``bits/32`` of the fp32 payload per hop. Edge comm time/energy
+        scale by the edge ratio; ``cloud_latency_mult`` is rescaled by the
+        cloud/edge ratio so ``t_comm_cloud`` lands at exactly
+        ``mult * (cloud_bits/32) * t_comm_edge_orig`` — every downstream
+        schedule formula then accounts the compressed wire unchanged.
+        Compute costs are untouched (quantization is roofline-negligible;
+        see ``docs/compression.md``)."""
+        if edge_bits_per_param <= 0 or cloud_bits_per_param <= 0:
+            raise ValueError("bits per parameter must be positive")
+        es = edge_bits_per_param / 32.0
+        cs = cloud_bits_per_param / 32.0
+        return dataclasses.replace(
+            self,
+            t_comm_edge=self.t_comm_edge * es,
+            e_comm_edge=self.e_comm_edge * es,
+            cloud_latency_mult=self.cloud_latency_mult * (cs / es),
+        )
+
 
 # Paper workloads. D (bits touched per local iteration) and M (model bits)
 # back-derived from the architecture: M = #params * 32; D chosen by the paper
@@ -157,6 +177,17 @@ class ClusterCosts:
     t_step: float  # one local update (compute+memory roofline max)
     t_edge_agg: float  # grouped intra-pod all-reduce (ICI)
     t_cloud_agg: float  # cross-pod all-reduce (DCN)
+
+    def with_bits(self, edge_bits_per_param: float = 32.0, cloud_bits_per_param: float = 32.0) -> "ClusterCosts":
+        """Collective times under compressed transport: bandwidth-bound
+        all-reduce time scales with the wire bytes."""
+        if edge_bits_per_param <= 0 or cloud_bits_per_param <= 0:
+            raise ValueError("bits per parameter must be positive")
+        return dataclasses.replace(
+            self,
+            t_edge_agg=self.t_edge_agg * edge_bits_per_param / 32.0,
+            t_cloud_agg=self.t_cloud_agg * cloud_bits_per_param / 32.0,
+        )
 
     def interval_time(self, kappa1: int, kappa2: int) -> float:
         return kappa1 * kappa2 * self.t_step + kappa2 * self.t_edge_agg + self.t_cloud_agg

@@ -86,8 +86,26 @@ class HierFAVGConfig:
     delta_cloud: bool = False  # cloud agg in delta-vs-anchor form (compressible)
     async_cloud: bool = False  # 1-interval-stale cloud agg (overlaps DCN; beyond paper)
     kappas: Optional[Tuple[int, ...]] = None  # per-level κ vector (None -> (κ₁, κ₂))
+    transport: Optional[Any] = None  # fed.transport.TransportSpec: one LinkCodec per level
 
     def __post_init__(self):
+        if self.transport is not None:
+            if not hasattr(self.transport, "codec") or not hasattr(self.transport, "is_trivial"):
+                raise TypeError(
+                    f"transport must be a fed.transport.TransportSpec, got "
+                    f"{type(self.transport).__name__}"
+                )
+            n_levels = len(self.kappas) if self.kappas is not None else 2
+            if self.transport.depth != n_levels:
+                raise ValueError(
+                    f"transport has {self.transport.depth} levels but the schedule has "
+                    f"{n_levels} (kappas={self.kappas or (self.kappa1, self.kappa2)})"
+                )
+            if not self.transport.is_trivial and (self.delta_cloud or self.async_cloud):
+                raise ValueError(
+                    "a non-identity transport subsumes delta_cloud and is incompatible "
+                    "with async_cloud (both repurpose the anchor slot); drop those flags"
+                )
         if self.kappas is not None:
             kv = tuple(int(k) for k in self.kappas)
             object.__setattr__(self, "kappas", kv)
@@ -141,13 +159,21 @@ class HierFAVGConfig:
     def is_cloud_step(self, k) -> jnp.ndarray:
         return self.is_level_step(self.num_levels, k)
 
+    @property
+    def transport_active(self) -> bool:
+        """True iff some level's uplink actually compresses (an all-identity
+        TransportSpec is numerically the uncompressed protocol and allocates
+        no anchor/residual state)."""
+        return self.transport is not None and not self.transport.is_trivial
+
 
 class FedState(NamedTuple):
     step: jnp.ndarray  # local update counter k
     params: PyTree  # stacked (N, ...) client models
     opt_state: PyTree  # stacked per-client optimizer state
     rng: jax.Array
-    anchor: Optional[PyTree] = None  # last cloud broadcast (delta_cloud mode)
+    anchor: Optional[PyTree] = None  # last broadcast (delta_cloud / compressed transport)
+    residual: Optional[PyTree] = None  # per-client error-feedback residual (EF codecs)
 
 
 def replicate_for_clients(params: PyTree, num_clients: int) -> PyTree:
@@ -173,11 +199,21 @@ def init_state(
         anchor = jax.tree_util.tree_map(
             lambda p: jnp.zeros(p.shape, jnp.float32), stacked
         )
-    elif config.delta_cloud:
+    elif config.delta_cloud or config.transport_active:
+        # last broadcast each client received: deltas w − anchor are what a
+        # compressed uplink carries
         anchor = jax.tree_util.tree_map(jnp.copy, stacked)
     else:
         anchor = None
-    return FedState(step=jnp.zeros([], jnp.int32), params=stacked, opt_state=opt_state, rng=rng, anchor=anchor)
+    residual = None
+    if config.transport_active and config.transport.needs_residual:
+        residual = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), stacked
+        )
+    return FedState(
+        step=jnp.zeros([], jnp.int32), params=stacked, opt_state=opt_state,
+        rng=rng, anchor=anchor, residual=residual,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -236,7 +272,10 @@ def build_local_step(
         )
         metrics = {"loss": jnp.mean(losses), "grad_norm": gnorm}
         return (
-            FedState(step=state.step + 1, params=params, opt_state=opt_state, rng=rng, anchor=state.anchor),
+            FedState(
+                step=state.step + 1, params=params, opt_state=opt_state, rng=rng,
+                anchor=state.anchor, residual=state.residual,
+            ),
             metrics,
         )
 
@@ -262,23 +301,85 @@ def build_level_sync(topology: Topology, config: HierFAVGConfig, weights: jnp.nd
     region means, then global) so GSPMD emits the ICI-then-DCN reduce
     schedule; numerically equal to the flat level-ℓ segment mean because
     the |D_i| weights compose. The top level honors ``delta_cloud``.
+
+    Compressed transport: when ``config.transport`` assigns this level a
+    non-identity ``LinkCodec``, each client's upload is its model delta
+    w − w_anchor (anchor = last broadcast it received) pushed through the
+    codec's encode∘decode before aggregating — the aggregator averages what
+    the wire actually delivered: mean_g(anchor + decode(encode(w − anchor)))
+    = anchor + mean_g(decode(...)) since the anchor is common within a
+    group. Error-feedback codecs carry their residual in
+    ``FedState.residual``; the anchor re-syncs to the fresh broadcast after
+    *every* level sync (identity levels included) so deltas never straddle
+    two broadcasts. Identity-only transports take the exact uncompressed
+    path — bitwise unchanged numerics.
     """
     spec = as_hierarchy(topology)
     if not 1 <= level <= spec.depth:
         raise ValueError(f"level {level} outside 1..{spec.depth}")
     is_top = level == spec.depth
+    codec = None
+    if config.transport_active:
+        codec = config.transport.codec(level)
+        if codec.is_identity:
+            codec = None
+    seg_ids = jnp.asarray(spec.segments(level), jnp.int32)
+    num_segs = spec.num_nodes(level)
 
     def level_sync(state: FedState, mask: Optional[jnp.ndarray] = None) -> FedState:
+        uploaded = state.params
+        residual = state.residual
+        if codec is not None:
+            delta = jax.tree_util.tree_map(
+                lambda x, a: x.astype(jnp.float32) - a.astype(jnp.float32),
+                state.params, state.anchor,
+            )
+            delta_hat, residual = codec.roundtrip(delta, residual)
+            uploaded = jax.tree_util.tree_map(
+                lambda a, d, x: (a.astype(jnp.float32) + d).astype(x.dtype),
+                state.anchor, delta_hat, state.params,
+            )
         if is_top and config.delta_cloud and state.anchor is not None:
             agg = lambda t: aggregation.delta_weighted_mean(t, state.anchor, weights, mask)
-            params = agg(state.params)
+            params = agg(uploaded)
             anchor = jax.tree_util.tree_map(jnp.copy, params)
         else:
             agg = lambda t: aggregation.hierarchical_segment_mean(t, weights, spec, level, mask)
-            params = agg(state.params)
-            anchor = state.anchor
+            params = agg(uploaded)
+            if config.transport_active:
+                anchor = jax.tree_util.tree_map(jnp.copy, params)
+            else:
+                anchor = state.anchor
+        if codec is not None:
+            # A client whose whole level-ℓ group died transmitted nothing
+            # and received no broadcast: it must keep its EXACT params and
+            # anchor, not the codec roundtrip of them (the aggregation's
+            # keep path above saw only `uploaded`). Likewise a masked-out
+            # client in a surviving group receives the broadcast but never
+            # transmitted, so its EF residual must not be consumed.
+            w_eff = weights.astype(jnp.float32)
+            if mask is not None:
+                w_eff = w_eff * mask.astype(jnp.float32)
+            received = jnp.take(
+                jax.ops.segment_sum(w_eff, seg_ids, num_segs) > 0, seg_ids
+            )  # (N,) group had >= 1 survivor
+
+            def keep_dead(new, old):
+                r = received.reshape((-1,) + (1,) * (new.ndim - 1))
+                return jnp.where(r, new, old.astype(new.dtype))
+
+            params = jax.tree_util.tree_map(keep_dead, params, state.params)
+            anchor = jax.tree_util.tree_map(keep_dead, anchor, state.anchor)
+            if residual is not None and state.residual is not None:
+                sent = w_eff > 0  # (N,) this client actually uploaded
+
+                def keep_residual(new, old):
+                    s = sent.reshape((-1,) + (1,) * (new.ndim - 1))
+                    return jnp.where(s, new, old)
+
+                residual = jax.tree_util.tree_map(keep_residual, residual, state.residual)
         opt_state = _maybe_sync_opt_state(state.opt_state, agg, config.sync_opt_state)
-        return state._replace(params=params, opt_state=opt_state, anchor=anchor)
+        return state._replace(params=params, opt_state=opt_state, anchor=anchor, residual=residual)
 
     return level_sync
 

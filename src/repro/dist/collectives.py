@@ -16,7 +16,7 @@ bottleneck link that sets the wall-clock of the hop).
 from __future__ import annotations
 
 from math import prod
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -33,10 +33,20 @@ def hierfavg_traffic_per_step(
     num_edges: int,
     kappa1: int,
     kappa2: int,
+    *,
+    edge_bits_per_param: float = 32.0,
+    cloud_bits_per_param: float = 32.0,
 ) -> Tuple[float, float]:
-    """(edge_bytes_per_step, cloud_bytes_per_step) for the two-level tree."""
-    edge = ring_allreduce_bytes(per_dev_bytes, clients_per_edge) / kappa1
-    cloud = ring_allreduce_bytes(per_dev_bytes, num_edges) / (kappa1 * kappa2)
+    """(edge_bytes_per_step, cloud_bytes_per_step) for the two-level tree.
+
+    ``per_dev_bytes`` is the uncompressed fp32 payload; the per-hop
+    bits-per-parameter (``fed.transport.TransportSpec.bits_per_param``)
+    scale it to the compressed wire size.
+    """
+    edge_payload = per_dev_bytes * edge_bits_per_param / 32.0
+    cloud_payload = per_dev_bytes * cloud_bits_per_param / 32.0
+    edge = ring_allreduce_bytes(edge_payload, clients_per_edge) / kappa1
+    cloud = ring_allreduce_bytes(cloud_payload, num_edges) / (kappa1 * kappa2)
     return edge, cloud
 
 
@@ -44,17 +54,34 @@ def hierarchy_traffic_per_step(
     per_dev_bytes: float,
     spec,  # core.hierarchy.HierarchySpec
     kappas: Sequence[int],
+    *,
+    bits_per_param: Optional[Sequence[float]] = None,
 ) -> List[float]:
     """Per-level bottleneck bytes per local step, bottom-up (level 1 = edge
-    hop ... level depth = cloud hop)."""
+    hop ... level depth = cloud hop).
+
+    ``per_dev_bytes`` is the uncompressed fp32 payload. ``bits_per_param``
+    (one entry per level, bottom-up — ``TransportSpec.bits_vector()``)
+    rescales each hop to its codec's wire size; None means fp32 (32 bits)
+    everywhere.
+    """
     kv = tuple(int(k) for k in kappas)
     if len(kv) != spec.depth:
         raise ValueError(f"kappas {kv} vs hierarchy depth {spec.depth}")
+    if bits_per_param is None:
+        bits = (32.0,) * spec.depth
+    else:
+        bits = tuple(float(b) for b in bits_per_param)
+        if len(bits) != spec.depth:
+            raise ValueError(f"bits_per_param {bits} vs hierarchy depth {spec.depth}")
+        if any(b <= 0 for b in bits):
+            raise ValueError(f"bits per parameter must be positive, got {bits}")
     out = []
     for level in range(1, spec.depth + 1):
         # participants of a tier-level node = its tier-(level-1) children
         parents = np.asarray(spec.parents[level - 1])
         sizes = np.bincount(parents, minlength=spec.num_nodes(level))
         interval = prod(kv[:level])
-        out.append(ring_allreduce_bytes(per_dev_bytes, int(sizes.max())) / interval)
+        payload = per_dev_bytes * bits[level - 1] / 32.0
+        out.append(ring_allreduce_bytes(payload, int(sizes.max())) / interval)
     return out

@@ -1,4 +1,11 @@
-from repro.fed import failures, runner, topology
+from repro.fed import failures, runner, topology, transport
+from repro.fed.transport import (
+    IdentityCodec,
+    Int8BlockCodec,
+    TransportSpec,
+    int8_ef,
+    parse_codec,
+)
 from repro.fed.failures import (
     FailureSimulator,
     StragglerModel,
@@ -18,6 +25,12 @@ __all__ = [
     "failures",
     "runner",
     "topology",
+    "transport",
+    "IdentityCodec",
+    "Int8BlockCodec",
+    "TransportSpec",
+    "int8_ef",
+    "parse_codec",
     "FailureSimulator",
     "StragglerModel",
     "SubtreeOutageSimulator",

@@ -12,6 +12,12 @@ This is the deployable loop: one executable for the whole run, host logic
 only at aggregation boundaries (the natural synchronization points of the
 paper's protocol). Metrics include the paper's T/E accounting (cost_model)
 so experiments read time-to-accuracy directly off the run log.
+
+When ``hier_config.transport`` declares per-level link codecs, the cost
+accounting automatically switches to the compressed wire: T/E use
+``WorkloadCosts.with_bits`` and each round records the cumulative uplink
+bytes per client (``wire_mb``) from the ``dist.collectives`` traffic model
+at the transport's per-level bits-per-parameter.
 """
 from __future__ import annotations
 
@@ -23,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cost_model as cm
+from repro.core.hierarchy import as_hierarchy
 from repro.core.hierfavg import (
     FedState,
     HierFAVGConfig,
@@ -30,6 +37,7 @@ from repro.core.hierfavg import (
     build_hier_round,
     init_state,
 )
+from repro.dist import collectives
 from repro.fed.failures import FailureSimulator, StragglerModel, combine_masks
 
 PyTree = Any
@@ -53,6 +61,7 @@ class RoundRecord:
     sim_time_s: float
     sim_energy_j: float
     accuracy: Optional[float] = None
+    wire_mb: float = 0.0  # cumulative uplink MB/client on the compressed wire
 
 
 class FederatedRunner:
@@ -84,6 +93,14 @@ class FederatedRunner:
         self.cfg = runner_config
         self.eval_fn = eval_fn
         self.costs = costs
+        self.transport = getattr(hier_config, "transport", None)
+        if self.costs is not None and self.transport is not None:
+            # T/E accounting on the compressed wire: edge hop = level 1,
+            # cloud hop = top level (matches kappa2_effective's 2-level view)
+            self.costs = self.costs.with_bits(
+                self.transport.bits_per_param(1),
+                self.transport.bits_per_param(self.transport.depth),
+            )
         self.failures = failures
         self.stragglers = stragglers
         self.checkpointer = checkpointer
@@ -129,8 +146,25 @@ class FederatedRunner:
             masks.append(m)
         return combine_masks(*masks)
 
+    def _wire_bytes_per_step(self, state: FedState) -> float:
+        """Summed per-level uplink bytes per local step for one client
+        (bottleneck link, amortized by each level's interval), at the
+        transport's per-level bits-per-parameter."""
+        spec = as_hierarchy(self.topology)
+        per_client_bytes = sum(
+            leaf.size // leaf.shape[0] * 4
+            for leaf in jax.tree_util.tree_leaves(state.params)
+        )
+        bits = self.transport.bits_vector() if self.transport is not None else None
+        traffic = collectives.hierarchy_traffic_per_step(
+            float(per_client_bytes), spec, self.hier_config.kappa_vector,
+            bits_per_param=bits,
+        )
+        return float(sum(traffic))
+
     def run(self, state: FedState, *, start_round: int = 0) -> FedState:
         k1 = self.hier_config.kappa1
+        wire_per_step = self._wire_bytes_per_step(state)
         for r in range(start_round, self.cfg.num_rounds):
             batches = self.batcher.next_batches(k1)
             batches = jax.tree_util.tree_map(jnp.asarray, batches)
@@ -164,6 +198,7 @@ class FederatedRunner:
                     sim_time_s=sim_t,
                     sim_energy_j=sim_e,
                     accuracy=acc,
+                    wire_mb=step * wire_per_step / 1e6,
                 )
             )
 
@@ -189,4 +224,5 @@ class FederatedRunner:
             "sim_time_s": [h.sim_time_s for h in self.history],
             "sim_energy_j": [h.sim_energy_j for h in self.history],
             "alive": [h.mask_alive for h in self.history],
+            "wire_mb": [h.wire_mb for h in self.history],
         }

@@ -1,0 +1,283 @@
+"""Per-level compressed transport: pluggable link codecs for HierFAVG.
+
+The paper's only lever on the expensive edge→cloud hop is aggregation
+frequency (κ₂). Its follow-up (*Hierarchical FL with Quantization*,
+arXiv:2103.14272) shows quantizing uploads at **both** levels compounds
+that saving with provable convergence. This module is the plumbing: a
+``LinkCodec`` models what one uplink does to a client's model delta
+(w − w_anchor), and a ``TransportSpec`` assigns one codec per tree level
+of a ``HierarchySpec``, plugging into ``HierFAVGConfig`` alongside the
+κ-vector. ``core.hierfavg.build_level_sync`` routes every aggregation
+boundary through the level's codec.
+
+Semantics
+---------
+Codecs are *simulated* transport: ``roundtrip`` applies encode∘decode so
+the aggregator sees exactly what a real receiver would reconstruct, while
+the payload stays a normal f32 pytree for the rest of the jitted step.
+The wire size is accounted analytically via ``bits_per_param`` (threaded
+into ``dist.collectives`` and ``core.cost_model``).
+
+Quantization blocks NEVER cross client boundaries: every stacked leaf
+(N, ...) is flattened to (N, D) and quantized row-wise in blocks of
+``block`` along D — the exact payload layout of ``kernels.quantize`` /
+the fused dequantize-aggregate kernel in ``kernels.hier_aggregate``
+(cross-checked by test).
+
+Error feedback (``int8_ef``): the residual e = (delta + r) − decode(
+encode(delta + r)) is carried per client in ``FedState.residual`` and
+added to the next upload, turning the biased rounding error into a
+telescoping sum (EF-SGD). Caveats in ``docs/compression.md``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Row-wise blockwise int8 quantization (jnp; mirrors kernels/quantize math)
+# ---------------------------------------------------------------------------
+
+def quantize_rows(x2d: jnp.ndarray, block: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(N, D) → (q (N, Dp) int8, scales (N, Dp/block) f32), Dp = D padded to
+    a block multiple. Blocks are per row: no block crosses a client
+    boundary. Same math as ``kernels.ref.quantize_ref`` per block."""
+    n, d = x2d.shape
+    pad = (-d) % block
+    xf = x2d.astype(jnp.float32)
+    if pad:
+        xf = jnp.pad(xf, ((0, 0), (0, pad)))
+    nb = (d + pad) // block
+    blocks = xf.reshape(n, nb, block)
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0  # (N, nb, 1)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(blocks / safe), -127.0, 127.0).astype(jnp.int8)
+    return q.reshape(n, nb * block), scale[..., 0]
+
+
+def dequantize_rows(
+    q: jnp.ndarray, scales: jnp.ndarray, d: int, block: int
+) -> jnp.ndarray:
+    """Inverse of ``quantize_rows``: (N, Dp) int8 + (N, Dp/block) scales →
+    (N, d) f32."""
+    n, dp = q.shape
+    nb = dp // block
+    x = q.astype(jnp.float32).reshape(n, nb, block) * scales[..., None]
+    return x.reshape(n, dp)[:, :d]
+
+
+def _roundtrip_leaf(x: jnp.ndarray, block: int) -> jnp.ndarray:
+    """encode∘decode one stacked (N, ...) leaf; returns f32, same shape."""
+    n = x.shape[0]
+    flat = x.astype(jnp.float32).reshape(n, -1)
+    q, s = quantize_rows(flat, block)
+    back = dequantize_rows(q, s, flat.shape[1], block)
+    return back.reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# Codecs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class IdentityCodec:
+    """Uncompressed fp32 link — the paper's transport."""
+
+    name: str = "identity"
+    error_feedback: bool = False
+
+    @property
+    def is_identity(self) -> bool:
+        return True
+
+    @property
+    def bits_per_param(self) -> float:
+        return 32.0
+
+    def roundtrip(self, tree: PyTree, residual: Optional[PyTree]):
+        return tree, residual
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8BlockCodec:
+    """Blockwise-absmax int8: 8 bits/value + one f32 scale per ``block``
+    values → 8 + 32/block bits per parameter (~8.125 at block=256)."""
+
+    block: int = 256
+    error_feedback: bool = False
+
+    def __post_init__(self):
+        if self.block < 1:
+            raise ValueError(f"block must be >= 1, got {self.block}")
+
+    @property
+    def name(self) -> str:
+        suffix = "_ef" if self.error_feedback else ""
+        return f"int8{suffix}:{self.block}"
+
+    @property
+    def is_identity(self) -> bool:
+        return False
+
+    @property
+    def bits_per_param(self) -> float:
+        return 8.0 + 32.0 / self.block
+
+    def roundtrip(self, tree: PyTree, residual: Optional[PyTree]):
+        """tree: f32 delta pytree with stacked (N, ...) leaves. Returns
+        (decoded delta, new residual). Without error feedback the residual
+        passes through untouched; with it, the pre-encode deltas absorb the
+        carried residual and the new residual is the fresh rounding error."""
+        if self.error_feedback:
+            if residual is None:
+                raise ValueError("error-feedback codec needs a residual tree in FedState")
+            e = jax.tree_util.tree_map(
+                lambda d, r: d.astype(jnp.float32) + r.astype(jnp.float32), tree, residual
+            )
+            decoded = jax.tree_util.tree_map(lambda x: _roundtrip_leaf(x, self.block), e)
+            new_residual = jax.tree_util.tree_map(lambda a, b: a - b, e, decoded)
+            return decoded, new_residual
+        decoded = jax.tree_util.tree_map(lambda x: _roundtrip_leaf(x, self.block), tree)
+        return decoded, residual
+
+
+def int8_ef(block: int = 256) -> Int8BlockCodec:
+    """int8 + error-feedback residual (EF-SGD on the link)."""
+    return Int8BlockCodec(block=block, error_feedback=True)
+
+
+_CODEC_FACTORIES = {
+    "identity": lambda block: IdentityCodec(),
+    "fp32": lambda block: IdentityCodec(),
+    "int8": lambda block: Int8BlockCodec(block=block),
+    "int8_ef": lambda block: int8_ef(block),
+}
+
+
+def parse_codec(text: str):
+    """'identity' | 'int8' | 'int8_ef' with an optional ':block' suffix,
+    e.g. 'int8:128'."""
+    name, _, block = text.strip().partition(":")
+    if name not in _CODEC_FACTORIES:
+        raise ValueError(
+            f"unknown codec {name!r}; choose from {sorted(_CODEC_FACTORIES)}"
+        )
+    return _CODEC_FACTORIES[name](int(block) if block else 256)
+
+
+# ---------------------------------------------------------------------------
+# Per-level spec
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TransportSpec:
+    """One codec per aggregation level, bottom-up: ``codecs[0]`` is the
+    client→edge uplink (level 1), ``codecs[-1]`` the top (cloud) hop —
+    aligned with ``HierFAVGConfig.kappa_vector``."""
+
+    codecs: Tuple[Any, ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "codecs", tuple(self.codecs))
+        if not self.codecs:
+            raise ValueError("TransportSpec needs at least one level")
+
+    # -- constructors -------------------------------------------------------
+
+    @classmethod
+    def identity(cls, depth: int) -> "TransportSpec":
+        return cls(codecs=tuple(IdentityCodec() for _ in range(depth)))
+
+    @classmethod
+    def uniform(cls, codec, depth: int) -> "TransportSpec":
+        return cls(codecs=tuple(codec for _ in range(depth)))
+
+    @classmethod
+    def cloud_int8(cls, depth: int, *, block: int = 256, error_feedback: bool = False) -> "TransportSpec":
+        """The common deployment: fp32 on cheap lower hops, int8 on the
+        expensive top (DCN) hop."""
+        top = Int8BlockCodec(block=block, error_feedback=error_feedback)
+        return cls(codecs=tuple(IdentityCodec() for _ in range(depth - 1)) + (top,))
+
+    @classmethod
+    def parse(cls, text: str) -> "TransportSpec":
+        """'/'-separated codec per level, bottom-up: 'identity/int8' is an
+        fp32 edge hop and an int8 cloud hop; 'int8:128/int8_ef' quantizes
+        both with a 128 block and error feedback at the top."""
+        parts = [p for p in text.split("/") if p]
+        if not parts:
+            raise ValueError(f"empty transport spec: {text!r}")
+        return cls(codecs=tuple(parse_codec(p) for p in parts))
+
+    # -- queries ------------------------------------------------------------
+
+    @property
+    def depth(self) -> int:
+        return len(self.codecs)
+
+    def codec(self, level: int):
+        if not 1 <= level <= self.depth:
+            raise ValueError(f"level must be in 1..{self.depth}, got {level}")
+        return self.codecs[level - 1]
+
+    @property
+    def is_trivial(self) -> bool:
+        """True iff every level is identity — numerics and accounting are
+        then exactly the uncompressed protocol."""
+        return all(c.is_identity for c in self.codecs)
+
+    @property
+    def needs_residual(self) -> bool:
+        return any(c.error_feedback for c in self.codecs)
+
+    def bits_per_param(self, level: int) -> float:
+        return float(self.codec(level).bits_per_param)
+
+    def bits_vector(self) -> Tuple[float, ...]:
+        """Per-level bits per parameter, bottom-up — what
+        ``dist.collectives.hierarchy_traffic_per_step`` consumes."""
+        return tuple(float(c.bits_per_param) for c in self.codecs)
+
+    def describe(self) -> str:
+        return "/".join(c.name for c in self.codecs)
+
+
+# ---------------------------------------------------------------------------
+# Fused decode+aggregate entry point (Pallas kernel, flat payloads)
+# ---------------------------------------------------------------------------
+
+def fused_decode_segment_mean(
+    q: jnp.ndarray,
+    scales: jnp.ndarray,
+    weights: jnp.ndarray,
+    segment_ids,
+    num_segments: int,
+    *,
+    block_d: int = 512,
+) -> jnp.ndarray:
+    """Aggregate int8 payloads without materializing the f32 decode:
+    q (N, D) int8 + scales (N, D/qblock) f32 → per-segment weighted mean of
+    the dequantized rows, broadcast back to members, (N, D) f32.
+
+    One HBM pass over the int8 payload (~¼ the bytes of decode-then-
+    aggregate). Equals ``dequantize_rows`` + ``segment_weighted_mean``
+    bit-for-bit (same tiling; see ``kernels.ref.segment_dequant_mean_ref``).
+    """
+    from repro.kernels import ops
+
+    return ops.segment_dequant_mean(
+        q, scales, weights, segment_ids, num_segments, block_d=block_d
+    )
+
+
+def transport_wire_bytes_per_param(spec: Optional[TransportSpec], depth: int) -> Tuple[float, ...]:
+    """Per-level wire bytes per fp32 parameter (spec=None → uncompressed)."""
+    if spec is None:
+        return tuple(4.0 for _ in range(depth))
+    return tuple(b / 8.0 for b in spec.bits_vector())

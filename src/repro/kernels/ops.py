@@ -70,8 +70,25 @@ def rglru_scan(a, b, h0, *, block_d=128):
     return _rg.rglru_scan_pallas(a, b, h0, block_d=block_d, interpret=use_interpret())
 
 
+def segment_dequant_mean(q, scales, weights, segment_ids, num_segments, *, block_d: int = 512):
+    """Fused dequantize-and-segment-aggregate: int8 payload (N, D) +
+    per-block scales (N, D/qblock) → per-segment weighted mean of the
+    dequantized rows broadcast back, (N, D) f32 — one HBM pass over the
+    compressed bytes (the transport layer's decode+aggregate in one)."""
+    return _ha.segment_dequant_mean_pallas(
+        q, scales, weights, segment_ids, num_segments,
+        block_d=block_d, interpret=use_interpret(),
+    )
+
+
 def quantize_int8(x, *, qblock=256):
     return _qz.quantize_pallas(x, qblock=qblock, interpret=use_interpret())
+
+
+def quantize_stacked(x, *, qblock=256):
+    """Stacked (N, D) → (q (N, Dp) int8, scales (N, Dp/qblock) f32), blocks
+    per client row — the fused aggregate kernel's payload layout."""
+    return _qz.quantize_stacked_pallas(x, qblock=qblock, interpret=use_interpret())
 
 
 def dequantize_int8(q, s, shape, dtype=jnp.float32):

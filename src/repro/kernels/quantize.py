@@ -68,6 +68,26 @@ def quantize_pallas(
     return q[:rows], s[:rows], shape
 
 
+def quantize_stacked_pallas(
+    x: jnp.ndarray, *, qblock: int = 256, block_rows: int = 8, interpret: bool = False
+):
+    """Stacked (N, D) client payloads → per-client row-wise blockwise int8.
+
+    Returns (q (N, Dp) int8, scales (N, Dp/qblock) f32) with Dp = D padded
+    to a qblock multiple, so no quantization block ever crosses a client
+    boundary — the payload layout the fused dequantize-aggregate kernel
+    (``hier_aggregate.segment_dequant_mean_pallas``) and the jnp transport
+    codecs (``fed.transport.quantize_rows``) share.
+    """
+    n, d = x.shape
+    pad = (-d) % qblock
+    xp = jnp.pad(x, ((0, 0), (0, pad))) if pad else x
+    dp = d + pad
+    # row-major flatten keeps each client's Dp/qblock blocks contiguous
+    q, s, _ = quantize_pallas(xp, qblock=qblock, block_rows=block_rows, interpret=interpret)
+    return q.reshape(n, dp), s.reshape(n, dp // qblock)
+
+
 def dequantize_pallas(
     q: jnp.ndarray,
     s: jnp.ndarray,

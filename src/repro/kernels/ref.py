@@ -58,6 +58,45 @@ def segment_mean_ref(
     return out.astype(x.dtype)
 
 
+def segment_dequant_mean_ref(
+    q: jnp.ndarray,
+    scales: jnp.ndarray,
+    weights: jnp.ndarray,
+    segment_ids,
+    num_segments: int,
+    block_d: int = 512,
+) -> jnp.ndarray:
+    """Oracle for the fused dequantize-and-segment-aggregate kernel.
+
+    q: (N, D) int8 row-wise payload; scales: (N, D/qblock) f32. Dequantizes
+    (elementwise — order-independent) then mirrors ``segment_mean_ref``'s
+    one-hot matmul formulation and block_d column tiling exactly, so the
+    interpret-mode kernel output is bit-identical (f32 out).
+    """
+    n, d = q.shape
+    qblock = d // scales.shape[1]
+    x = (q.astype(jnp.float32).reshape(n, d // qblock, qblock) * scales[..., None]).reshape(n, d)
+    seg = jnp.asarray(segment_ids, jnp.int32)
+    w = weights.reshape(-1, 1).astype(jnp.float32)
+    gids = jax.lax.broadcasted_iota(jnp.int32, (num_segments, n), 0)
+    onehot = (seg[None, :] == gids).astype(jnp.float32)  # (G, N)
+    den = jnp.dot(onehot, w, preferred_element_type=jnp.float32)
+    safe = jnp.where(den > 0, den, 1.0)
+    alive = (den > 0).astype(jnp.float32)
+    keep = 1.0 - jnp.dot(onehot.T, alive, preferred_element_type=jnp.float32)
+
+    pad = (-d) % block_d
+    xp = jnp.pad(x, ((0, 0), (0, pad))) if pad else x
+    outs = []
+    for i in range(xp.shape[1] // block_d):
+        xt = xp[:, i * block_d : (i + 1) * block_d]
+        num = jnp.dot(onehot, xt * w, preferred_element_type=jnp.float32)
+        mean = num / safe
+        back = jnp.dot(onehot.T, mean * alive, preferred_element_type=jnp.float32)
+        outs.append(back + xt * keep)
+    return jnp.concatenate(outs, axis=1)[:, :d]
+
+
 def attention_ref(
     q: jnp.ndarray,
     k: jnp.ndarray,

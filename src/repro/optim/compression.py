@@ -12,7 +12,7 @@ on-device; this module is the numpy/jnp-level API and the reference.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Tuple
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -21,11 +21,18 @@ PyTree = Any
 
 
 class QuantizedTree(NamedTuple):
-    """Per-leaf int8 payload + per-block fp32 scales."""
+    """Per-leaf int8 payload + per-block fp32 scales.
 
-    payload: PyTree  # int8 arrays, same shapes as the input leaves
+    Self-describing: ``shapes``/``dtypes`` record the original leaves (in
+    ``tree_leaves`` order of ``payload``), so ``dequantize_int8`` needs no
+    ``like`` tree — the wire format carries everything a receiver needs.
+    """
+
+    payload: PyTree  # int8 arrays, (num_blocks, block) per leaf
     scales: PyTree  # fp32 arrays, one scale per block of `block` elements
     block: int
+    shapes: Optional[Tuple[Tuple[int, ...], ...]] = None  # original leaf shapes
+    dtypes: Optional[Tuple[Any, ...]] = None  # original leaf dtypes
 
 
 def _quantize_leaf(x: jnp.ndarray, block: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -49,19 +56,46 @@ def _dequantize_leaf(q: jnp.ndarray, scale: jnp.ndarray, shape, dtype, block: in
 
 
 def quantize_int8(tree: PyTree, block: int = 256) -> QuantizedTree:
-    qs = jax.tree_util.tree_map(lambda x: _quantize_leaf(x, block), tree)
-    payload = jax.tree_util.tree_map(lambda t: t[0], qs, is_leaf=lambda t: isinstance(t, tuple))
-    scales = jax.tree_util.tree_map(lambda t: t[1], qs, is_leaf=lambda t: isinstance(t, tuple))
-    return QuantizedTree(payload=payload, scales=scales, block=block)
-
-
-def dequantize_int8(q: QuantizedTree, like: PyTree) -> PyTree:
-    return jax.tree_util.tree_map(
-        lambda p, s, x: _dequantize_leaf(p, s, x.shape, x.dtype, q.block),
-        q.payload,
-        q.scales,
-        like,
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    qs = [_quantize_leaf(x, block) for x in leaves]
+    payload = jax.tree_util.tree_unflatten(treedef, [t[0] for t in qs])
+    scales = jax.tree_util.tree_unflatten(treedef, [t[1] for t in qs])
+    return QuantizedTree(
+        payload=payload,
+        scales=scales,
+        block=block,
+        shapes=tuple(tuple(x.shape) for x in leaves),
+        dtypes=tuple(jnp.asarray(x).dtype for x in leaves),
     )
+
+
+def dequantize_int8(q: QuantizedTree, like: Optional[PyTree] = None) -> PyTree:
+    """Exact inverse layout of ``quantize_int8``. ``like`` is optional: a
+    self-describing tree (the default since shapes/dtypes were added)
+    reconstructs from its own metadata; passing ``like`` overrides it (and
+    is the only option for trees built before the metadata existed)."""
+    ps, treedef = jax.tree_util.tree_flatten(q.payload)
+    ss = jax.tree_util.tree_leaves(q.scales)
+    if like is not None:
+        ls = jax.tree_util.tree_leaves(like)
+        shapes = [x.shape for x in ls]
+        dtypes = [jnp.asarray(x).dtype for x in ls]
+    elif q.shapes is not None and q.dtypes is not None:
+        shapes, dtypes = list(q.shapes), list(q.dtypes)
+    else:
+        raise ValueError(
+            "QuantizedTree has no shape/dtype metadata; pass the `like` tree"
+        )
+    if not len(ps) == len(ss) == len(shapes) == len(dtypes):
+        raise ValueError(
+            f"inconsistent QuantizedTree: {len(ps)} payload leaves, "
+            f"{len(ss)} scale leaves, {len(shapes)} shapes, {len(dtypes)} dtypes"
+        )
+    out = [
+        _dequantize_leaf(p, s, shape, dtype, q.block)
+        for p, s, shape, dtype in zip(ps, ss, shapes, dtypes)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, out)
 
 
 def compressed_bytes(q: QuantizedTree) -> int:

@@ -77,3 +77,67 @@ def test_quantize_zero_block(rng):
     x = jnp.zeros((4, 256), jnp.float32)
     q, s, shp = ops.quantize_int8(x)
     assert float(jnp.max(jnp.abs(ops.dequantize_int8(q, s, shp)))) == 0.0
+
+
+SEGMENTS = {
+    8: [0, 0, 0, 1, 1, 2, 2, 3],
+    12: [0, 0, 0, 0, 1, 1, 2, 2, 2, 2, 3, 3],
+}
+
+
+@pytest.mark.parametrize("n", [8, 12])
+@pytest.mark.parametrize("d,qblock,block_d", [(1024, 256, 512), (768, 128, 256), (512, 128, 512)])
+def test_segment_dequant_mean_bitexact_vs_ref(rng, n, d, qblock, block_d):
+    """The fused dequantize-aggregate kernel is BIT-exact against the jnp
+    oracle (both jitted; the oracle mirrors the kernel's tiling)."""
+    import functools
+
+    x = jnp.asarray(rng.normal(size=(n, d)) * 0.1, jnp.float32)
+    w = jnp.asarray(rng.uniform(0.5, 3.0, size=n), jnp.float32)
+    seg = jnp.asarray(SEGMENTS[n], jnp.int32)
+    q, s = ops.quantize_stacked(x, qblock=qblock)
+    got = ops.segment_dequant_mean(q, s, w, seg, 4, block_d=block_d)
+    want = jax.jit(
+        functools.partial(ref.segment_dequant_mean_ref, num_segments=4, block_d=block_d)
+    )(q, s, w, seg)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_segment_dequant_mean_equals_decode_then_aggregate(rng):
+    """Fusion changes bytes moved, not math: fused == dequantize (kernel)
+    then segment_mean (kernel) on the f32 intermediate."""
+    n, d, qblock = 8, 1024, 256
+    x = jnp.asarray(rng.normal(size=(n, d)) * 0.2, jnp.float32)
+    w = jnp.asarray(rng.uniform(0.5, 2.0, size=n), jnp.float32)
+    seg = jnp.asarray(SEGMENTS[n], jnp.int32)
+    q, s = ops.quantize_stacked(x, qblock=qblock)
+    fused = ops.segment_dequant_mean(q, s, w, seg, 4, block_d=512)
+    rows = q.shape[1] // qblock * n
+    decoded = ops.dequantize_int8(
+        q.reshape(rows, qblock), s.reshape(rows, 1), (n, d)
+    )
+    staged = ops.segment_mean(decoded, w, seg, 4, block_d=512)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(staged), atol=1e-6)
+
+
+def test_segment_dequant_mean_dead_segment_keeps_rows(rng):
+    n, d = 8, 512
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    w = jnp.asarray(rng.uniform(1.0, 2.0, size=n), jnp.float32).at[3:5].set(0.0)
+    seg = jnp.asarray(SEGMENTS[n], jnp.int32)  # segment 1 = rows 3..4, now dead
+    q, s = ops.quantize_stacked(x, qblock=128)
+    got = ops.segment_dequant_mean(q, s, w, seg, 4, block_d=512)
+    decoded = np.asarray(
+        q.astype(jnp.float32).reshape(n, d // 128, 128) * s.reshape(n, d // 128)[..., None]
+    ).reshape(n, d)
+    np.testing.assert_allclose(np.asarray(got)[3:5], decoded[3:5], atol=1e-7)
+
+
+def test_segment_dequant_mean_validates_shapes(rng):
+    q = jnp.zeros((4, 512), jnp.int8)
+    s = jnp.zeros((4, 2), jnp.float32)
+    w = jnp.ones((4,), jnp.float32)
+    with pytest.raises(ValueError):  # block_d not a multiple of qblock
+        ops.segment_dequant_mean(q, s, w, [0, 0, 1, 1], 2, block_d=384)
+    with pytest.raises(ValueError):  # bad segment vector
+        ops.segment_dequant_mean(q, s, w, [0, 0, 1], 2)

@@ -1,0 +1,327 @@
+"""Per-level compressed transport: codecs, TransportSpec plumbing, the
+hierfavg aggregation-boundary routing, and the bits-per-param accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    FedTopology, HierFAVGConfig, build_hier_round, build_train_step,
+    cost_model as cm, init_state, parse_fanouts,
+)
+from repro.dist import collectives
+from repro.fed import transport as tp
+from repro.optim import sgd
+
+
+def quadratic_setup(rng, n=6, dim=4):
+    centers = rng.normal(size=(n, dim))
+    sizes = rng.integers(1, 5, size=n).astype(np.float64)
+
+    def loss_fn(params, batch, _rng):
+        return 0.5 * jnp.sum((params["w"] - batch["c"]) ** 2)
+
+    batch = {"c": jnp.asarray(centers, jnp.float32)}
+    return sizes, loss_fn, batch
+
+
+def run_steps(rng, transport, steps=9, kappa1=2, kappa2=2, n=6, dim=4):
+    sizes, loss_fn, batch = quadratic_setup(rng, n, dim)
+    topo = FedTopology(num_edges=2, clients_per_edge=n // 2)
+    cfg = HierFAVGConfig(kappa1=kappa1, kappa2=kappa2, transport=transport)
+    opt = sgd(0.1)
+    state = init_state(jax.random.PRNGKey(0), {"w": jnp.zeros(dim)}, opt, topo, cfg)
+    step = jax.jit(build_train_step(loss_fn, opt, topo, cfg, jnp.asarray(sizes, jnp.float32)))
+    for _ in range(steps):
+        state, _ = step(state, batch)
+    return np.asarray(state.params["w"])
+
+
+# ---------------------------------------------------------------------------
+# Codec / spec units
+# ---------------------------------------------------------------------------
+
+def test_quantize_rows_roundtrip_bound(rng):
+    x = jnp.asarray(rng.normal(size=(4, 700)) * 2.0, jnp.float32)
+    q, s = tp.quantize_rows(x, 256)
+    assert q.shape == (4, 768) and s.shape == (4, 3)
+    back = tp.dequantize_rows(q, s, 700, 256)
+    assert back.shape == (4, 700)
+    assert float(jnp.max(jnp.abs(back - x))) <= float(jnp.max(s)) * 0.5 + 1e-6
+
+
+def test_quantize_rows_blocks_stay_per_client(rng):
+    """Changing one client's row must not change any other row's payload."""
+    x = np.asarray(rng.normal(size=(3, 512)), np.float32)
+    q1, s1 = tp.quantize_rows(jnp.asarray(x), 256)
+    x2 = x.copy()
+    x2[1] *= 100.0
+    q2, s2 = tp.quantize_rows(jnp.asarray(x2), 256)
+    np.testing.assert_array_equal(np.asarray(q1[0]), np.asarray(q2[0]))
+    np.testing.assert_array_equal(np.asarray(q1[2]), np.asarray(q2[2]))
+    np.testing.assert_array_equal(np.asarray(s1)[[0, 2]], np.asarray(s2)[[0, 2]])
+
+
+def test_codec_bits_per_param():
+    assert tp.IdentityCodec().bits_per_param == 32.0
+    assert tp.Int8BlockCodec(block=256).bits_per_param == pytest.approx(8.125)
+    assert tp.Int8BlockCodec(block=128).bits_per_param == pytest.approx(8.25)
+    assert tp.int8_ef(256).error_feedback and not tp.Int8BlockCodec().error_feedback
+
+
+def test_parse_and_describe():
+    spec = tp.TransportSpec.parse("identity/int8:128/int8_ef")
+    assert spec.depth == 3
+    assert spec.codec(1).is_identity
+    assert spec.codec(2).block == 128 and not spec.codec(2).error_feedback
+    assert spec.codec(3).error_feedback
+    assert spec.needs_residual and not spec.is_trivial
+    assert spec.describe() == "identity/int8:128/int8_ef:256"
+    assert tp.TransportSpec.identity(2).is_trivial
+    cloud = tp.TransportSpec.cloud_int8(3)
+    assert [c.is_identity for c in cloud.codecs] == [True, True, False]
+    with pytest.raises(ValueError):
+        tp.parse_codec("int4")
+    with pytest.raises(ValueError):
+        tp.TransportSpec.parse("")
+
+
+def test_error_feedback_residual_identity(rng):
+    """EF codec: new residual == pre-encode input minus what the wire
+    delivered, and the carried residual is added to the next upload."""
+    codec = tp.int8_ef(128)
+    delta = {"w": jnp.asarray(rng.normal(size=(3, 200)), jnp.float32)}
+    zero = jax.tree_util.tree_map(jnp.zeros_like, delta)
+    out1, r1 = codec.roundtrip(delta, zero)
+    np.testing.assert_allclose(
+        np.asarray(r1["w"]), np.asarray(delta["w"] - out1["w"]), atol=1e-7
+    )
+    # second boundary with the same delta: input absorbs the residual
+    out2, r2 = codec.roundtrip(delta, r1)
+    np.testing.assert_allclose(
+        np.asarray(out2["w"] + r2["w"]), np.asarray(delta["w"] + r1["w"]), atol=1e-6
+    )
+    # EF telescopes: two decoded uploads track 2*delta better than unbiased-less plain
+    tot = np.asarray(out1["w"] + out2["w"])
+    np.testing.assert_allclose(tot, 2 * np.asarray(delta["w"]), atol=float(jnp.max(jnp.abs(delta["w"]))) / 127 + 1e-5)
+
+
+def test_plain_codec_leaves_residual_untouched(rng):
+    codec = tp.Int8BlockCodec(block=128)
+    delta = {"w": jnp.asarray(rng.normal(size=(2, 128)), jnp.float32)}
+    out, res = codec.roundtrip(delta, None)
+    assert res is None
+    marker = {"w": jnp.full((2, 128), 7.0)}
+    _, res2 = codec.roundtrip(delta, marker)
+    assert res2 is marker
+
+
+# ---------------------------------------------------------------------------
+# hierfavg integration
+# ---------------------------------------------------------------------------
+
+def test_identity_transport_bitwise_unchanged(rng):
+    # two fresh generators with the same seed -> identical problems
+    r1, r2 = np.random.default_rng(123), np.random.default_rng(123)
+    plain = run_steps(r1, None)
+    ident = run_steps(r2, tp.TransportSpec.identity(2))
+    np.testing.assert_array_equal(plain, ident)
+
+
+def test_int8_transport_tracks_plain(rng):
+    r1, r2 = np.random.default_rng(7), np.random.default_rng(7)
+    plain = run_steps(r1, None, steps=12)
+    int8 = run_steps(r2, tp.TransportSpec.parse("identity/int8"), steps=12)
+    assert not np.array_equal(plain, int8)  # compression actually happened
+    np.testing.assert_allclose(int8, plain, atol=5e-3)
+
+
+def test_ef_transport_tracks_plain_both_levels(rng):
+    r1, r2 = np.random.default_rng(11), np.random.default_rng(11)
+    plain = run_steps(r1, None, steps=12)
+    ef = run_steps(r2, tp.TransportSpec.parse("int8_ef:128/int8_ef:128"), steps=12)
+    np.testing.assert_allclose(ef, plain, atol=2e-2)
+
+
+def test_transport_state_allocation(rng):
+    sizes, loss_fn, batch = quadratic_setup(rng)
+    topo = FedTopology(num_edges=2, clients_per_edge=3)
+    opt = sgd(0.1)
+    cfg = HierFAVGConfig(kappa1=2, kappa2=2, transport=tp.TransportSpec.identity(2))
+    s = init_state(jax.random.PRNGKey(0), {"w": jnp.zeros(4)}, opt, topo, cfg)
+    assert s.anchor is None and s.residual is None  # trivial spec: no extra state
+    cfg = HierFAVGConfig(kappa1=2, kappa2=2, transport=tp.TransportSpec.parse("identity/int8"))
+    s = init_state(jax.random.PRNGKey(0), {"w": jnp.zeros(4)}, opt, topo, cfg)
+    assert s.anchor is not None and s.residual is None  # no EF codec: no residual
+    cfg = HierFAVGConfig(kappa1=2, kappa2=2, transport=tp.TransportSpec.parse("identity/int8_ef"))
+    s = init_state(jax.random.PRNGKey(0), {"w": jnp.zeros(4)}, opt, topo, cfg)
+    assert s.anchor is not None and s.residual is not None
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):  # depth mismatch
+        HierFAVGConfig(kappa1=2, kappa2=2, transport=tp.TransportSpec.parse("int8"))
+    with pytest.raises(ValueError):  # active transport subsumes delta_cloud
+        HierFAVGConfig(
+            kappa1=2, kappa2=2, delta_cloud=True,
+            transport=tp.TransportSpec.parse("identity/int8"),
+        )
+    with pytest.raises(ValueError):
+        HierFAVGConfig(
+            kappa1=2, kappa2=2, async_cloud=True,
+            transport=tp.TransportSpec.parse("identity/int8"),
+        )
+    with pytest.raises(TypeError):
+        HierFAVGConfig(kappa1=2, kappa2=2, transport="identity/int8")
+    # trivial transport composes with delta_cloud unchanged
+    HierFAVGConfig(kappa1=2, kappa2=2, delta_cloud=True, transport=tp.TransportSpec.identity(2))
+
+
+def test_multilevel_ragged_transport_runs(rng):
+    """3-level ragged tree, int8 on the top two hops, via build_hier_round."""
+    spec = parse_fanouts("3,2,3/2,1/2")
+    n = spec.num_clients
+    sizes = rng.integers(1, 4, size=n).astype(np.float64)
+    centers = rng.normal(size=(n, 3))
+
+    def loss_fn(params, batch, _rng):
+        return 0.5 * jnp.sum((params["w"] - batch["c"]) ** 2)
+
+    cfg = HierFAVGConfig.multi_level(
+        [2, 2, 2], transport=tp.TransportSpec.parse("identity/int8/int8_ef")
+    )
+    opt = sgd(0.1)
+    w = jnp.asarray(sizes, jnp.float32)
+    state = init_state(jax.random.PRNGKey(0), {"w": jnp.zeros(3)}, opt, spec, cfg)
+    rnd = jax.jit(build_hier_round(loss_fn, opt, spec, cfg, w))
+    batch = {"c": jnp.asarray(centers, jnp.float32)}
+    stacked = jax.tree_util.tree_map(lambda x: jnp.stack([x] * cfg.kappa1), batch)
+    for r in range(8):  # spans the level-2 and level-3 boundaries
+        state, m = rnd(state, stacked, jnp.int32(r))
+    got = np.asarray(state.params["w"])
+    assert np.isfinite(got).all()
+    # after enough rounds every client contracts toward the weighted center
+    target = np.average(centers, axis=0, weights=sizes)
+    assert np.abs(got - target[None]).max() < 0.5
+
+
+def test_dead_group_keeps_exact_params_under_codec(rng):
+    """A client whose whole edge died transmitted nothing and received no
+    broadcast: its params/anchor must be BIT-exact across the boundary even
+    with a non-identity codec (no quantization noise injected), and a
+    masked-out client in a surviving group must not have its EF residual
+    consumed."""
+    sizes, loss_fn, batch = quadratic_setup(rng)
+    topo = FedTopology(num_edges=2, clients_per_edge=3)
+    cfg = HierFAVGConfig(
+        kappa1=1, kappa2=2, transport=tp.TransportSpec.parse("int8_ef:128/int8_ef:128")
+    )
+    opt = sgd(0.1)
+    w = jnp.asarray(sizes, jnp.float32)
+    state = init_state(jax.random.PRNGKey(0), {"w": jnp.zeros(4)}, opt, topo, cfg)
+    step = jax.jit(build_train_step(loss_fn, opt, topo, cfg, w))
+    # warm up two steps all-alive so params/anchor/residual are non-trivial
+    for _ in range(2):
+        state, _ = step(state, batch)
+    mask = jnp.asarray([0.0, 0.0, 0.0, 1.0, 0.0, 1.0])  # edge 0 fully dead
+    before = state
+    state, _ = step(state, batch, mask)
+    # dead edge's clients: exactly one masked local SGD step happened, then
+    # the boundary must leave params == post-local-step values untouched.
+    # Recompute the local step alone to get the expected value:
+    from repro.core.hierfavg import build_local_step
+
+    local = jax.jit(build_local_step(loss_fn, opt))
+    expect, _ = local(before, batch)
+    # atol guards only against cross-program 1-ulp compile differences;
+    # codec noise would be ~scale/2 ≈ 1e-4, orders of magnitude above it
+    np.testing.assert_allclose(
+        np.asarray(state.params["w"])[:3], np.asarray(expect.params["w"])[:3], atol=1e-7
+    )
+    # anchor of dead clients untouched (they received no broadcast)
+    np.testing.assert_array_equal(
+        np.asarray(state.anchor["w"])[:3], np.asarray(before.anchor["w"])[:3]
+    )
+    # residual: dead clients (0-2) and the masked-out client 4 kept theirs
+    for i in (0, 1, 2, 4):
+        np.testing.assert_array_equal(
+            np.asarray(state.residual["w"])[i], np.asarray(before.residual["w"])[i]
+        )
+    # surviving clients aggregated: 3 and 5 hold the same (new) model
+    np.testing.assert_array_equal(
+        np.asarray(state.params["w"])[3], np.asarray(state.params["w"])[5]
+    )
+    assert not np.array_equal(np.asarray(state.params["w"])[3], np.asarray(expect.params["w"])[3])
+
+
+# ---------------------------------------------------------------------------
+# bits accounting: collectives + cost model + runner threading
+# ---------------------------------------------------------------------------
+
+def test_collectives_bits_scaling():
+    spec = parse_fanouts("10,10,10,10,10/5")
+    base = collectives.hierarchy_traffic_per_step(1e6, spec, (6, 10))
+    tr = tp.TransportSpec.parse("identity/int8")
+    comp = collectives.hierarchy_traffic_per_step(
+        1e6, spec, (6, 10), bits_per_param=tr.bits_vector()
+    )
+    assert comp[0] == base[0]  # edge hop untouched
+    np.testing.assert_allclose(comp[1], base[1] * 8.125 / 32.0)
+    with pytest.raises(ValueError):
+        collectives.hierarchy_traffic_per_step(1e6, spec, (6, 10), bits_per_param=(8.0,))
+    edge, cloud = collectives.hierfavg_traffic_per_step(
+        1e6, 10, 5, 6, 10, cloud_bits_per_param=8.0
+    )
+    edge0, cloud0 = collectives.hierfavg_traffic_per_step(1e6, 10, 5, 6, 10)
+    assert edge == edge0 and cloud == cloud0 * 0.25
+
+
+def test_workload_costs_with_bits():
+    costs = cm.paper_workload("mnist")
+    comp = costs.with_bits(32.0, 8.0)
+    # edge leg unchanged, cloud leg quartered
+    assert comp.t_comm_edge == costs.t_comm_edge
+    np.testing.assert_allclose(comp.t_comm_cloud, costs.t_comm_cloud * 0.25)
+    # compute terms untouched -> interval time strictly between
+    t_base = cm.cloud_interval_time(costs, 6, 10)
+    t_comp_only = 60 * costs.t_comp
+    t_q = cm.cloud_interval_time(comp, 6, 10)
+    assert t_comp_only < t_q < t_base
+    # energy: uplink term scales with edge bits
+    e8 = costs.with_bits(8.0, 8.0)
+    np.testing.assert_allclose(
+        cm.cloud_interval_energy(e8, 6, 10),
+        60 * costs.e_comp + 10 * costs.e_comm_edge * 0.25,
+    )
+    with pytest.raises(ValueError):
+        costs.with_bits(0.0, 8.0)
+
+
+def test_cluster_costs_with_bits():
+    c = cm.ClusterCosts(t_step=1.0, t_edge_agg=0.5, t_cloud_agg=2.0)
+    q = c.with_bits(8.0, 8.0)
+    np.testing.assert_allclose(q.t_edge_agg, 0.125)
+    np.testing.assert_allclose(q.t_cloud_agg, 0.5)
+    assert q.t_step == 1.0
+
+
+def test_transport_wire_bytes_helper():
+    tr = tp.TransportSpec.parse("identity/int8")
+    assert tp.transport_wire_bytes_per_param(None, 2) == (4.0, 4.0)
+    b = tp.transport_wire_bytes_per_param(tr, 2)
+    assert b[0] == 4.0 and b[1] == pytest.approx(8.125 / 8.0)
+
+
+def test_fused_decode_segment_mean_matches_composition(rng):
+    n, d = 8, 512
+    x = jnp.asarray(rng.normal(size=(n, d)) * 0.1, jnp.float32)
+    w = jnp.asarray(rng.uniform(0.5, 2.0, size=n), jnp.float32)
+    seg = jnp.asarray([0, 0, 0, 1, 1, 2, 2, 2], jnp.int32)
+    q, s = tp.quantize_rows(x, 128)
+    fused = tp.fused_decode_segment_mean(q, s, w, seg, 3, block_d=256)
+    from repro.core import aggregation
+
+    composed = aggregation.segment_weighted_mean(
+        tp.dequantize_rows(q, s, d, 128), w, seg, 3
+    )
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(composed), atol=1e-6)
