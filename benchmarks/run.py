@@ -19,6 +19,7 @@ from benchmarks import (
     fig4_convergence,
     kernel_bench,
     roofline_report,
+    steps_per_sec,
     table1_cost_model,
     table2_latency_energy,
 )
@@ -32,6 +33,7 @@ BENCHES = {
     "aggregation_scaling": aggregation_scaling.main,
     "compression_tradeoff": compression_tradeoff.main,
     "roofline_report": roofline_report.main,
+    "steps_per_sec": steps_per_sec.main,
 }
 
 

@@ -10,9 +10,11 @@ from repro.core.hierfavg import (
     build_hier_round_async,
     build_level_sync,
     build_local_step,
+    build_super_round,
     build_train_step,
     init_state,
     replicate_for_clients,
+    super_round_schedule,
 )
 from repro.core import aggregation, convergence, cost_model, divergence, reference
 
@@ -29,9 +31,11 @@ __all__ = [
     "build_hier_round",
     "build_hier_round_async",
     "build_local_step",
+    "build_super_round",
     "build_train_step",
     "init_state",
     "replicate_for_clients",
+    "super_round_schedule",
     "aggregation",
     "convergence",
     "cost_model",

@@ -70,6 +70,30 @@ def weighted_mean(tree: PyTree, weights: jnp.ndarray, mask: Optional[jnp.ndarray
     return jax.tree_util.tree_map(leaf_fn, tree)
 
 
+def cloud_model(tree: PyTree, weights: jnp.ndarray, mask: Optional[jnp.ndarray] = None) -> PyTree:
+    """The single cloud model (the eval/serving path): the weighted mean over
+    the client axis *without* broadcasting back to (N, ...).
+
+    Numerically equal to ``weighted_mean(tree, weights, mask)[0]`` but never
+    materializes the N stacked copies of the mean — leaves come back shaped
+    (*param_shape,). Zero survivors keeps client 0's current parameters,
+    matching the broadcast operator's keep-and-slice behavior.
+    """
+    w = weights.astype(jnp.float32)
+    if mask is not None:
+        w = w * mask.astype(jnp.float32)
+    denom = jnp.sum(w)
+
+    def leaf_fn(x):
+        wb = _bcast_weights(w, x)
+        num = jnp.sum(x.astype(jnp.float32) * wb, axis=0)
+        safe = jnp.where(denom > 0, denom, 1.0)
+        mean = num / safe
+        return jnp.where(denom > 0, mean, x[0].astype(jnp.float32)).astype(x.dtype)
+
+    return jax.tree_util.tree_map(leaf_fn, tree)
+
+
 def grouped_weighted_mean(
     tree: PyTree,
     weights: jnp.ndarray,

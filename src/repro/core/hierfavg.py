@@ -490,9 +490,9 @@ def build_hier_round_async(
     def hier_round(state: FedState, batches: PyTree, round_index: jnp.ndarray, mask=None):
         def body(s, b):
             s, m = local_step(s, b)
-            return s, m["loss"]
+            return s, (m["loss"], m["grad_norm"])
 
-        state, losses = jax.lax.scan(body, state, batches)
+        state, (losses, gnorms) = jax.lax.scan(body, state, batches)
         is_cloud = ((round_index + 1) % config.kappa2_effective) == 0
 
         def cloud_boundary(s: FedState) -> FedState:
@@ -518,7 +518,7 @@ def build_hier_round_async(
             return s._replace(params=edge(s.params, mask))
 
         state = jax.lax.cond(is_cloud, cloud_boundary, edge_boundary, state)
-        return state, {"loss": jnp.mean(losses)}
+        return state, {"loss": jnp.mean(losses), "grad_norm": jnp.mean(gnorms)}
 
     return hier_round
 
@@ -551,9 +551,9 @@ def build_hier_round(
     def hier_round(state: FedState, batches: PyTree, round_index: jnp.ndarray, mask=None):
         def body(s, b):
             s, m = local_step(s, b)
-            return s, m["loss"]
+            return s, (m["loss"], m["grad_norm"])
 
-        state, losses = jax.lax.scan(body, state, batches)
+        state, (losses, gnorms) = jax.lax.scan(body, state, batches)
         rounds_done = round_index + 1
         deepest = sum(
             ((rounds_done % iv) == 0).astype(jnp.int32) for iv in round_intervals
@@ -561,6 +561,89 @@ def build_hier_round(
         # every round ends with at least the edge sync -> branch index deepest-1
         branches = [(lambda sync: lambda s: sync(s, mask))(sync) for sync in level_syncs]
         state = jax.lax.switch(deepest - 1, branches, state)
-        return state, {"loss": jnp.mean(losses)}
+        return state, {"loss": jnp.mean(losses), "grad_norm": jnp.mean(gnorms)}
 
     return hier_round
+
+
+def super_round_schedule(config: HierFAVGConfig) -> Tuple[int, ...]:
+    """Deepest aggregation level after each of the κ₂ rounds of one cloud
+    interval (1 = edge only, depth = cloud). Static — every level interval
+    divides the cloud interval, so the pattern repeats each superround."""
+    kv = config.kappa_vector
+    depth = len(kv)
+    round_intervals = [math.prod(kv[1:l]) for l in range(1, depth + 1)]
+    k2_eff = config.kappa2_effective
+    return tuple(
+        sum(1 for iv in round_intervals if (j + 1) % iv == 0) for j in range(k2_eff)
+    )
+
+
+def build_super_round(
+    loss_fn: LossFn,
+    optimizer: GradientTransformation,
+    topology: Topology,
+    config: HierFAVGConfig,
+    weights: jnp.ndarray,
+    *,
+    grad_accum: int = 1,
+):
+    """One full *cloud interval* as a single jittable: κ₂ effective edge
+    intervals (each κ₁ scanned local steps + its due aggregation) fused into
+    one ``lax.scan`` over rounds, the per-round level switch folded into the
+    scan via the static ``super_round_schedule`` vector.
+
+    This is the zero-copy engine's dispatch unit (``fed.engine``): jitted
+    with ``donate_argnums=(0,)`` the multi-copy stacked ``FedState`` (params
+    + opt_state + anchor + EF residual) is updated in place instead of
+    round-tripped through fresh HBM allocations, and the host regains
+    control only at the cloud boundary — exactly the paper's natural
+    synchronization point.
+
+        super_round(state, batches, masks=None) -> (state, metrics)
+
+    batch leaves carry a leading (κ₂, κ₁) axis pair; ``masks`` is an
+    optional (κ₂, N) stack of per-round survival vectors. Metrics come back
+    *stacked* — ``{"loss": (κ₂,), "grad_norm": (κ₂,), "step": (κ₂,)}`` —
+    and live on device so the caller can defer the host fetch (async
+    metrics; ``RoundRecord`` history is reconstructed later).
+
+    Numerically bit-exact to driving ``build_hier_round`` κ₂ times from a
+    cloud-aligned round index: the scan body is the same local-step scan +
+    ``lax.switch`` subgraph. Callers must start at a cloud boundary
+    (round index ≡ 0 mod κ₂ effective) — the folded schedule assumes it.
+    """
+    spec = as_hierarchy(topology)
+    depth = _check_levels(spec, config)
+    local_step = build_local_step(loss_fn, optimizer, grad_accum=grad_accum)
+    level_syncs = [build_level_sync(spec, config, weights, l) for l in range(1, depth + 1)]
+    deepest_per_round = jnp.asarray(super_round_schedule(config), jnp.int32)
+
+    def super_round(state: FedState, batches: PyTree, masks: Optional[jnp.ndarray] = None):
+        def round_body(s, xs):
+            if masks is None:
+                deepest, batch_r = xs
+                mask_r = None
+            else:
+                deepest, batch_r, mask_r = xs
+
+            def step_body(ss, b):
+                ss, m = local_step(ss, b)
+                return ss, (m["loss"], m["grad_norm"])
+
+            s, (losses, gnorms) = jax.lax.scan(step_body, s, batch_r)
+            branches = [(lambda sync: lambda st: sync(st, mask_r))(sync) for sync in level_syncs]
+            s = jax.lax.switch(deepest - 1, branches, s)
+            metrics = {
+                "loss": jnp.mean(losses),
+                "grad_norm": jnp.mean(gnorms),
+                "step": s.step,
+            }
+            return s, metrics
+
+        xs = (deepest_per_round, batches)
+        if masks is not None:
+            xs = xs + (masks,)
+        return jax.lax.scan(round_body, state, xs)
+
+    return super_round

@@ -1,6 +1,6 @@
 from repro.data import partition, pipeline, synthetic
 from repro.data.partition import partition as make_partition, partition_hierarchy, partition_stats
-from repro.data.pipeline import FederatedBatcher, global_batch_iterator
+from repro.data.pipeline import FederatedBatcher, SuperBatchPrefetcher, global_batch_iterator
 from repro.data.synthetic import ClassificationData, TokenCorpus, clustered_gaussians, embedding_corpus, token_corpus
 
 __all__ = [
@@ -11,6 +11,7 @@ __all__ = [
     "partition_hierarchy",
     "partition_stats",
     "FederatedBatcher",
+    "SuperBatchPrefetcher",
     "global_batch_iterator",
     "ClassificationData",
     "TokenCorpus",

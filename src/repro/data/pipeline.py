@@ -16,7 +16,9 @@ LM training path used by the serving/dry-run drivers.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence
+import queue
+import threading
+from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -102,6 +104,128 @@ class FederatedBatcher:
         for c, (e, p) in zip(self.cursors, state["cursors"]):
             c.epoch, c.pos = e, p
         self._orders = [self._order(i) for i in range(self.num_clients)]
+
+
+class SuperBatchPrefetcher:
+    """Double-buffered host→device prefetch of super-round batch blocks.
+
+    The superround engine (``fed.engine``) consumes one
+    (rounds_per_block, steps_per_round, N, b, ...) block per cloud-interval
+    dispatch. Assembling that block is host work (numpy gathers) and
+    uploading it is a host→device copy — both off the critical path once
+    the device is busy with interval r: a background worker builds and
+    ``jax.device_put``s interval r+1's block while interval r computes, so
+    the dispatch loop never waits on batch assembly (double buffering; the
+    bounded queue holds at most ``prefetch`` ready blocks).
+
+    Restart safety: each block is paired with the batcher's ``state_dict``
+    snapshot taken right after producing it — i.e. the cursor state a
+    checkpoint at that block's cloud boundary must record. The live batcher
+    runs ahead of the computation, so checkpoints must use the snapshot,
+    never ``batcher.state_dict()`` directly.
+
+    ``num_blocks`` bounds total production so the batcher is left positioned
+    exactly after the engine's rounds (a per-round fallback can continue
+    from it). ``use_thread=False`` degrades to synchronous production (no
+    overlap — deterministic single-threaded mode for tests/debugging).
+    The worker is the sole batcher consumer while the prefetcher is active.
+    """
+
+    _SENTINEL_OK = "ok"
+    _SENTINEL_ERR = "err"
+
+    def __init__(
+        self,
+        batcher: FederatedBatcher,
+        *,
+        rounds_per_block: int,
+        steps_per_round: int,
+        num_blocks: Optional[int] = None,
+        device=None,
+        prefetch: int = 1,
+        use_thread: bool = True,
+    ):
+        self.batcher = batcher
+        self.rounds_per_block = int(rounds_per_block)
+        self.steps_per_round = int(steps_per_round)
+        self.num_blocks = num_blocks
+        self.device = device
+        self._produced = 0
+        self._consumed = 0
+        self._use_thread = use_thread
+        if use_thread:
+            self._queue: queue.Queue = queue.Queue(maxsize=max(1, int(prefetch)))
+            self._stop = threading.Event()
+            self._thread = threading.Thread(
+                target=self._worker, name="super-batch-prefetch", daemon=True
+            )
+            self._thread.start()
+
+    # -- block production ----------------------------------------------------
+    def _make_block(self) -> Tuple[PyTree, Dict[str, Any]]:
+        import jax
+
+        flat = self.batcher.next_batches(self.rounds_per_block * self.steps_per_round)
+        block = jax.tree_util.tree_map(
+            lambda x: np.reshape(
+                x, (self.rounds_per_block, self.steps_per_round) + x.shape[1:]
+            ),
+            flat,
+        )
+        block = jax.device_put(block, self.device)  # async upload
+        snapshot = self.batcher.state_dict()
+        return block, snapshot
+
+    def _worker(self) -> None:
+        try:
+            while not self._stop.is_set() and (
+                self.num_blocks is None or self._produced < self.num_blocks
+            ):
+                item = (self._SENTINEL_OK,) + self._make_block()
+                self._produced += 1
+                while not self._stop.is_set():
+                    try:
+                        self._queue.put(item, timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+        except Exception as e:  # surface worker failures at the next get()
+            self._queue.put((self._SENTINEL_ERR, e, None))
+
+    # -- consumption ---------------------------------------------------------
+    def get(self) -> Tuple[PyTree, Dict[str, Any]]:
+        """Next (device_block, batcher_state_snapshot). Blocks until ready."""
+        if self.num_blocks is not None and self._consumed >= self.num_blocks:
+            raise RuntimeError(
+                f"prefetcher exhausted: all {self.num_blocks} blocks consumed"
+            )
+        if self._use_thread:
+            kind, block, snapshot = self._queue.get()
+            if kind == self._SENTINEL_ERR:
+                raise RuntimeError("super-batch prefetch worker failed") from block
+        else:
+            block, snapshot = self._make_block()
+            self._produced += 1
+        self._consumed += 1
+        return block, snapshot
+
+    def stop(self) -> None:
+        """Stop the worker (idempotent). Call when abandoning blocks early."""
+        if not self._use_thread:
+            return
+        self._stop.set()
+        try:
+            while True:
+                self._queue.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=5.0)
+
+    def __enter__(self) -> "SuperBatchPrefetcher":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
 
 
 def global_batch_iterator(

@@ -1,4 +1,5 @@
-from repro.fed import failures, runner, topology, transport
+from repro.fed import engine, failures, runner, topology, transport
+from repro.fed.engine import SuperRoundEngine
 from repro.fed.transport import (
     IdentityCodec,
     Int8BlockCodec,
@@ -22,6 +23,8 @@ from repro.fed.topology import (
 )
 
 __all__ = [
+    "engine",
+    "SuperRoundEngine",
     "failures",
     "runner",
     "topology",

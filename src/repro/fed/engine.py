@@ -1,0 +1,169 @@
+"""Zero-copy superround execution engine.
+
+The per-round ``FederatedRunner`` loop pays, every edge interval: a Python
+dispatch, a full un-donated copy of the stacked (N, ...) ``FedState``
+(params + opt_state + anchor + EF residual ≈ 4 model copies per client), a
+blocking host sync for ``step``/``loss``, and a synchronous batch upload.
+The paper's protocol only *needs* the host at cloud boundaries — failure
+masks, eval, checkpointing, and early stopping are all cloud-interval
+decisions — so this engine drives one full cloud interval per dispatch and
+removes every per-round host cost:
+
+* **Donated state** — ``core.hierfavg.build_super_round`` is jitted with
+  ``donate_argnums=(0,)``: XLA reuses the FedState's buffers for the
+  output, so the multi-copy stacked state is updated in place instead of
+  round-tripped through fresh HBM allocations each interval.
+* **Cloud-interval scan fusion** — κ₂ edge intervals (κ₁ local steps +
+  the due per-level aggregation each) run as one ``lax.scan`` with the
+  level switch folded in: one dispatch and one executable per cloud
+  interval instead of κ₂ of each.
+* **Async metrics** — per-round loss / grad-norm / step accumulate on
+  device inside the scan and come back stacked; the engine stores the
+  device arrays and defers the host fetch to eval/checkpoint boundaries
+  (or the end of the run), reconstructing the per-round ``RoundRecord``
+  history host-side. No per-round blocking transfer.
+* **Device-side batch prefetch** — a ``data.pipeline.SuperBatchPrefetcher``
+  worker assembles and ``jax.device_put``s interval r+1's
+  (κ₂, κ₁, N, b, ...) block while interval r computes.
+
+Protocol state is bit-exact versus the per-round driver (tests enforce
+it; see docs/performance.md for the two 1-ULP XLA:CPU codegen caveats); the
+runner transparently falls back to the per-round path when ``eval_every``/
+``checkpoint_every`` demand sub-cloud-interval granularity or a mesh
+sharding is in play.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation
+from repro.core.hierfavg import FedState, build_super_round
+from repro.data.pipeline import SuperBatchPrefetcher
+
+PyTree = Any
+
+
+class SuperRoundEngine:
+    """Drives a ``FederatedRunner``'s training loop one cloud interval per
+    donated dispatch. Constructed (and cached) by the runner; appends the
+    same per-round ``RoundRecord`` history the per-round path would."""
+
+    def __init__(self, runner, *, donate: bool = True, prefetch: bool = True):
+        self.runner = runner
+        hier = runner.hier_config
+        self.k1 = hier.kappa1
+        self.k2 = hier.kappa2_effective
+        self.prefetch = prefetch
+        fn = build_super_round(
+            runner.loss_fn,
+            runner.optimizer,
+            runner.topology,
+            hier,
+            runner.weights,
+            grad_accum=runner.grad_accum,
+        )
+        self._super = jax.jit(fn, donate_argnums=(0,) if donate else ())
+        # [(round_base, [alive...], device metrics {"loss","grad_norm","step"})]
+        self._pending: List[Tuple[int, List[int], dict]] = []
+
+    # ------------------------------------------------------------------
+    def _masks_for_interval(self) -> Tuple[Optional[jnp.ndarray], List[int], Optional[jnp.ndarray]]:
+        """κ₂ host-side survival masks, stacked to (κ₂, N) for the scan.
+
+        Returns (mask_stack | None, per-round alive counts, last round's
+        mask for the boundary eval). Calls the failure detector once per
+        round — the same host sequence as the per-round driver.
+        """
+        r = self.runner
+        n = r.topology.num_clients
+        masks = [r._mask_for_round() for _ in range(self.k2)]
+        if all(m is None for m in masks):
+            return None, [n] * self.k2, None
+        stack = np.stack(
+            [m if m is not None else np.ones(n, np.float32) for m in masks]
+        )
+        alive = [int(row.sum()) for row in stack]
+        stack_dev = jnp.asarray(stack)
+        return stack_dev, alive, stack_dev[-1]
+
+    def _flush(self, wire_per_step: float) -> None:
+        """Materialize pending device metrics into RoundRecords (one
+        ``device_get`` per outstanding cloud interval) through the runner's
+        shared record-assembly helper — both drivers' histories are built
+        by the same code."""
+        r = self.runner
+        for round_base, alive, metrics in self._pending:
+            vals = jax.device_get(metrics)
+            for j in range(self.k2):
+                step = int(vals["step"][j])
+                r._record_round(
+                    round_base + j, step, float(vals["loss"][j]),
+                    float(vals["grad_norm"][j]), alive[j], wire_per_step,
+                )
+        self._pending.clear()
+
+    # ------------------------------------------------------------------
+    def run_intervals(
+        self, state: FedState, *, start_round: int, num_intervals: int
+    ) -> Tuple[FedState, bool]:
+        """Run ``num_intervals`` cloud intervals from a cloud-aligned
+        ``start_round``. Returns (state, stopped_early)."""
+        r = self.runner
+        if start_round % self.k2:
+            raise ValueError(
+                f"superround engine must start at a cloud boundary: "
+                f"start_round={start_round} is not a multiple of {self.k2}"
+            )
+        wire_per_step = r._wire_bytes_per_step(state)
+        stopped = False
+        prefetcher = SuperBatchPrefetcher(
+            r.batcher,
+            rounds_per_block=self.k2,
+            steps_per_round=self.k1,
+            num_blocks=num_intervals,
+            use_thread=self.prefetch,
+        )
+        try:
+            for q in range(num_intervals):
+                round_base = start_round + q * self.k2
+                block, batcher_snapshot = prefetcher.get()
+                mask_stack, alive, last_mask = self._masks_for_interval()
+                state, metrics = self._super(state, block, mask_stack)
+                self._pending.append((round_base, alive, metrics))
+
+                end_round = round_base + self.k2  # rounds completed so far
+                do_eval = (
+                    r.eval_fn is not None
+                    and r.cfg.eval_every
+                    and end_round % r.cfg.eval_every == 0
+                )
+                do_ckpt = (
+                    r.checkpointer is not None
+                    and r.cfg.checkpoint_every
+                    and end_round % r.cfg.checkpoint_every == 0
+                )
+                if do_eval or do_ckpt:
+                    self._flush(wire_per_step)
+                acc = None
+                if do_eval:
+                    cloud0 = aggregation.cloud_model(state.params, r.weights, last_mask)
+                    acc = float(r.eval_fn(cloud0))
+                    r.history[-1].accuracy = acc
+                if do_ckpt:
+                    # the live batcher has prefetched ahead; the snapshot is
+                    # the cursor state as of THIS block's cloud boundary
+                    meta = {"round": end_round, "batcher": batcher_snapshot}
+                    if r.failures is not None:
+                        meta["failures"] = r.failures.state_dict()
+                    r.checkpointer.save(r.history[-1].step, state, meta)
+                if acc is not None and r.cfg.target_accuracy and acc >= r.cfg.target_accuracy:
+                    stopped = True
+                    break
+            self._flush(wire_per_step)
+        finally:
+            prefetcher.stop()
+        return state, stopped

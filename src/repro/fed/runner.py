@@ -13,6 +13,13 @@ only at aggregation boundaries (the natural synchronization points of the
 paper's protocol). Metrics include the paper's T/E accounting (cost_model)
 so experiments read time-to-accuracy directly off the run log.
 
+By default (``RunnerConfig.engine="auto"``) every whole cloud interval is
+delegated to the zero-copy superround engine (``fed.engine``): one donated
+dispatch per κ₂ edge intervals, device-side batch prefetch, and async
+metrics — bit-exact versus this per-round loop, which remains the fallback
+whenever ``eval_every``/``checkpoint_every`` demand finer granularity than
+a cloud interval (or a mesh sharding is configured).
+
 When ``hier_config.transport`` declares per-level link codecs, the cost
 accounting automatically switches to the compressed wire: T/E use
 ``WorkloadCosts.with_bits`` and each round records the cumulative uplink
@@ -50,6 +57,11 @@ class RunnerConfig:
     checkpoint_every: int = 0  # rounds between checkpoints (0 = never)
     target_accuracy: float = 0.0  # stop early when reached (0 = never)
     straggler_deadline_pct: float = 95.0
+    # "auto": superround engine (fed.engine) for every whole cloud interval
+    # whose boundaries satisfy eval/checkpoint granularity, per-round
+    # otherwise; "superround" forces the engine (raises if ineligible);
+    # "per_round" forces the legacy one-dispatch-per-edge-interval loop.
+    engine: str = "auto"
 
 
 @dataclasses.dataclass
@@ -62,6 +74,7 @@ class RoundRecord:
     sim_energy_j: float
     accuracy: Optional[float] = None
     wire_mb: float = 0.0  # cumulative uplink MB/client on the compressed wire
+    grad_norm: Optional[float] = None  # mean stacked-gradient norm over the round
 
 
 class FederatedRunner:
@@ -104,7 +117,9 @@ class FederatedRunner:
         self.failures = failures
         self.stragglers = stragglers
         self.checkpointer = checkpointer
+        self.grad_accum = grad_accum
         self.mesh = mesh
+        self._engine = None  # lazily built (and cached) SuperRoundEngine
 
         round_fn = build_hier_round(
             loss_fn, optimizer, topology, hier_config, self.weights, grad_accum=grad_accum
@@ -152,7 +167,7 @@ class FederatedRunner:
         transport's per-level bits-per-parameter."""
         spec = as_hierarchy(self.topology)
         per_client_bytes = sum(
-            leaf.size // leaf.shape[0] * 4
+            leaf.size // leaf.shape[0] * leaf.dtype.itemsize
             for leaf in jax.tree_util.tree_leaves(state.params)
         )
         bits = self.transport.bits_vector() if self.transport is not None else None
@@ -162,7 +177,79 @@ class FederatedRunner:
         )
         return float(sum(traffic))
 
+    def _record_round(
+        self,
+        round_index: int,
+        step: int,
+        loss: float,
+        grad_norm: float,
+        mask_alive: int,
+        wire_per_step: float,
+        accuracy: Optional[float] = None,
+    ) -> RoundRecord:
+        """Assemble and append one round's ``RoundRecord`` — the single
+        site both drivers (per-round loop and superround engine) share, so
+        cost-model T/E, wire accounting, and any future fields stay
+        field-for-field identical between the two histories."""
+        sim_t = sim_e = 0.0
+        if self.costs is not None:
+            k1 = self.hier_config.kappa1
+            k2 = self.hier_config.kappa2_effective
+            sim_t = cm.time_at_step(self.costs, k1, k2, step)
+            sim_e = cm.energy_at_step(self.costs, k1, k2, step)
+        record = RoundRecord(
+            round=round_index,
+            step=step,
+            loss=loss,
+            mask_alive=mask_alive,
+            sim_time_s=sim_t,
+            sim_energy_j=sim_e,
+            accuracy=accuracy,
+            wire_mb=step * wire_per_step / 1e6,
+            grad_norm=grad_norm,
+        )
+        self.history.append(record)
+        return record
+
+    def _superround_eligible(self, start_round: int) -> bool:
+        """The engine drives whole cloud intervals with host seams at cloud
+        boundaries only — eval/checkpoint cadences must land there."""
+        k2 = self.hier_config.kappa2_effective
+        if self.mesh is not None or start_round % k2 != 0:
+            return False
+        for every in (self.cfg.eval_every, self.cfg.checkpoint_every):
+            if every and every % k2 != 0:
+                return False
+        return True
+
     def run(self, state: FedState, *, start_round: int = 0) -> FedState:
+        mode = self.cfg.engine
+        if mode not in ("auto", "superround", "per_round"):
+            raise ValueError(f"RunnerConfig.engine must be auto|superround|per_round, got {mode!r}")
+        k2 = self.hier_config.kappa2_effective
+        if mode != "per_round":
+            eligible = self._superround_eligible(start_round)
+            full = (self.cfg.num_rounds - start_round) // k2 if eligible else 0
+            if mode == "superround" and full <= 0:
+                raise ValueError(
+                    "engine='superround' needs a cloud-aligned start_round, "
+                    "eval_every/checkpoint_every multiples of "
+                    f"kappa2_effective={k2}, no mesh shardings, and at least "
+                    "one whole cloud interval of rounds"
+                )
+            if full > 0:
+                if self._engine is None:
+                    from repro.fed.engine import SuperRoundEngine
+
+                    self._engine = SuperRoundEngine(self)
+                state, stopped = self._engine.run_intervals(
+                    state, start_round=start_round, num_intervals=full
+                )
+                if stopped:
+                    return state
+                start_round += full * k2
+        # per-round path: the remainder (partial trailing interval), or
+        # everything when the cadence needs sub-cloud-interval granularity
         k1 = self.hier_config.kappa1
         wire_per_step = self._wire_bytes_per_step(state)
         for r in range(start_round, self.cfg.num_rounds):
@@ -174,32 +261,18 @@ class FederatedRunner:
             state, metrics = self._round(state, batches, jnp.int32(r), mask_dev)
             step = int(state.step)
 
-            sim_t = sim_e = 0.0
-            if self.costs is not None:
-                k2 = self.hier_config.kappa2_effective
-                sim_t = cm.time_at_step(self.costs, k1, k2, step)
-                sim_e = cm.energy_at_step(self.costs, k1, k2, step)
-
             acc = None
             if self.eval_fn is not None and self.cfg.eval_every and (r + 1) % self.cfg.eval_every == 0:
                 # evaluate the cloud model = weighted mean of client models
+                # (single-model reduction: no (N, ...) broadcast allocation)
                 from repro.core import aggregation
 
-                cloud = aggregation.weighted_mean(state.params, self.weights, mask_dev)
-                cloud0 = jax.tree_util.tree_map(lambda x: x[0], cloud)
+                cloud0 = aggregation.cloud_model(state.params, self.weights, mask_dev)
                 acc = float(self.eval_fn(cloud0))
 
-            self.history.append(
-                RoundRecord(
-                    round=r,
-                    step=step,
-                    loss=float(metrics["loss"]),
-                    mask_alive=n_alive,
-                    sim_time_s=sim_t,
-                    sim_energy_j=sim_e,
-                    accuracy=acc,
-                    wire_mb=step * wire_per_step / 1e6,
-                )
+            self._record_round(
+                r, step, float(metrics["loss"]), float(metrics["grad_norm"]),
+                n_alive, wire_per_step, accuracy=acc,
             )
 
             if self.checkpointer is not None and self.cfg.checkpoint_every and (
@@ -225,4 +298,5 @@ class FederatedRunner:
             "sim_energy_j": [h.sim_energy_j for h in self.history],
             "alive": [h.mask_alive for h in self.history],
             "wire_mb": [h.wire_mb for h in self.history],
+            "grad_norm": [h.grad_norm for h in self.history],
         }

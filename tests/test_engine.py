@@ -1,0 +1,354 @@
+"""Superround engine: bit-exactness vs the per-round driver, buffer
+donation, device-side prefetch, and runner integration."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    FedTopology,
+    HierFAVGConfig,
+    aggregation,
+    build_hier_round,
+    build_super_round,
+    init_state,
+    super_round_schedule,
+)
+from repro.core.hierarchy import parse_fanouts
+from repro.data import FederatedBatcher, SuperBatchPrefetcher, clustered_gaussians, make_partition
+from repro.fed import FailureSimulator, FederatedRunner, RunnerConfig, TransportSpec
+from repro.models import cnn
+from repro.optim import momentum, sgd
+
+DIM = 3
+
+
+def _quad(rng, n):
+    centers = rng.normal(size=(n, DIM))
+    sizes = rng.integers(1, 4, size=n).astype(np.float64)
+
+    def loss_fn(params, batch, _rng):
+        return 0.5 * jnp.sum((params["w"] - batch["c"]) ** 2)
+
+    batch = {"c": jnp.asarray(centers, jnp.float32)}
+    return sizes, loss_fn, batch
+
+
+def _assert_trees_equal(t1, t2, what, ulp_tol=False):
+    leaves1 = jax.tree_util.tree_leaves(t1)
+    leaves2 = jax.tree_util.tree_leaves(t2)
+    assert len(leaves1) == len(leaves2), what
+    for a, b in zip(leaves1, leaves2):
+        if ulp_tol:
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), rtol=3e-6, atol=2e-7, err_msg=what
+            )
+        else:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=what)
+
+
+def _drive_both(topo, cfg, sizes, loss_fn, batch, opt, *, intervals=2, masks=None):
+    """Run `intervals` cloud intervals through (a) the per-round hier_round
+    loop and (b) the fused superround, from identical initial state; return
+    both final states plus both metric streams."""
+    k1, k2 = cfg.kappa1, cfg.kappa2_effective
+    w = jnp.asarray(sizes, jnp.float32)
+    s1 = init_state(jax.random.PRNGKey(0), {"w": jnp.zeros(DIM)}, opt, topo, cfg)
+    s2 = init_state(jax.random.PRNGKey(0), {"w": jnp.zeros(DIM)}, opt, topo, cfg)
+    rnd = jax.jit(build_hier_round(loss_fn, opt, topo, cfg, w))
+    sup = jax.jit(build_super_round(loss_fn, opt, topo, cfg, w), donate_argnums=(0,))
+    per = jax.tree_util.tree_map(lambda x: jnp.stack([x] * k1), batch)
+    block = jax.tree_util.tree_map(
+        lambda x: jnp.stack([x] * (k2 * k1)).reshape((k2, k1) + x.shape), batch
+    )
+    metrics1 = {"loss": [], "grad_norm": []}
+    for q in range(intervals):
+        for j in range(k2):
+            m = None if masks is None else jnp.asarray(masks[q * k2 + j])
+            s1, mt = rnd(s1, per, jnp.int32(q * k2 + j), m)
+            metrics1["loss"].append(float(mt["loss"]))
+            metrics1["grad_norm"].append(float(mt["grad_norm"]))
+    metrics2 = {"loss": [], "grad_norm": []}
+    for q in range(intervals):
+        mstack = (
+            None
+            if masks is None
+            else jnp.asarray(np.stack(masks[q * k2 : (q + 1) * k2]))
+        )
+        s2, mt = sup(s2, block, mstack)
+        metrics2["loss"].extend(np.asarray(mt["loss"]).tolist())
+        metrics2["grad_norm"].extend(np.asarray(mt["grad_norm"]).tolist())
+    return s1, s2, metrics1, metrics2
+
+
+def _assert_states_equal(s1, s2, ulp_tol=False):
+    """ulp_tol=False is the bit-exact claim. Configs whose aggregation graph
+    XLA:CPU compiles with different FMA/reassociation choices inside the
+    fused scan than in the standalone per-round executable (momentum
+    sync_opt_state, depth-3 ragged) are compared at a ~1-ULP tolerance
+    instead — the graphs are op-for-op identical; only codegen contraction
+    differs between the two executables."""
+    _assert_trees_equal(s1.params, s2.params, "params", ulp_tol)
+    _assert_trees_equal(s1.opt_state, s2.opt_state, "opt_state", ulp_tol)
+    assert int(s1.step) == int(s2.step)
+    if s1.anchor is not None or s2.anchor is not None:
+        _assert_trees_equal(s1.anchor, s2.anchor, "anchor", ulp_tol)
+    if s1.residual is not None or s2.residual is not None:
+        _assert_trees_equal(s1.residual, s2.residual, "residual", ulp_tol)
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness vs the per-round loop
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kappa1,kappa2", [(2, 3), (1, 1), (3, 1), (1, 4)])
+def test_superround_bitexact_two_level(rng, kappa1, kappa2):
+    sizes, loss_fn, batch = _quad(rng, 6)
+    topo = FedTopology(num_edges=2, clients_per_edge=3)
+    cfg = HierFAVGConfig(kappa1=kappa1, kappa2=kappa2)
+    s1, s2, m1, m2 = _drive_both(topo, cfg, sizes, loss_fn, batch, sgd(0.1))
+    _assert_states_equal(s1, s2)
+    np.testing.assert_array_equal(m1["loss"], m2["loss"])
+    # grad_norm is a diagnostic side-output: XLA may reassociate its
+    # sum-of-squares reduction differently inside the fused scan (state and
+    # loss stay bit-exact), so allow ULP-level drift here only
+    np.testing.assert_allclose(m1["grad_norm"], m2["grad_norm"], rtol=1e-6)
+
+
+def test_superround_bitexact_masks(rng):
+    """Per-round survival masks == the (κ₂, N) stacked mask scan, including
+    a round where a whole edge dies."""
+    sizes, loss_fn, batch = _quad(rng, 6)
+    topo = FedTopology(num_edges=2, clients_per_edge=3)
+    cfg = HierFAVGConfig(kappa1=2, kappa2=3)
+    masks = [np.ones(6, np.float32) for _ in range(6)]
+    masks[1][4] = 0.0
+    masks[2][:3] = 0.0  # edge 0 entirely dead at a boundary
+    masks[5][0] = 0.0  # masked client at the cloud boundary
+    s1, s2, m1, m2 = _drive_both(
+        topo, cfg, sizes, loss_fn, batch, sgd(0.1), masks=masks
+    )
+    _assert_states_equal(s1, s2)
+    np.testing.assert_array_equal(m1["loss"], m2["loss"])
+
+
+def test_superround_bitexact_sync_opt_state(rng):
+    """Momentum state averaged at boundaries (sync_opt_state) survives the
+    fusion bit-exactly."""
+    sizes, loss_fn, batch = _quad(rng, 6)
+    topo = FedTopology(num_edges=2, clients_per_edge=3)
+    cfg = HierFAVGConfig(kappa1=2, kappa2=2, sync_opt_state=True)
+    s1, s2, _, _ = _drive_both(topo, cfg, sizes, loss_fn, batch, momentum(0.1, 0.9))
+    _assert_states_equal(s1, s2, ulp_tol=True)
+
+
+def test_superround_bitexact_ragged_multilevel(rng):
+    """Depth-3 ragged tree with κ=(2,2,2): the folded level switch must
+    reproduce the deepest-wins schedule across both mid and top boundaries."""
+    spec = parse_fanouts("3,2,3/2,1/2")
+    sizes, loss_fn, batch = _quad(rng, spec.num_clients)
+    cfg = HierFAVGConfig.multi_level([2, 2, 2])
+    s1, s2, m1, m2 = _drive_both(spec, cfg, sizes, loss_fn, batch, sgd(0.1))
+    _assert_states_equal(s1, s2, ulp_tol=True)
+    np.testing.assert_allclose(m1["loss"], m2["loss"], rtol=1e-6)
+    np.testing.assert_allclose(m1["grad_norm"], m2["grad_norm"], rtol=1e-6)
+
+
+@pytest.mark.parametrize("transport", ["identity/int8:64", "int8_ef:64/int8_ef:64"])
+def test_superround_bitexact_transport(rng, transport):
+    """Compressed uplinks (anchor re-sync, EF residual carry) are identical
+    under the fused scan — including with a survival mask."""
+    sizes, loss_fn, batch = _quad(rng, 6)
+    topo = FedTopology(num_edges=2, clients_per_edge=3)
+    cfg = HierFAVGConfig(kappa1=2, kappa2=2, transport=TransportSpec.parse(transport))
+    masks = [np.ones(6, np.float32) for _ in range(4)]
+    masks[1][2] = 0.0
+    s1, s2, _, _ = _drive_both(
+        topo, cfg, sizes, loss_fn, batch, sgd(0.1), masks=masks
+    )
+    _assert_states_equal(s1, s2)
+
+
+def test_super_round_schedule():
+    assert super_round_schedule(HierFAVGConfig(kappa1=4, kappa2=4)) == (1, 1, 1, 2)
+    assert super_round_schedule(HierFAVGConfig(kappa1=2, kappa2=1)) == (2,)
+    assert super_round_schedule(HierFAVGConfig.multi_level([2, 2, 2])) == (1, 2, 1, 3)
+
+
+def test_superround_donation(rng):
+    """donate_argnums must actually release the input FedState's buffers
+    (the zero-copy claim): donated leaves are deleted after dispatch."""
+    sizes, loss_fn, batch = _quad(rng, 6)
+    topo = FedTopology(num_edges=2, clients_per_edge=3)
+    cfg = HierFAVGConfig(kappa1=2, kappa2=2)
+    opt = sgd(0.1)
+    w = jnp.asarray(sizes, jnp.float32)
+    sup = jax.jit(build_super_round(loss_fn, opt, topo, cfg, w), donate_argnums=(0,))
+    state = init_state(jax.random.PRNGKey(0), {"w": jnp.zeros(DIM)}, opt, topo, cfg)
+    donated_leaf = state.params["w"]
+    block = jax.tree_util.tree_map(
+        lambda x: jnp.stack([x] * 4).reshape((2, 2) + x.shape), batch
+    )
+    out, _ = sup(state, block, None)
+    jax.block_until_ready(out.params)
+    if jax.default_backend() in ("cpu", "gpu", "tpu"):
+        assert donated_leaf.is_deleted(), "donated input buffer was not released"
+    assert not jax.tree_util.tree_leaves(out.params)[0].is_deleted()
+
+
+# ---------------------------------------------------------------------------
+# prefetcher
+# ---------------------------------------------------------------------------
+
+def _make_batcher(seed=0, n=6, batch=4):
+    rng = np.random.default_rng(seed)
+    data = clustered_gaussians(rng, num_samples=240, num_classes=10, dim=(5,), class_sep=2.0)
+    parts = make_partition("edge_iid", data.y, 2, n // 2, rng)
+    return FederatedBatcher(
+        {"inputs": data.x, "targets": data.y}, parts, batch_size=batch, seed=seed
+    )
+
+
+@pytest.mark.parametrize("use_thread", [True, False])
+def test_prefetcher_matches_batcher(use_thread):
+    """Prefetched blocks reproduce the exact batch sequence (reshaped to a
+    (rounds, steps) leading pair) and the snapshots are restart-exact."""
+    ref = _make_batcher()
+    expect = [ref.next_batches(6) for _ in range(3)]
+
+    pf = SuperBatchPrefetcher(
+        _make_batcher(), rounds_per_block=2, steps_per_round=3,
+        num_blocks=3, use_thread=use_thread,
+    )
+    snapshots = []
+    with pf:
+        for q in range(3):
+            block, snap = pf.get()
+            snapshots.append(snap)
+            for key in ("inputs", "targets"):
+                got = np.asarray(block[key]).reshape((-1,) + block[key].shape[2:])
+                np.testing.assert_array_equal(got, expect[q][key])
+        with pytest.raises(RuntimeError):
+            pf.get()  # num_blocks exhausted
+
+    # snapshot q restores a batcher positioned after block q
+    resumed = _make_batcher()
+    resumed.load_state_dict(snapshots[0])
+    np.testing.assert_array_equal(
+        resumed.next_batches(6)["inputs"], expect[1]["inputs"]
+    )
+
+
+def test_prefetcher_stop_is_idempotent():
+    pf = SuperBatchPrefetcher(
+        _make_batcher(), rounds_per_block=2, steps_per_round=2, num_blocks=8
+    )
+    pf.get()
+    pf.stop()
+    pf.stop()
+
+
+# ---------------------------------------------------------------------------
+# runner integration
+# ---------------------------------------------------------------------------
+
+def _mlp_runner(engine, *, num_rounds, eval_every=0, seed=0, failures=None):
+    rng = np.random.default_rng(seed)
+    data = clustered_gaussians(rng, num_samples=360, num_classes=10, dim=(8,), class_sep=3.0)
+    parts = make_partition("edge_iid", data.y, 2, 3, rng)
+    batcher = FederatedBatcher(
+        {"inputs": data.x, "targets": data.y}, parts, batch_size=4, seed=seed
+    )
+
+    def apply_fn(p, x):
+        return jax.nn.relu(x @ p["w1"]) @ p["w2"]
+
+    def eval_fn(p):
+        return float(cnn.accuracy(apply_fn(p, jnp.asarray(data.x)), jnp.asarray(data.y)))
+
+    runner = FederatedRunner(
+        loss_fn=cnn.make_cnn_loss_fn(apply_fn),
+        optimizer=sgd(0.1),
+        topology=FedTopology(num_edges=2, clients_per_edge=3),
+        hier_config=HierFAVGConfig(kappa1=2, kappa2=3),
+        data_sizes=batcher.data_sizes,
+        batcher=batcher,
+        runner_config=RunnerConfig(num_rounds=num_rounds, eval_every=eval_every, engine=engine),
+        eval_fn=eval_fn if eval_every else None,
+        failures=failures,
+    )
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    params = {
+        "w1": jax.random.normal(k1, (8, 16)) * 0.3,
+        "w2": jax.random.normal(k2, (16, 10)) * 0.3,
+    }
+    state = runner.init(jax.random.PRNGKey(seed), params)
+    return runner, state
+
+
+def test_runner_engine_parity(rng):
+    """engine='auto' (2 superround intervals + 1 per-round leftover) must
+    reproduce the full per-round history: loss, grad_norm, steps, masks,
+    eval accuracy, wire bytes."""
+    out = {}
+    for mode in ("auto", "per_round"):
+        runner, state = _mlp_runner(
+            mode, num_rounds=7, eval_every=3,
+            failures=FailureSimulator(6, p_fail=0.2, p_recover=0.5, seed=3),
+        )
+        state = runner.run(state)
+        out[mode] = (runner.records_to_dict(), np.asarray(state.params["w1"]))
+    rec_a, p_a = out["auto"]
+    rec_p, p_p = out["per_round"]
+    np.testing.assert_array_equal(p_a, p_p)
+    gn_a = rec_a.pop("grad_norm")
+    gn_p = rec_p.pop("grad_norm")
+    np.testing.assert_allclose(gn_a, gn_p, rtol=1e-6)  # diagnostic: ULP drift ok
+    assert rec_a == rec_p
+    assert rec_a["round"] == list(range(7))  # engine intervals + fallback round
+
+
+def test_runner_forced_superround_requires_cloud_granularity():
+    runner, state = _mlp_runner("superround", num_rounds=6, eval_every=1)
+    with pytest.raises(ValueError, match="superround"):
+        runner.run(state)
+
+
+def test_runner_rejects_unknown_engine():
+    runner, state = _mlp_runner("warp", num_rounds=3)
+    with pytest.raises(ValueError, match="engine"):
+        runner.run(state)
+
+
+# ---------------------------------------------------------------------------
+# satellites: eval reduction + wire accounting
+# ---------------------------------------------------------------------------
+
+def test_cloud_model_matches_weighted_mean(rng):
+    x = {"w": jnp.asarray(rng.normal(size=(5, 4, 3)), jnp.float32)}
+    w = jnp.asarray([1.0, 2.0, 0.5, 3.0, 1.5])
+    mask = jnp.asarray([1.0, 0.0, 1.0, 1.0, 0.0])
+    full = aggregation.weighted_mean(x, w, mask)
+    single = aggregation.cloud_model(x, w, mask)
+    assert single["w"].shape == (4, 3)  # no (N, ...) broadcast
+    np.testing.assert_array_equal(np.asarray(full["w"][0]), np.asarray(single["w"]))
+    # zero survivors: keeps client 0's params, like weighted_mean[0]
+    dead = jnp.zeros(5)
+    np.testing.assert_array_equal(
+        np.asarray(aggregation.weighted_mean(x, w, dead)["w"][0]),
+        np.asarray(aggregation.cloud_model(x, w, dead)["w"]),
+    )
+
+
+def test_wire_bytes_respects_dtype(rng):
+    """bf16 models must report half the uplink bytes of fp32 (the hardcoded
+    4-byte leaf assumption is gone)."""
+    runner, state32 = _mlp_runner("per_round", num_rounds=1)
+    params16 = jax.tree_util.tree_map(
+        lambda x: x.astype(jnp.bfloat16), {"w1": np.zeros((8, 16)), "w2": np.zeros((16, 10))}
+    )
+    state16 = runner.init(jax.random.PRNGKey(0), params16)
+    b32 = runner._wire_bytes_per_step(state32)
+    b16 = runner._wire_bytes_per_step(state16)
+    assert b32 > 0
+    np.testing.assert_allclose(b16, b32 / 2, rtol=1e-6)
