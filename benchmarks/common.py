@@ -1,120 +1,95 @@
-"""Shared harness for the paper-reproduction benches.
+"""Shared harness for the paper-reproduction benches — thin wrappers over
+the declarative ``repro.fed.api`` spec layer.
 
 The paper's experiments are MNIST/CIFAR CNNs on 50 clients / 5 edges. The
 offline stand-in keeps the exact topology and partition protocols with the
 synthetic 10-class dataset (data.synthetic) and a small MLP — the
 communication/computation COST model still uses the paper's Table I
-constants, so T_alpha/E_alpha accounting is the paper's.
+constants, so T_alpha/E_alpha accounting is the paper's. Every helper here
+assembles an ``ExperimentSpec`` and calls ``run_experiment()``; the paper
+benches no longer hand-wire ``FederatedRunner(...)`` constructors.
 """
 from __future__ import annotations
 
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.core import FedTopology, HierFAVGConfig, cost_model as cm
-from repro.data import FederatedBatcher, clustered_gaussians, make_partition, partition_hierarchy
-from repro.fed import FederatedRunner, RunnerConfig, TransportSpec
-from repro.models import cnn
-from repro.optim import exponential_decay, sgd
+from repro.fed.api import (
+    AggregatorSpec,
+    CostSpec,
+    DataSpec,
+    ExperimentSpec,
+    ModelSpec,
+    RunSpec,
+    ScheduleSpec,
+    TopologySpec,
+    TransportSpec,
+)
 
 
-def build_problem(seed=0, partition="edge_iid", num_clients=50, num_edges=5,
-                  num_samples=3000, dim=16, class_sep=3.5, spec=None):
-    """``spec`` (a HierarchySpec) switches the partition to the ragged tree;
-    otherwise the uniform (num_edges, num_clients) split applies."""
-    rng = np.random.default_rng(seed)
-    data = clustered_gaussians(
-        rng, num_samples=num_samples, num_classes=10, dim=(dim,), class_sep=class_sep
+def _levels_text(spec_or_text, default: str) -> str:
+    """Accept a codec/aggregator string or a built per-level spec object."""
+    if spec_or_text is None:
+        return default
+    if isinstance(spec_or_text, str):
+        return spec_or_text
+    return spec_or_text.describe()
+
+
+def bench_spec(kappa1, kappa2, *, partition="edge_iid", rounds=None, seed=0,
+               workload="mnist", eval_every=1, lr=0.15, class_sep=3.5,
+               transport=None, aggregators=None, fanouts="", kappas=None) -> ExperimentSpec:
+    """The benchmark stand-in problem as a spec: 50 clients / 5 edges (or
+    the ``fanouts`` tree), exponential-decay SGD, paper cost constants."""
+    kv = tuple(kappas) if kappas is not None else (kappa1, kappa2)
+    if rounds is None:
+        rounds = max(240 // kv[0], 6)
+    return ExperimentSpec(
+        name=f"bench_k{'_'.join(map(str, kv))}_{partition}",
+        topology=TopologySpec(fanouts=fanouts) if fanouts
+        else TopologySpec(num_edges=5, clients_per_edge=10),
+        schedule=ScheduleSpec(kappas=kv),
+        data=DataSpec(partition=partition, class_sep=class_sep, seed=seed),
+        model=ModelSpec(lr=lr, lr_schedule="exponential"),
+        transport=TransportSpec(levels=_levels_text(transport, "identity")),
+        aggregators=AggregatorSpec(levels=_levels_text(aggregators, "weighted_mean")),
+        cost=CostSpec(workload=workload),
+        run=RunSpec(num_rounds=rounds, eval_every=eval_every, seed=seed),
     )
-    if spec is not None:
-        parts = partition_hierarchy(partition, data.y, spec, rng)
-    else:
-        parts = make_partition(partition, data.y, num_edges, num_clients // num_edges, rng)
-    batcher = FederatedBatcher(
-        {"inputs": data.x, "targets": data.y}, parts, batch_size=8, seed=seed
-    )
-
-    def init(rng_key):
-        k1, k2 = jax.random.split(rng_key)
-        return {
-            "w1": jax.random.normal(k1, (dim, 48)) * 0.25,
-            "b1": jnp.zeros((48,)),
-            "w2": jax.random.normal(k2, (48, 10)) * 0.25,
-            "b2": jnp.zeros((10,)),
-        }
-
-    def apply_fn(p, x):
-        h = jax.nn.relu(x @ p["w1"] + p["b1"])
-        return h @ p["w2"] + p["b2"]
-
-    def eval_fn(p):
-        return float(cnn.accuracy(apply_fn(p, jnp.asarray(data.x)), jnp.asarray(data.y)))
-
-    return init, apply_fn, eval_fn, batcher, data
 
 
 def run_schedule(kappa1, kappa2, *, partition="edge_iid", rounds=None, seed=0,
                  workload="mnist", eval_every=1, lr=0.15, class_sep=3.5,
-                 transport=None):
+                 transport=None, aggregators=None):
     """Train one (kappa1, kappa2) schedule; returns the runner (history has
     loss/accuracy/T/E per round). ``transport`` (a ``fed.transport.
     TransportSpec`` or codec string like 'identity/int8') compresses the
-    uplinks; T/E/wire accounting then reflects the compressed bytes."""
-    if isinstance(transport, str):
-        transport = TransportSpec.parse(transport)
-    init, apply_fn, eval_fn, batcher, _ = build_problem(
-        seed=seed, partition=partition, class_sep=class_sep
+    uplinks; ``aggregators`` (a ``core.aggregation.AggregatorSpec`` or
+    string like 'trimmed_mean:0.1/weighted_mean') swaps the per-level
+    aggregation statistic."""
+    spec = bench_spec(
+        kappa1, kappa2, partition=partition, rounds=rounds, seed=seed,
+        workload=workload, eval_every=eval_every, lr=lr, class_sep=class_sep,
+        transport=transport, aggregators=aggregators,
     )
-    topo = FedTopology(num_edges=5, clients_per_edge=10)
-    hier = HierFAVGConfig(kappa1=kappa1, kappa2=kappa2, transport=transport)
-    if rounds is None:
-        rounds = max(240 // kappa1, 6)
-    runner = FederatedRunner(
-        loss_fn=cnn.make_cnn_loss_fn(apply_fn),
-        optimizer=sgd(exponential_decay(lr, 0.995, 50)),
-        topology=topo,
-        hier_config=hier,
-        data_sizes=batcher.data_sizes,
-        batcher=batcher,
-        runner_config=RunnerConfig(num_rounds=rounds, eval_every=eval_every),
-        eval_fn=eval_fn,
-        costs=cm.paper_workload(workload),
-    )
-    state = runner.init(jax.random.PRNGKey(seed), init(jax.random.PRNGKey(seed + 1)))
-    runner.run(state)
+    runner, _ = spec.run_experiment()
     return runner
 
 
 def run_hierarchy_schedule(spec, kappas, *, partition="edge_iid", rounds=None, seed=0,
                            workload="mnist", eval_every=1, lr=0.15, class_sep=3.5,
-                           transport=None):
+                           transport=None, aggregators=None):
     """Train one κ-vector schedule on an arbitrary (possibly ragged)
     HierarchySpec; returns the runner. The two-level uniform call is
     equivalent to ``run_schedule`` on the matching FedTopology."""
-    if isinstance(transport, str):
-        transport = TransportSpec.parse(transport)
-    init, apply_fn, eval_fn, batcher, _ = build_problem(
-        seed=seed, partition=partition, class_sep=class_sep, spec=spec
+    exp = bench_spec(
+        kappas[0], kappas[1] if len(kappas) > 1 else 1, kappas=tuple(kappas),
+        fanouts=spec.fanouts_text(), partition=partition, rounds=rounds,
+        seed=seed, workload=workload, eval_every=eval_every, lr=lr,
+        class_sep=class_sep, transport=transport, aggregators=aggregators,
     )
-    hier = HierFAVGConfig.multi_level(kappas, transport=transport)
-    if rounds is None:
-        rounds = max(240 // hier.kappa1, 6)
-    runner = FederatedRunner(
-        loss_fn=cnn.make_cnn_loss_fn(apply_fn),
-        optimizer=sgd(exponential_decay(lr, 0.995, 50)),
-        topology=spec,
-        hier_config=hier,
-        data_sizes=batcher.data_sizes,
-        batcher=batcher,
-        runner_config=RunnerConfig(num_rounds=rounds, eval_every=eval_every),
-        eval_fn=eval_fn,
-        costs=cm.paper_workload(workload),
-    )
-    state = runner.init(jax.random.PRNGKey(seed), init(jax.random.PRNGKey(seed + 1)))
-    runner.run(state)
+    runner, _ = exp.run_experiment()
     return runner
 
 

@@ -4,46 +4,19 @@ cloud-based : all 50 clients, aggregation every kappa=60 steps, 10× latency.
 edge-based  : ONE edge's 10 clients only (limited data access), kappa=6.
 hierarchical: 50 clients, kappa1=6, kappa2=10 (cloud every 60).
 """
-import numpy as np
-
-from benchmarks.common import build_problem, run_schedule
-from repro.core import FedTopology, HierFAVGConfig, cost_model as cm
-from repro.data import FederatedBatcher
-from repro.fed import FederatedRunner, RunnerConfig
-from repro.models import cnn
-from repro.optim import exponential_decay, sgd
-import jax
+from benchmarks.common import run_schedule
+from repro.fed import scenarios
 
 
 def run_edge_only(seed=0, rounds=60, class_sep=2.0):
-    """Single-edge FL: the edge's 10 clients see only 1/5 of the data."""
-    init, apply_fn, eval_fn, batcher_all, data = build_problem(
-        seed=seed, partition="simple_niid", class_sep=class_sep
-    )
-    # restrict to edge 0's clients
-    parts = batcher_all.client_indices[:10]
-    batcher = FederatedBatcher(
-        {"inputs": data.x, "targets": data.y}, parts, batch_size=8, seed=seed
-    )
-    topo = FedTopology(num_edges=1, clients_per_edge=10)
-    hier = HierFAVGConfig(kappa1=6, kappa2=1)
-    costs = cm.WorkloadCosts(  # edge-only: no cloud hop
-        t_comp=cm.paper_workload("mnist").t_comp,
-        t_comm_edge=cm.paper_workload("mnist").t_comm_edge,
-        e_comp=cm.paper_workload("mnist").e_comp,
-        e_comm_edge=cm.paper_workload("mnist").e_comm_edge,
-        cloud_latency_mult=1.0,
-    )
-    runner = FederatedRunner(
-        loss_fn=cnn.make_cnn_loss_fn(apply_fn),
-        optimizer=sgd(exponential_decay(0.15, 0.995, 50)),
-        topology=topo, hier_config=hier,
-        data_sizes=batcher.data_sizes, batcher=batcher,
-        runner_config=RunnerConfig(num_rounds=rounds, eval_every=1),
-        eval_fn=eval_fn, costs=costs,
-    )
-    state = runner.init(jax.random.PRNGKey(seed), init(jax.random.PRNGKey(seed + 1)))
-    runner.run(state)
+    """Single-edge FL: the edge's 10 clients see only 1/5 of the data
+    (the ``edge_only`` registry scenario: a 50-client partition restricted
+    to the first edge, cloud_latency_mult=1)."""
+    spec = scenarios.get("edge_only", overrides=[
+        f"data.seed={seed}", f"run.seed={seed}", f"run.num_rounds={rounds}",
+        f"data.class_sep={class_sep}",
+    ])
+    runner, _ = spec.run_experiment()
     return runner
 
 

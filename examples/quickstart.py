@@ -1,49 +1,21 @@
-"""Quickstart: hierarchical FL in ~40 lines.
+"""Quickstart: hierarchical FL from a declarative spec, in ~15 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 
 Trains a small classifier across 20 clients / 4 edge servers with HierFAVG
 (kappa1=4 local steps per edge aggregation, kappa2=2 edge rounds per cloud
 round) and prints the accuracy + simulated wall-clock/energy per round.
+The whole experiment is the ``quickstart`` registry entry — tweak any axis
+with a dotted-path override, e.g.
+``scenarios.get("quickstart", overrides=["schedule.kappas=6,2"])``.
 """
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import FedTopology, HierFAVGConfig, cost_model as cm
-from repro.data import FederatedBatcher, clustered_gaussians, make_partition
-from repro.fed import FederatedRunner, RunnerConfig
-from repro.models import cnn
-from repro.optim import sgd
+from repro.fed import scenarios
 
 
 def main():
-    rng = np.random.default_rng(0)
-    data = clustered_gaussians(rng, num_samples=2000, num_classes=10, dim=(16,), class_sep=3.5)
-    parts = make_partition("edge_niid", data.y, num_edges=4, clients_per_edge=5, rng=rng)
-    batcher = FederatedBatcher({"inputs": data.x, "targets": data.y}, parts, batch_size=8)
-
-    def init(key):
-        k1, k2 = jax.random.split(key)
-        return {"w1": jax.random.normal(k1, (16, 48)) * 0.25, "b1": jnp.zeros(48),
-                "w2": jax.random.normal(k2, (48, 10)) * 0.25, "b2": jnp.zeros(10)}
-
-    def apply_fn(p, x):
-        return jax.nn.relu(x @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
-
-    runner = FederatedRunner(
-        loss_fn=cnn.make_cnn_loss_fn(apply_fn),
-        optimizer=sgd(0.15),
-        topology=FedTopology(num_edges=4, clients_per_edge=5),
-        hier_config=HierFAVGConfig(kappa1=4, kappa2=2),
-        data_sizes=batcher.data_sizes,
-        batcher=batcher,
-        runner_config=RunnerConfig(num_rounds=24, eval_every=4),
-        eval_fn=lambda p: float(cnn.accuracy(apply_fn(p, jnp.asarray(data.x)), jnp.asarray(data.y))),
-        costs=cm.paper_workload("mnist"),
-    )
-    state = runner.init(jax.random.PRNGKey(0), init(jax.random.PRNGKey(1)))
-    runner.run(state)
+    spec = scenarios.get("quickstart")
+    print(spec.describe())
+    runner, _ = spec.run_experiment()
     for h in runner.history:
         if h.accuracy is not None:
             print(f"round {h.round:3d}  step {h.step:4d}  loss {h.loss:.3f}  "

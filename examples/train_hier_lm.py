@@ -1,85 +1,48 @@
-"""End-to-end federated LM training (deliverable b).
+"""End-to-end federated LM training (deliverable b), spec-driven.
 
     PYTHONPATH=src python examples/train_hier_lm.py              # ~10M model, fast
     PYTHONPATH=src python examples/train_hier_lm.py --preset 100m --rounds 40
 
 Trains a decoder-only LM with HierFAVG across 8 clients / 2 edges on a
 Markov-teacher token corpus with label-skewed (edge-NIID) client splits,
-with checkpointing + failure injection — the full production loop on CPU.
+with checkpointing + failure injection — the full production loop on CPU,
+assembled from the ``lm_edge_niid`` registry scenario. Every CLI flag is a
+dotted-path override on that spec.
 """
 import argparse
-import dataclasses
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.checkpoint import CheckpointManager
-from repro.configs.paper import LM_100M
-from repro.core import FedTopology, HierFAVGConfig
-from repro.data import FederatedBatcher, make_partition, token_corpus
-from repro.fed import FailureSimulator, FederatedRunner, RunnerConfig
-from repro.models import transformer
-from repro.optim import adam, warmup_cosine
-
-PRESETS = {
-    "10m": dataclasses.replace(
-        LM_100M, name="lm-10m", num_layers=4, d_model=256, num_heads=8,
-        num_kv_heads=4, d_ff=768, vocab_size=512,
-    ),
-    "100m": dataclasses.replace(LM_100M, vocab_size=512),
-}
+from repro.fed import scenarios
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--preset", default="10m", choices=list(PRESETS))
+    ap.add_argument("--preset", default="10m", choices=["10m", "100m"])
     ap.add_argument("--rounds", type=int, default=24)
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--ckpt-dir", default="/tmp/hier_lm_ckpt")
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--inject-failures", action="store_true")
+    ap.add_argument("--set", dest="overrides", action="append", default=[],
+                    metavar="PATH=VALUE", help="extra spec overrides, repeatable")
     args = ap.parse_args()
 
-    cfg = PRESETS[args.preset]
-    rng = np.random.default_rng(0)
-    corp = token_corpus(rng, num_sequences=512, seq_len=args.seq_len, vocab=cfg.vocab_size,
-                        num_classes=8, concentration=0.2)
-    parts = make_partition("edge_niid", corp.labels, 2, 4, rng, classes_per_edge=4)
-    batcher = FederatedBatcher(
-        {"tokens": corp.tokens}, parts, batch_size=8, seed=0,
-        batch_fn=lambda d: {"inputs": d["tokens"][..., :-1], "targets": d["tokens"][..., 1:]},
-    )
-
-    topo = FedTopology(num_edges=2, clients_per_edge=4)
-    hier = HierFAVGConfig(kappa1=4, kappa2=2)
-    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
-    n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
-    print(f"model: {cfg.name} ({n_params/1e6:.1f}M params), topology 8 clients / 2 edges, "
-          f"kappa1={hier.kappa1} kappa2={hier.kappa2}")
-
-    runner = FederatedRunner(
-        loss_fn=transformer.make_loss_fn(cfg),
-        optimizer=adam(warmup_cosine(3e-4, 20, args.rounds * hier.kappa1)),
-        topology=topo,
-        hier_config=hier,
-        data_sizes=batcher.data_sizes,
-        batcher=batcher,
-        runner_config=RunnerConfig(num_rounds=args.rounds, checkpoint_every=8),
-        checkpointer=CheckpointManager(args.ckpt_dir, keep=2),
-        failures=FailureSimulator(8, p_fail=0.1, seed=1) if args.inject_failures else None,
-    )
-    if args.resume:
-        state, start = runner.restore_or_init(jax.random.PRNGKey(1), params)
-        print(f"resumed at round {start}")
-    else:
-        state, start = runner.init(jax.random.PRNGKey(1), params), 0
+    overrides = [
+        f"model.arch=lm-{args.preset}",
+        f"run.num_rounds={args.rounds}",
+        f"data.seq_len={args.seq_len}",
+        f"run.checkpoint_dir={args.ckpt_dir}",
+        "run.checkpoint_every=8",
+    ]
+    if args.inject_failures:
+        overrides += ["failures.p_fail=0.1"]
+    spec = scenarios.get("lm_edge_niid", overrides=overrides + args.overrides)
+    print(spec.describe())
 
     t0 = time.time()
-    state = runner.run(state, start_round=start)
+    runner, state = spec.run_experiment(resume=args.resume)
     for h in runner.history:
-        if h.round % 4 == 0 or h.round == args.rounds - 1:
+        if h.round % 4 == 0 or h.round == spec.run.num_rounds - 1:
             print(f"round {h.round:3d}  step {h.step:4d}  loss {h.loss:.4f}  alive {h.mask_alive}")
     print(f"\ntrained {int(state.step)} local steps in {time.time()-t0:.0f}s; "
           f"loss {runner.history[0].loss:.3f} -> {runner.history[-1].loss:.3f}")

@@ -34,7 +34,8 @@ next aggregation).
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Sequence, Union
+import dataclasses
+from typing import Any, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -259,3 +260,252 @@ def hierarchical_mean(
     # flat weighted mean over clients now equals the mean over edges with
     # weights |D^l|.
     return weighted_mean(edge, weights, mask)
+
+
+# ---------------------------------------------------------------------------
+# Robust per-segment aggregators (the per-level AggregatorSpec axis)
+# ---------------------------------------------------------------------------
+#
+# The paper's protocol aggregates with the |D_i|-weighted mean everywhere.
+# Byzantine/outlier-robust FL replaces that statistic per level with a
+# coordinate-wise trimmed mean or median (Yin et al., ICML'18) — both are
+# *unweighted* order statistics over the surviving members of each segment,
+# so they use the survival mask but not the dataset-size weights. A group
+# with zero survivors keeps its members' current parameters, matching the
+# weighted-mean operators above.
+
+
+def _segment_members(segment_ids, num_segments: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Static (G, Cmax) member-index matrix + validity mask for sorted
+    segment ids (host-side; ids come from ``HierarchySpec.segments``)."""
+    ids = np.asarray(segment_ids, np.int64)
+    sizes = np.bincount(ids, minlength=num_segments)
+    cmax = int(sizes.max())
+    members = np.zeros((num_segments, cmax), np.int32)
+    valid = np.zeros((num_segments, cmax), bool)
+    for g in range(num_segments):
+        ix = np.where(ids == g)[0]
+        members[g, : ix.shape[0]] = ix
+        valid[g, : ix.shape[0]] = True
+    return members, valid
+
+
+def _sorted_segment_values(x, members, validb, mask):
+    """Gather one (N, ...) leaf into (G, Cmax, ...) f32, masked entries at
+    +inf, sorted ascending along the member axis. Returns (sorted, m_g)
+    where m_g (G,) counts surviving members per segment."""
+    vals = x.astype(jnp.float32)[members]  # (G, Cmax, ...)
+    alive = jnp.asarray(validb)
+    if mask is not None:
+        alive = alive & (mask.astype(jnp.float32)[members] > 0)
+    m_g = jnp.sum(alive, axis=1).astype(jnp.int32)  # (G,)
+    alive_b = alive.reshape(alive.shape + (1,) * (vals.ndim - 2))
+    vals = jnp.where(alive_b, vals, jnp.inf)
+    return jnp.sort(vals, axis=1), m_g
+
+
+def _broadcast_back(per_segment: jnp.ndarray, x: jnp.ndarray, seg, m_g) -> jnp.ndarray:
+    """(G, ...) statistic -> (N, ...), zero-survivor groups keep current x."""
+    back = jnp.take(per_segment, seg, axis=0)  # (N, ...)
+    alive = jnp.take(m_g > 0, seg)
+    keep = alive.reshape(alive.shape + (1,) * (back.ndim - 1))
+    return jnp.where(keep, back, x.astype(jnp.float32)).astype(x.dtype)
+
+
+def segment_trimmed_mean(
+    tree: PyTree,
+    segment_ids: Union[jnp.ndarray, np.ndarray, Sequence[int]],
+    num_segments: int,
+    mask: Optional[jnp.ndarray] = None,
+    *,
+    trim: float = 0.1,
+) -> PyTree:
+    """Coordinate-wise ``trim``-trimmed mean per segment, broadcast back.
+
+    Per segment with m surviving members, each coordinate discards its
+    ``floor(trim * m)`` smallest and largest member values and averages the
+    rest (unweighted; m small enough that no trimming occurs degrades to the
+    plain member mean). ``trim`` must be in [0, 0.5).
+    """
+    if not 0.0 <= trim < 0.5:
+        raise ValueError(f"trim must be in [0, 0.5), got {trim}")
+    members, validb = _segment_members(segment_ids, num_segments)
+    seg = jnp.asarray(segment_ids, jnp.int32)
+
+    def leaf_fn(x):
+        svals, m_g = _sorted_segment_values(x, members, validb, mask)
+        k_g = jnp.floor(trim * m_g.astype(jnp.float32)).astype(jnp.int32)  # (G,)
+        ranks = jnp.arange(svals.shape[1], dtype=jnp.int32)  # (Cmax,)
+        keep = (ranks[None, :] >= k_g[:, None]) & (ranks[None, :] < (m_g - k_g)[:, None])
+        count = jnp.maximum(m_g - 2 * k_g, 1).astype(jnp.float32)  # (G,)
+        keep_b = keep.reshape(keep.shape + (1,) * (svals.ndim - 2))
+        sums = jnp.sum(jnp.where(keep_b, svals, 0.0), axis=1)  # (G, ...)
+        mean = sums / count.reshape((-1,) + (1,) * (sums.ndim - 1))
+        return _broadcast_back(mean, x, seg, m_g)
+
+    return jax.tree_util.tree_map(leaf_fn, tree)
+
+
+def segment_coordinate_median(
+    tree: PyTree,
+    segment_ids: Union[jnp.ndarray, np.ndarray, Sequence[int]],
+    num_segments: int,
+    mask: Optional[jnp.ndarray] = None,
+) -> PyTree:
+    """Coordinate-wise median per segment over surviving members, broadcast
+    back (the midpoint of the two central order statistics for even m)."""
+    members, validb = _segment_members(segment_ids, num_segments)
+    seg = jnp.asarray(segment_ids, jnp.int32)
+
+    def leaf_fn(x):
+        svals, m_g = _sorted_segment_values(x, members, validb, mask)
+        # central order statistics: odd m -> both (m-1)//2; even m -> m//2-1, m//2
+        lo = jnp.maximum((m_g - 1) // 2, 0)  # (G,)
+        hi = m_g // 2
+        idx_shape = (-1, 1) + (1,) * (svals.ndim - 2)
+        take = lambda i: jnp.take_along_axis(svals, i.reshape(idx_shape), axis=1)[:, 0]
+        med = 0.5 * (take(lo) + take(hi))
+        return _broadcast_back(med, x, seg, m_g)
+
+    return jax.tree_util.tree_map(leaf_fn, tree)
+
+
+# -- aggregator registry ------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class WeightedMeanAggregator:
+    """The paper's |D_i|-weighted mean (staged ``hierarchical_segment_mean``).
+
+    The default at every level; ``build_level_sync`` recognizes it and takes
+    the exact pre-AggregatorSpec code path, so an all-default spec is
+    bitwise-unchanged numerics.
+    """
+
+    @property
+    def name(self) -> str:
+        return "weighted_mean"
+
+    @property
+    def is_default(self) -> bool:
+        return True
+
+    def __call__(self, tree, weights, spec, level, mask=None):
+        return hierarchical_segment_mean(tree, weights, spec, level, mask)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrimmedMeanAggregator:
+    """Coordinate-wise trimmed mean over each level-ℓ segment's survivors."""
+
+    trim: float = 0.1
+
+    def __post_init__(self):
+        if not 0.0 <= self.trim < 0.5:
+            raise ValueError(f"trim must be in [0, 0.5), got {self.trim}")
+
+    @property
+    def name(self) -> str:
+        return f"trimmed_mean:{self.trim:g}"
+
+    @property
+    def is_default(self) -> bool:
+        return False
+
+    def __call__(self, tree, weights, spec, level, mask=None):
+        return segment_trimmed_mean(
+            tree, spec.segments(level), spec.num_nodes(level), mask, trim=self.trim
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class CoordinateMedianAggregator:
+    """Coordinate-wise median over each level-ℓ segment's survivors."""
+
+    @property
+    def name(self) -> str:
+        return "coordinate_median"
+
+    @property
+    def is_default(self) -> bool:
+        return False
+
+    def __call__(self, tree, weights, spec, level, mask=None):
+        return segment_coordinate_median(
+            tree, spec.segments(level), spec.num_nodes(level), mask
+        )
+
+
+_AGGREGATOR_FACTORIES = {
+    "weighted_mean": lambda arg: WeightedMeanAggregator(),
+    "mean": lambda arg: WeightedMeanAggregator(),
+    "trimmed_mean": lambda arg: TrimmedMeanAggregator(trim=float(arg) if arg else 0.1),
+    "coordinate_median": lambda arg: CoordinateMedianAggregator(),
+    "median": lambda arg: CoordinateMedianAggregator(),
+}
+
+
+def parse_aggregator(text: str):
+    """'weighted_mean' | 'trimmed_mean[:trim]' | 'coordinate_median', e.g.
+    'trimmed_mean:0.2'."""
+    name, _, arg = text.strip().partition(":")
+    if name not in _AGGREGATOR_FACTORIES:
+        raise ValueError(
+            f"unknown aggregator {name!r}; choose from {sorted(_AGGREGATOR_FACTORIES)}"
+        )
+    return _AGGREGATOR_FACTORIES[name](arg)
+
+
+@dataclasses.dataclass(frozen=True)
+class AggregatorSpec:
+    """One aggregator per tree level, bottom-up — the robustness twin of
+    ``fed.transport.TransportSpec``: ``aggregators[0]`` applies at the
+    client→edge sync (level 1), ``aggregators[-1]`` at the cloud sync,
+    aligned with ``HierFAVGConfig.kappa_vector``."""
+
+    aggregators: Tuple[Any, ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "aggregators", tuple(self.aggregators))
+        if not self.aggregators:
+            raise ValueError("AggregatorSpec needs at least one level")
+
+    # -- constructors -------------------------------------------------------
+
+    @classmethod
+    def default(cls, depth: int) -> "AggregatorSpec":
+        return cls(aggregators=tuple(WeightedMeanAggregator() for _ in range(depth)))
+
+    @classmethod
+    def uniform(cls, aggregator, depth: int) -> "AggregatorSpec":
+        return cls(aggregators=tuple(aggregator for _ in range(depth)))
+
+    @classmethod
+    def parse(cls, text: str) -> "AggregatorSpec":
+        """'/'-separated aggregator per level, bottom-up:
+        'trimmed_mean:0.1/weighted_mean' trims at the edge sync and keeps
+        the paper's weighted mean at the cloud."""
+        parts = [p for p in text.split("/") if p]
+        if not parts:
+            raise ValueError(f"empty aggregator spec: {text!r}")
+        return cls(aggregators=tuple(parse_aggregator(p) for p in parts))
+
+    # -- queries ------------------------------------------------------------
+
+    @property
+    def depth(self) -> int:
+        return len(self.aggregators)
+
+    def aggregator(self, level: int):
+        if not 1 <= level <= self.depth:
+            raise ValueError(f"level must be in 1..{self.depth}, got {level}")
+        return self.aggregators[level - 1]
+
+    @property
+    def is_trivial(self) -> bool:
+        """True iff every level is the default weighted mean — numerics are
+        then exactly the pre-AggregatorSpec protocol."""
+        return all(a.is_default for a in self.aggregators)
+
+    def describe(self) -> str:
+        return "/".join(a.name for a in self.aggregators)

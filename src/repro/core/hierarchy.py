@@ -176,6 +176,11 @@ class HierarchySpec:
         shape = "ragged" if any(not self.is_uniform(l) for l in range(1, self.depth + 1)) else "uniform"
         return f"{'/'.join(tiers)} ({shape}, depth {self.depth})"
 
+    def fanouts_text(self) -> str:
+        """The ``parse_fanouts`` grammar for this tree — the serializable
+        form: ``parse_fanouts(spec.fanouts_text()) == spec``."""
+        return "/".join(",".join(str(c) for c in lvl) for lvl in self.fanouts())
+
 
 def parse_fanouts(text: str) -> HierarchySpec:
     """Parse a CLI fan-out string, bottom-up, levels separated by '/'.

@@ -87,8 +87,34 @@ class HierFAVGConfig:
     async_cloud: bool = False  # 1-interval-stale cloud agg (overlaps DCN; beyond paper)
     kappas: Optional[Tuple[int, ...]] = None  # per-level κ vector (None -> (κ₁, κ₂))
     transport: Optional[Any] = None  # fed.transport.TransportSpec: one LinkCodec per level
+    aggregators: Optional[Any] = None  # core.aggregation.AggregatorSpec: one per level
 
     def __post_init__(self):
+        if self.aggregators is not None:
+            if not hasattr(self.aggregators, "aggregator") or not hasattr(
+                self.aggregators, "is_trivial"
+            ):
+                raise TypeError(
+                    f"aggregators must be a core.aggregation.AggregatorSpec, got "
+                    f"{type(self.aggregators).__name__}"
+                )
+            n_levels = len(self.kappas) if self.kappas is not None else 2
+            if self.aggregators.depth != n_levels:
+                raise ValueError(
+                    f"aggregators has {self.aggregators.depth} levels but the schedule "
+                    f"has {n_levels} (kappas={self.kappas or (self.kappa1, self.kappa2)})"
+                )
+            if not self.aggregators.is_trivial:
+                if self.async_cloud:
+                    raise ValueError(
+                        "async_cloud hardcodes the weighted mean (its stale-correction "
+                        "algebra is linear); drop the non-default aggregators"
+                    )
+                if self.delta_cloud and not self.aggregators.aggregator(n_levels).is_default:
+                    raise ValueError(
+                        "delta_cloud requires the default weighted_mean at the top "
+                        "level (delta aggregation is a weighted-mean identity)"
+                    )
         if self.transport is not None:
             if not hasattr(self.transport, "codec") or not hasattr(self.transport, "is_trivial"):
                 raise TypeError(
@@ -165,6 +191,13 @@ class HierFAVGConfig:
         TransportSpec is numerically the uncompressed protocol and allocates
         no anchor/residual state)."""
         return self.transport is not None and not self.transport.is_trivial
+
+    @property
+    def aggregators_active(self) -> bool:
+        """True iff some level replaces the paper's weighted mean (an
+        all-``weighted_mean`` AggregatorSpec is numerically the unchanged
+        protocol and takes the exact legacy code path)."""
+        return self.aggregators is not None and not self.aggregators.is_trivial
 
 
 class FedState(NamedTuple):
@@ -302,6 +335,14 @@ def build_level_sync(topology: Topology, config: HierFAVGConfig, weights: jnp.nd
     schedule; numerically equal to the flat level-ℓ segment mean because
     the |D_i| weights compose. The top level honors ``delta_cloud``.
 
+    Robust aggregation: when ``config.aggregators`` assigns this level a
+    non-default aggregator (``core.aggregation.AggregatorSpec``, e.g.
+    ``trimmed_mean`` or ``coordinate_median``), that statistic replaces the
+    weighted mean for this level's sync — applied to whatever the transport
+    delivered, so robustness composes with compression and survival masks.
+    The default ``weighted_mean`` takes this exact legacy path, bitwise
+    unchanged.
+
     Compressed transport: when ``config.transport`` assigns this level a
     non-identity ``LinkCodec``, each client's upload is its model delta
     w − w_anchor (anchor = last broadcast it received) pushed through the
@@ -323,6 +364,13 @@ def build_level_sync(topology: Topology, config: HierFAVGConfig, weights: jnp.nd
         codec = config.transport.codec(level)
         if codec.is_identity:
             codec = None
+    # per-level robust aggregator (AggregatorSpec axis); the default
+    # weighted mean keeps the exact legacy hierarchical_segment_mean path
+    robust = None
+    if config.aggregators_active:
+        robust = config.aggregators.aggregator(level)
+        if robust.is_default:
+            robust = None
     seg_ids = jnp.asarray(spec.segments(level), jnp.int32)
     num_segs = spec.num_nodes(level)
 
@@ -344,7 +392,10 @@ def build_level_sync(topology: Topology, config: HierFAVGConfig, weights: jnp.nd
             params = agg(uploaded)
             anchor = jax.tree_util.tree_map(jnp.copy, params)
         else:
-            agg = lambda t: aggregation.hierarchical_segment_mean(t, weights, spec, level, mask)
+            if robust is not None:
+                agg = lambda t: robust(t, weights, spec, level, mask)
+            else:
+                agg = lambda t: aggregation.hierarchical_segment_mean(t, weights, spec, level, mask)
             params = agg(uploaded)
             if config.transport_active:
                 anchor = jax.tree_util.tree_map(jnp.copy, params)

@@ -1,4 +1,6 @@
 from repro.fed import engine, failures, runner, topology, transport
+from repro.fed import api, scenarios
+from repro.fed.api import ExperimentSpec
 from repro.fed.engine import SuperRoundEngine
 from repro.fed.transport import (
     IdentityCodec,
@@ -23,6 +25,9 @@ from repro.fed.topology import (
 )
 
 __all__ = [
+    "api",
+    "scenarios",
+    "ExperimentSpec",
     "engine",
     "SuperRoundEngine",
     "failures",

@@ -1,0 +1,715 @@
+"""Declarative experiment construction: the ``ExperimentSpec`` tree.
+
+The paper's value proposition is a *design space* — κ-vector schedules,
+topologies, data distributions, aggregation statistics, and link budgets
+traded against time-to-accuracy — but assembling one point of that space
+by hand takes 8+ ``FederatedRunner`` constructor arguments. This module
+makes an experiment a *value*: a serializable dataclass tree that
+
+* round-trips through plain dicts/JSON (``to_dict`` / ``from_dict`` /
+  ``to_json`` / ``from_json`` — sweepable, loggable, diffable),
+* accepts dotted-path CLI overrides
+  (``--set schedule.kappas=4,2 --set transport.levels=identity/int8_ef:128``)
+  with errors that name the bad path,
+* assembles the full runner (``build() -> FederatedRunner``) or runs the
+  experiment end to end (``run_experiment() -> (runner, final_state)``).
+
+Sections (all optional; defaults are the paper's 50-client / 5-edge
+benchmark stand-in):
+
+    topology     FedTopology or ragged tree (``fanouts`` grammar)
+    schedule     the κ-vector + sync/delta/async flags
+    data         synthetic dataset + partition protocol + batching
+    model        architecture + optimizer + LR schedule
+    transport    per-level link codecs (``fed.transport`` grammar)
+    aggregators  per-level aggregation statistic (``core.aggregation``)
+    failures     failure / straggler injection
+    cost         the paper's T/E cost model workload
+    run          rounds, cadences, engine, seeds
+
+Named paper configurations live in ``repro.fed.scenarios``; anything the
+spec cannot express (mesh shardings, custom models/losses, grad
+accumulation) drops down to the explicit ``FederatedRunner(...)``
+constructor, which is unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+PyTree = Any
+
+_MISSING = dataclasses.MISSING
+
+
+# ---------------------------------------------------------------------------
+# Spec sections
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologySpec:
+    """The aggregation tree. ``fanouts`` (the ``core.hierarchy.parse_fanouts``
+    grammar, e.g. ``"16,12,10,7,5/5"`` or ``"10,10/3,2/2"``) wins when set;
+    otherwise the uniform two-level ``num_edges`` x ``clients_per_edge``."""
+
+    fanouts: str = ""
+    num_edges: int = 5
+    clients_per_edge: int = 10
+
+    def build(self):
+        from repro.core.hierarchy import parse_fanouts
+        from repro.core.hierfavg import FedTopology
+
+        if self.fanouts:
+            return parse_fanouts(self.fanouts)
+        return FedTopology(num_edges=self.num_edges, clients_per_edge=self.clients_per_edge)
+
+    @property
+    def depth(self) -> int:
+        from repro.core.hierarchy import as_hierarchy
+
+        return as_hierarchy(self.build()).depth
+
+    @property
+    def num_clients(self) -> int:
+        from repro.core.hierarchy import as_hierarchy
+
+        return as_hierarchy(self.build()).num_clients
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleSpec:
+    """The κ-vector: ``kappas[0]`` local steps per edge aggregation,
+    ``kappas[l]`` level-l intervals per level-(l+1) aggregation. Length must
+    match the topology depth."""
+
+    kappas: Tuple[int, ...] = (6, 10)
+    sync_opt_state: bool = False
+    delta_cloud: bool = False
+    async_cloud: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class DataSpec:
+    """Synthetic dataset + partition protocol (Section IV-A).
+
+    ``dataset="gaussians"`` is the paper-bench classification stand-in;
+    ``dataset="tokens"`` is the Markov-teacher LM corpus (``num_samples``
+    then counts sequences of ``seq_len`` over ``vocab`` tokens).
+    ``partition_topology`` (fanouts grammar) partitions for a *different*
+    tree than the training topology, keeping the first N client shards —
+    the paper's edge-only data-access restriction."""
+
+    dataset: str = "gaussians"  # gaussians | tokens
+    partition: str = "edge_iid"  # iid | simple_niid | edge_iid | edge_niid
+    num_samples: int = 3000
+    dim: int = 16
+    num_classes: int = 10
+    class_sep: float = 3.5
+    batch_size: int = 8
+    seed: int = 0
+    classes_per_edge: int = 0  # edge_niid skew override (0 = the C/2 rule)
+    partition_topology: str = ""  # partition as if this tree (fanouts grammar)
+    seq_len: int = 64  # tokens only
+    vocab: int = 512  # tokens only
+    concentration: float = 0.2  # tokens only
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Architecture + optimizer. ``arch="mlp"`` is the benchmark classifier
+    (``dim -> hidden -> num_classes``); ``arch="lm-10m" | "lm-100m"`` are the
+    decoder-only LM presets (vocab follows ``data.vocab``)."""
+
+    arch: str = "mlp"  # mlp | lm-10m | lm-100m
+    hidden: int = 48
+    optimizer: str = "sgd"  # sgd | adam
+    lr: float = 0.15
+    lr_schedule: str = "constant"  # constant | exponential | warmup_cosine
+    decay_rate: float = 0.995
+    decay_steps: int = 50
+    warmup_steps: int = 20
+
+
+def _parse_levels(text: str, depth: int, parse_one, field: str, default: str) -> tuple:
+    """'/'-separated per-level grammar shared by transport/aggregators: a
+    single entry (no '/') replicates to every level; otherwise the count
+    must match the schedule depth. Errors name the spec field."""
+    parts = [p for p in (text.strip() or default).split("/") if p]
+    if len(parts) == 1:
+        parts = parts * depth
+    if len(parts) != depth:
+        raise ValueError(
+            f"{field}={text!r} names {len(parts)} levels but the schedule has "
+            f"{depth}; give one entry per level ('/'-separated) or one entry "
+            f"for all levels"
+        )
+    try:
+        return tuple(parse_one(p) for p in parts)
+    except ValueError as e:
+        raise ValueError(f"{field}: {e}") from None
+
+
+@dataclasses.dataclass(frozen=True)
+class TransportSpec:
+    """Per-level link codecs, bottom-up, in the ``fed.transport`` grammar:
+    ``"identity/int8_ef:128"`` is an fp32 edge hop and an error-feedback
+    int8 cloud hop. A single codec (no ``/``) applies to every level."""
+
+    levels: str = "identity"
+
+    def build(self, depth: int):
+        from repro.fed import transport as transport_lib
+
+        codecs = _parse_levels(
+            self.levels, depth, transport_lib.parse_codec, "transport.levels", "identity"
+        )
+        spec = transport_lib.TransportSpec(codecs=codecs)
+        return None if spec.is_trivial else spec
+
+
+@dataclasses.dataclass(frozen=True)
+class AggregatorSpec:
+    """Per-level aggregation statistic, bottom-up, in the
+    ``core.aggregation`` grammar: ``"trimmed_mean:0.1/weighted_mean"`` trims
+    at the edge sync and keeps the paper's weighted mean at the cloud. A
+    single name applies to every level."""
+
+    levels: str = "weighted_mean"
+
+    def build(self, depth: int):
+        from repro.core import aggregation
+
+        aggs = _parse_levels(
+            self.levels, depth, aggregation.parse_aggregator,
+            "aggregators.levels", "weighted_mean",
+        )
+        spec = aggregation.AggregatorSpec(aggregators=aggs)
+        return None if spec.is_trivial else spec
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureSpec:
+    """Host-side failure / straggler injection (``fed.failures``)."""
+
+    p_fail: float = 0.0  # per-boundary P(alive -> dead); 0 = no failures
+    p_recover: float = 0.5
+    straggler_sigma: float = 0.0  # lognormal step-latency sigma; 0 = off
+    straggler_mean_s: float = 1.0
+    seed: int = 1
+
+    def build(self, num_clients: int):
+        from repro.fed.failures import FailureSimulator, StragglerModel
+
+        failures = stragglers = None
+        if self.p_fail > 0:
+            failures = FailureSimulator(
+                num_clients, p_fail=self.p_fail, p_recover=self.p_recover, seed=self.seed
+            )
+        if self.straggler_sigma > 0:
+            stragglers = StragglerModel(
+                num_clients,
+                mean_step_s=self.straggler_mean_s,
+                sigma=self.straggler_sigma,
+                seed=self.seed,
+            )
+        return failures, stragglers
+
+
+@dataclasses.dataclass(frozen=True)
+class CostSpec:
+    """The paper's T/E accounting (``core.cost_model``). ``workload="none"``
+    disables it; ``cloud_latency_mult`` overrides the Table I 10x cloud hop
+    when positive (1.0 = edge-only deployments)."""
+
+    workload: str = "mnist"  # mnist | cifar10 | none
+    cloud_latency_mult: float = 0.0  # 0 = workload default
+
+    def build(self):
+        from repro.core import cost_model as cm
+
+        if self.workload == "none":
+            return None
+        costs = cm.paper_workload(self.workload)
+        if self.cloud_latency_mult > 0:
+            costs = dataclasses.replace(costs, cloud_latency_mult=self.cloud_latency_mult)
+        return costs
+
+
+@dataclasses.dataclass(frozen=True)
+class RunSpec:
+    """Loop shape: rounds, cadences, execution engine, checkpointing, and
+    the experiment seed (``PRNGKey(seed)`` drives training noise,
+    ``PRNGKey(seed + 1)`` the model init)."""
+
+    num_rounds: int = 40
+    eval_every: int = 1
+    checkpoint_every: int = 0
+    checkpoint_dir: str = ""
+    target_accuracy: float = 0.0
+    engine: str = "auto"  # auto | superround | per_round
+    seed: int = 0
+
+
+# ---------------------------------------------------------------------------
+# The experiment spec
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    """One point of the paper's design space as a serializable value."""
+
+    name: str = "experiment"
+    topology: TopologySpec = dataclasses.field(default_factory=TopologySpec)
+    schedule: ScheduleSpec = dataclasses.field(default_factory=ScheduleSpec)
+    data: DataSpec = dataclasses.field(default_factory=DataSpec)
+    model: ModelSpec = dataclasses.field(default_factory=ModelSpec)
+    transport: TransportSpec = dataclasses.field(default_factory=TransportSpec)
+    aggregators: AggregatorSpec = dataclasses.field(default_factory=AggregatorSpec)
+    failures: FailureSpec = dataclasses.field(default_factory=FailureSpec)
+    cost: CostSpec = dataclasses.field(default_factory=CostSpec)
+    run: RunSpec = dataclasses.field(default_factory=RunSpec)
+
+    def __post_init__(self):
+        # catch the same-name trap early: fed.transport.TransportSpec /
+        # core.aggregation.AggregatorSpec are the *built* forms — the spec
+        # tree holds the serializable fed.api wrappers (string fields)
+        for f in dataclasses.fields(self):
+            default = _field_default(f)
+            if dataclasses.is_dataclass(default) and not isinstance(
+                getattr(self, f.name), type(default)
+            ):
+                raise TypeError(
+                    f"ExperimentSpec.{f.name} must be a fed.api.{type(default).__name__} "
+                    f"(the serializable spec form), got "
+                    f"{type(getattr(self, f.name)).__name__}; built forms like "
+                    f"fed.transport.TransportSpec / core.aggregation.AggregatorSpec "
+                    f"belong in HierFAVGConfig, not the spec tree"
+                )
+
+    # -- serialization ------------------------------------------------------
+
+    def to_dict(self) -> Dict[str, Any]:
+        return _jsonable(dataclasses.asdict(self))
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "ExperimentSpec":
+        return _from_dict(cls, d, prefix="")
+
+    def to_json(self, *, indent: int = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    @classmethod
+    def from_json(cls, text: str) -> "ExperimentSpec":
+        return cls.from_dict(json.loads(text))
+
+    # -- dotted-path overrides ----------------------------------------------
+
+    def with_overrides(self, assignments: Sequence[str]) -> "ExperimentSpec":
+        """Apply ``"dotted.path=value"`` assignments, e.g.
+        ``spec.with_overrides(["schedule.kappas=4,2", "run.num_rounds=12"])``.
+        Unknown paths and malformed values raise ``ValueError`` naming the
+        offending path and listing the valid fields at that point."""
+        spec = self
+        for a in assignments:
+            path, eq, text = a.partition("=")
+            if not eq:
+                raise ValueError(
+                    f"override {a!r} must look like 'dotted.path=value' "
+                    f"(e.g. schedule.kappas=4,2)"
+                )
+            spec = _apply_override(spec, path.strip().split("."), text.strip(), path.strip())
+        return spec
+
+    @classmethod
+    def parse(
+        cls,
+        overrides: Sequence[str] = (),
+        *,
+        base: Optional["ExperimentSpec"] = None,
+    ) -> "ExperimentSpec":
+        """Build a spec from dotted-path overrides on ``base`` (default: the
+        default spec). This is the CLI entry point: pass the values of
+        repeated ``--set`` flags."""
+        return (base if base is not None else cls()).with_overrides(overrides)
+
+    # -- assembly -----------------------------------------------------------
+
+    def hier_config(self, *, _depth: Optional[int] = None):
+        """The ``HierFAVGConfig`` this spec describes (transport +
+        aggregators threaded through)."""
+        from repro.core.hierfavg import HierFAVGConfig
+
+        depth = self.topology.depth if _depth is None else _depth
+        if len(self.schedule.kappas) != depth:
+            raise ValueError(
+                f"schedule.kappas={self.schedule.kappas} has {len(self.schedule.kappas)} "
+                f"levels but the topology tree has depth {depth} "
+                f"({self.topology.fanouts or f'{self.topology.num_edges}x{self.topology.clients_per_edge}'}); "
+                f"set schedule.kappas to one interval per level"
+            )
+        return HierFAVGConfig.multi_level(
+            self.schedule.kappas,
+            sync_opt_state=self.schedule.sync_opt_state,
+            delta_cloud=self.schedule.delta_cloud,
+            async_cloud=self.schedule.async_cloud,
+            transport=self.transport.build(depth),
+            aggregators=self.aggregators.build(depth),
+        )
+
+    def init_params(self, rng) -> PyTree:
+        """Initial (unstacked) model parameters for this spec's model."""
+        return _model_bundle(self)["init"](rng)
+
+    def build(self):
+        """Assemble the full ``FederatedRunner`` (data, batcher, model,
+        optimizer, transport, aggregators, failures, costs, cadences)."""
+        from repro.core.hierarchy import as_hierarchy
+        from repro.fed.runner import FederatedRunner, RunnerConfig
+
+        topo = self.topology.build()
+        tree = as_hierarchy(topo)
+        hier = self.hier_config(_depth=tree.depth)
+        bundle = _model_bundle(self)
+        batcher, eval_fn = _build_data(self, topo, bundle)
+        failures, stragglers = self.failures.build(tree.num_clients)
+        checkpointer = None
+        if self.run.checkpoint_dir:
+            from repro.checkpoint import CheckpointManager
+
+            checkpointer = CheckpointManager(self.run.checkpoint_dir, keep=2)
+        runner = FederatedRunner(
+            loss_fn=bundle["loss"],
+            optimizer=_build_optimizer(self.model, self.run.num_rounds * hier.kappa1),
+            topology=topo,
+            hier_config=hier,
+            data_sizes=batcher.data_sizes,
+            batcher=batcher,
+            runner_config=RunnerConfig(
+                num_rounds=self.run.num_rounds,
+                eval_every=self.run.eval_every,
+                checkpoint_every=self.run.checkpoint_every,
+                target_accuracy=self.run.target_accuracy,
+                engine=self.run.engine,
+            ),
+            eval_fn=eval_fn,
+            costs=self.cost.build(),
+            failures=failures,
+            stragglers=stragglers,
+            checkpointer=checkpointer,
+        )
+        runner.spec = self  # provenance: the runner knows its declarative form
+        return runner
+
+    def run_experiment(self, *, resume: bool = False):
+        """Build, initialize, and train: returns ``(runner, final_state)``.
+        ``resume=True`` restores the latest checkpoint when one exists."""
+        import jax
+
+        runner = self.build()
+        params = self.init_params(jax.random.PRNGKey(self.run.seed + 1))
+        if resume:
+            if runner.checkpointer is None:
+                raise ValueError(
+                    "run_experiment(resume=True) needs run.checkpoint_dir set on "
+                    "the spec — without a checkpointer there is nothing to resume from"
+                )
+            state, start = runner.restore_or_init(jax.random.PRNGKey(self.run.seed), params)
+        else:
+            state, start = runner.init(jax.random.PRNGKey(self.run.seed), params), 0
+        state = runner.run(state, start_round=start)
+        return runner, state
+
+    def describe(self) -> str:
+        topo = (
+            self.topology.fanouts
+            or f"{self.topology.num_edges}x{self.topology.clients_per_edge}"
+        )
+        extras = []
+        if self.transport.levels != "identity":
+            extras.append(f"transport={self.transport.levels}")
+        if self.aggregators.levels != "weighted_mean":
+            extras.append(f"agg={self.aggregators.levels}")
+        if self.failures.p_fail > 0:
+            extras.append(f"p_fail={self.failures.p_fail:g}")
+        tail = (" " + " ".join(extras)) if extras else ""
+        return (
+            f"{self.name}: {topo} kappas={','.join(map(str, self.schedule.kappas))} "
+            f"{self.data.partition} {self.model.arch} rounds={self.run.num_rounds}{tail}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Serialization helpers
+# ---------------------------------------------------------------------------
+
+
+def _jsonable(v):
+    if isinstance(v, dict):
+        return {k: _jsonable(x) for k, x in v.items()}
+    if isinstance(v, (list, tuple)):
+        return [_jsonable(x) for x in v]
+    return v
+
+
+def _field_default(f: dataclasses.Field):
+    if f.default is not _MISSING:
+        return f.default
+    return f.default_factory()  # every section field has a factory
+
+
+def _from_dict(cls, d, prefix: str):
+    if not isinstance(d, dict):
+        raise ValueError(
+            f"spec section {prefix[:-1] or 'root'!r} must be a dict, got {type(d).__name__}"
+        )
+    fields = {f.name: f for f in dataclasses.fields(cls)}
+    unknown = sorted(set(d) - set(fields))
+    if unknown:
+        raise ValueError(
+            f"unknown spec key {prefix + unknown[0]!r}; valid keys under "
+            f"{prefix[:-1] or 'the spec root'!r}: {sorted(fields)}"
+        )
+    kwargs = {}
+    for name, f in fields.items():
+        if name not in d:
+            continue
+        default = _field_default(f)
+        v = d[name]
+        if dataclasses.is_dataclass(default):
+            kwargs[name] = _from_dict(type(default), v, prefix=f"{prefix}{name}.")
+        elif isinstance(default, tuple):
+            if not isinstance(v, (list, tuple)):
+                # a string would be digit-split silently ('42' -> (4, 2))
+                raise ValueError(
+                    f"spec key {prefix + name!r} expects a list of integers, "
+                    f"got {type(v).__name__} {v!r}"
+                )
+            kwargs[name] = tuple(int(x) for x in v)
+        else:
+            kwargs[name] = v
+    return cls(**kwargs)
+
+
+def _coerce(text: str, current, path: str):
+    """Parse an override value by the type of the field's current value."""
+    if isinstance(current, bool):
+        low = text.lower()
+        if low in ("1", "true", "yes", "on"):
+            return True
+        if low in ("0", "false", "no", "off"):
+            return False
+        raise ValueError(f"{path!r} expects a boolean (true/false), got {text!r}")
+    if isinstance(current, tuple):
+        try:
+            return tuple(int(x) for x in text.replace("/", ",").split(",") if x)
+        except ValueError:
+            raise ValueError(
+                f"{path!r} expects comma-separated integers (e.g. 4,2), got {text!r}"
+            ) from None
+    if isinstance(current, int):
+        try:
+            return int(text)
+        except ValueError:
+            raise ValueError(f"{path!r} expects an integer, got {text!r}") from None
+    if isinstance(current, float):
+        try:
+            return float(text)
+        except ValueError:
+            raise ValueError(f"{path!r} expects a number, got {text!r}") from None
+    return text
+
+
+def _apply_override(obj, parts, text: str, full_path: str):
+    fields = {f.name: f for f in dataclasses.fields(obj)}
+    name = parts[0]
+    if name not in fields:
+        raise ValueError(
+            f"unknown spec path {full_path!r}: {type(obj).__name__} has no field "
+            f"{name!r}; valid fields: {sorted(fields)}"
+        )
+    current = getattr(obj, name)
+    if len(parts) == 1:
+        if dataclasses.is_dataclass(current):
+            raise ValueError(
+                f"{full_path!r} is a spec section ({type(current).__name__}), not a "
+                f"value; set one of its fields: "
+                f"{sorted(f.name for f in dataclasses.fields(current))}"
+            )
+        return dataclasses.replace(obj, **{name: _coerce(text, current, full_path)})
+    if not dataclasses.is_dataclass(current):
+        raise ValueError(
+            f"cannot descend into {full_path!r}: {'.'.join(full_path.split('.')[:1])} "
+            f"field {name!r} is a plain value, not a section"
+        )
+    return dataclasses.replace(obj, **{name: _apply_override(current, parts[1:], text, full_path)})
+
+
+# ---------------------------------------------------------------------------
+# Build helpers (the one shared assembly path — examples, benchmarks, and
+# the scenario registry all construct runners through these)
+# ---------------------------------------------------------------------------
+
+
+_LM_PRESETS = ("lm-10m", "lm-100m")
+
+
+def _lm_config(spec: ExperimentSpec):
+    from repro.configs.paper import LM_100M
+
+    if spec.model.arch == "lm-10m":
+        cfg = dataclasses.replace(
+            LM_100M, name="lm-10m", num_layers=4, d_model=256, num_heads=8,
+            num_kv_heads=4, d_ff=768,
+        )
+    else:
+        cfg = LM_100M
+    return dataclasses.replace(cfg, vocab_size=spec.data.vocab)
+
+
+def _model_bundle(spec: ExperimentSpec) -> Dict[str, Any]:
+    """{"init", "loss", "apply"(mlp only)} for the spec's architecture."""
+    arch = spec.model.arch
+    if arch == "mlp":
+        import jax
+        import jax.numpy as jnp
+
+        from repro.models import cnn
+
+        dim, hidden, classes = spec.data.dim, spec.model.hidden, spec.data.num_classes
+
+        def init(key):
+            k1, k2 = jax.random.split(key)
+            return {
+                "w1": jax.random.normal(k1, (dim, hidden)) * 0.25,
+                "b1": jnp.zeros((hidden,)),
+                "w2": jax.random.normal(k2, (hidden, classes)) * 0.25,
+                "b2": jnp.zeros((classes,)),
+            }
+
+        def apply_fn(p, x):
+            h = jax.nn.relu(x @ p["w1"] + p["b1"])
+            return h @ p["w2"] + p["b2"]
+
+        return {"init": init, "apply": apply_fn, "loss": cnn.make_cnn_loss_fn(apply_fn)}
+    if arch in _LM_PRESETS:
+        from repro.models import transformer
+
+        cfg = _lm_config(spec)
+        return {
+            "init": lambda key: transformer.init_params(key, cfg),
+            "apply": None,
+            "loss": transformer.make_loss_fn(cfg),
+        }
+    raise ValueError(
+        f"model.arch must be one of ('mlp',) + {_LM_PRESETS}, got {arch!r}"
+    )
+
+
+def _build_optimizer(model: ModelSpec, total_steps: int):
+    from repro.optim import adam, exponential_decay, sgd, warmup_cosine
+
+    if model.lr_schedule == "constant":
+        lr = model.lr
+    elif model.lr_schedule == "exponential":
+        lr = exponential_decay(model.lr, model.decay_rate, model.decay_steps)
+    elif model.lr_schedule == "warmup_cosine":
+        lr = warmup_cosine(model.lr, model.warmup_steps, total_steps)
+    else:
+        raise ValueError(
+            f"model.lr_schedule must be constant|exponential|warmup_cosine, "
+            f"got {model.lr_schedule!r}"
+        )
+    if model.optimizer == "sgd":
+        return sgd(lr)
+    if model.optimizer == "adam":
+        return adam(lr)
+    raise ValueError(f"model.optimizer must be sgd|adam, got {model.optimizer!r}")
+
+
+def _build_data(spec: ExperimentSpec, topo, bundle):
+    """(batcher, eval_fn) — the single data-assembly path. RNG order matches
+    the historical hand-assembly exactly (dataset draw, then partition, both
+    from ``default_rng(data.seed)``), so spec-built runs are bit-identical
+    to the constructors they replaced."""
+    import jax.numpy as jnp
+
+    from repro.core.hierarchy import as_hierarchy, parse_fanouts
+    from repro.data import FederatedBatcher, partition_hierarchy
+    from repro.data.synthetic import clustered_gaussians, token_corpus
+
+    d = spec.data
+    rng = np.random.default_rng(d.seed)
+    pspec = parse_fanouts(d.partition_topology) if d.partition_topology else as_hierarchy(topo)
+    n = as_hierarchy(topo).num_clients
+    if pspec.num_clients < n:
+        raise ValueError(
+            f"data.partition_topology={d.partition_topology!r} has "
+            f"{pspec.num_clients} clients but the training topology needs {n}"
+        )
+    kw = {}
+    if d.partition == "edge_niid" and d.classes_per_edge:
+        kw["classes_per_edge"] = d.classes_per_edge
+
+    if d.dataset == "gaussians":
+        from repro.models import cnn
+
+        if bundle["apply"] is None:
+            raise ValueError(
+                f"model.arch={spec.model.arch!r} is a language model and needs "
+                f"data.dataset=tokens (got {d.dataset!r})"
+            )
+
+        data = clustered_gaussians(
+            rng, num_samples=d.num_samples, num_classes=d.num_classes,
+            dim=(d.dim,), class_sep=d.class_sep,
+        )
+        parts = partition_hierarchy(d.partition, data.y, pspec, rng, **kw)[:n]
+        batcher = FederatedBatcher(
+            {"inputs": data.x, "targets": data.y}, parts, batch_size=d.batch_size, seed=d.seed
+        )
+        apply_fn = bundle["apply"]
+        x_all, y_all = jnp.asarray(data.x), jnp.asarray(data.y)
+
+        def eval_fn(p):
+            return float(cnn.accuracy(apply_fn(p, x_all), y_all))
+
+        return batcher, eval_fn
+
+    if d.dataset == "tokens":
+        if spec.model.arch not in _LM_PRESETS:
+            raise ValueError(
+                f"data.dataset=tokens needs a language model, got "
+                f"model.arch={spec.model.arch!r}; choose one of {_LM_PRESETS}"
+            )
+        corp = token_corpus(
+            rng, num_sequences=d.num_samples, seq_len=d.seq_len, vocab=d.vocab,
+            num_classes=d.num_classes, concentration=d.concentration,
+        )
+        parts = partition_hierarchy(d.partition, corp.labels, pspec, rng, **kw)[:n]
+        batcher = FederatedBatcher(
+            {"tokens": corp.tokens}, parts, batch_size=d.batch_size, seed=d.seed,
+            batch_fn=lambda b: {"inputs": b["tokens"][..., :-1], "targets": b["tokens"][..., 1:]},
+        )
+        return batcher, None
+
+    raise ValueError(f"data.dataset must be gaussians|tokens, got {d.dataset!r}")
+
+
+__all__ = [
+    "AggregatorSpec",
+    "CostSpec",
+    "DataSpec",
+    "ExperimentSpec",
+    "FailureSpec",
+    "ModelSpec",
+    "RunSpec",
+    "ScheduleSpec",
+    "TopologySpec",
+    "TransportSpec",
+]

@@ -40,7 +40,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import aggregation
 from repro.core.hierfavg import FedState, build_super_round
 from repro.data.pipeline import SuperBatchPrefetcher
 
@@ -150,7 +149,7 @@ class SuperRoundEngine:
                     self._flush(wire_per_step)
                 acc = None
                 if do_eval:
-                    cloud0 = aggregation.cloud_model(state.params, r.weights, last_mask)
+                    cloud0 = r.eval_model(state.params, last_mask)
                     acc = float(r.eval_fn(cloud0))
                     r.history[-1].accuracy = acc
                 if do_ckpt:

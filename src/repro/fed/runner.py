@@ -63,6 +63,13 @@ class RunnerConfig:
     # "per_round" forces the legacy one-dispatch-per-edge-interval loop.
     engine: str = "auto"
 
+    def __post_init__(self):
+        # fail at construction, not on the first run() call
+        if self.engine not in ("auto", "superround", "per_round"):
+            raise ValueError(
+                f"RunnerConfig.engine must be auto|superround|per_round, got {self.engine!r}"
+            )
+
 
 @dataclasses.dataclass
 class RoundRecord:
@@ -161,6 +168,24 @@ class FederatedRunner:
             masks.append(m)
         return combine_masks(*masks)
 
+    def eval_model(self, params: PyTree, mask: Optional[jnp.ndarray]) -> PyTree:
+        """The single cloud model the eval/serving path should score: the
+        weighted mean of client models — or, when the schedule configures a
+        non-default top-level aggregator (``AggregatorSpec``), that robust
+        statistic, so robust experiments are judged by the model the cloud
+        would actually publish."""
+        cfg = self.hier_config
+        if getattr(cfg, "aggregators_active", False):
+            top = cfg.aggregators.aggregator(cfg.num_levels)
+            if not top.is_default:
+                spec = as_hierarchy(self.topology)
+                agg = top(params, self.weights, spec, spec.depth, mask)
+                return jax.tree_util.tree_map(lambda x: x[0], agg)
+        from repro.core import aggregation
+
+        # single-model reduction: no (N, ...) broadcast allocation
+        return aggregation.cloud_model(params, self.weights, mask)
+
     def _wire_bytes_per_step(self, state: FedState) -> float:
         """Summed per-level uplink bytes per local step for one client
         (bottleneck link, amortized by each level's interval), at the
@@ -223,9 +248,7 @@ class FederatedRunner:
         return True
 
     def run(self, state: FedState, *, start_round: int = 0) -> FedState:
-        mode = self.cfg.engine
-        if mode not in ("auto", "superround", "per_round"):
-            raise ValueError(f"RunnerConfig.engine must be auto|superround|per_round, got {mode!r}")
+        mode = self.cfg.engine  # validated by RunnerConfig.__post_init__
         k2 = self.hier_config.kappa2_effective
         if mode != "per_round":
             eligible = self._superround_eligible(start_round)
@@ -263,12 +286,7 @@ class FederatedRunner:
 
             acc = None
             if self.eval_fn is not None and self.cfg.eval_every and (r + 1) % self.cfg.eval_every == 0:
-                # evaluate the cloud model = weighted mean of client models
-                # (single-model reduction: no (N, ...) broadcast allocation)
-                from repro.core import aggregation
-
-                cloud0 = aggregation.cloud_model(state.params, self.weights, mask_dev)
-                acc = float(self.eval_fn(cloud0))
+                acc = float(self.eval_fn(self.eval_model(state.params, mask_dev)))
 
             self._record_round(
                 r, step, float(metrics["loss"]), float(metrics["grad_norm"]),
@@ -289,14 +307,9 @@ class FederatedRunner:
 
     # ------------------------------------------------------------------
     def records_to_dict(self) -> Dict[str, list]:
+        """Column-major history, one key per ``RoundRecord`` field — derived
+        from the dataclass so new record fields can't silently drop out."""
         return {
-            "round": [h.round for h in self.history],
-            "step": [h.step for h in self.history],
-            "loss": [h.loss for h in self.history],
-            "accuracy": [h.accuracy for h in self.history],
-            "sim_time_s": [h.sim_time_s for h in self.history],
-            "sim_energy_j": [h.sim_energy_j for h in self.history],
-            "alive": [h.mask_alive for h in self.history],
-            "wire_mb": [h.wire_mb for h in self.history],
-            "grad_norm": [h.grad_norm for h in self.history],
+            f.name: [getattr(h, f.name) for h in self.history]
+            for f in dataclasses.fields(RoundRecord)
         }

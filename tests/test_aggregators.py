@@ -1,0 +1,251 @@
+"""Per-level pluggable aggregators: robust statistics vs numpy oracles,
+survival-mask and ragged-tree handling, AggregatorSpec plumbing through
+HierFAVGConfig, and bit-exactness of the default weighted_mean spec versus
+the pre-redesign aggregation path on both execution engines."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AggregatorSpec,
+    FedTopology,
+    HierFAVGConfig,
+    TrimmedMeanAggregator,
+    aggregation,
+    build_hier_round,
+    init_state,
+    parse_fanouts,
+)
+from repro.core.aggregation import (
+    parse_aggregator,
+    segment_coordinate_median,
+    segment_trimmed_mean,
+)
+from repro.data import FederatedBatcher, clustered_gaussians, make_partition
+from repro.fed import FederatedRunner, RunnerConfig, scenarios
+from repro.models import cnn
+from repro.optim import sgd
+
+
+# ---------------------------------------------------------------------------
+# Statistic oracles
+# ---------------------------------------------------------------------------
+
+def _np_trimmed(x, trim):
+    m = x.shape[0]
+    k = int(np.floor(trim * m))
+    s = np.sort(x, axis=0)
+    return s[k : m - k].mean(axis=0)
+
+
+@pytest.mark.parametrize("seg,mask", [
+    (np.array([0, 0, 0, 1, 1, 1]), None),  # uniform
+    (np.array([0, 0, 0, 0, 1, 1]), None),  # ragged
+    (np.array([0, 0, 0, 0, 1, 1]), np.array([1, 0, 1, 1, 1, 1], np.float32)),
+])
+def test_segment_trimmed_mean_matches_numpy(rng, seg, mask):
+    x = rng.normal(size=(6, 5)).astype(np.float32)
+    out = np.asarray(segment_trimmed_mean(
+        {"w": jnp.asarray(x)}, seg, 2, None if mask is None else jnp.asarray(mask),
+        trim=0.3,
+    )["w"])
+    for g in range(2):
+        in_g = (seg == g) if mask is None else ((seg == g) & (mask > 0))
+        ref = _np_trimmed(x[np.where(in_g)[0]], 0.3)
+        got = out[seg == g]
+        np.testing.assert_allclose(got, np.broadcast_to(ref, got.shape), atol=1e-6)
+
+
+@pytest.mark.parametrize("sizes", [(3, 3), (4, 2), (5, 4)])  # odd + even groups
+def test_segment_coordinate_median_matches_numpy(rng, sizes):
+    seg = np.concatenate([np.full(c, g) for g, c in enumerate(sizes)])
+    x = rng.normal(size=(seg.shape[0], 7)).astype(np.float32)
+    out = np.asarray(segment_coordinate_median({"w": jnp.asarray(x)}, seg, len(sizes), None)["w"])
+    for g in range(len(sizes)):
+        ref = np.median(x[seg == g], axis=0)
+        got = out[seg == g]
+        np.testing.assert_allclose(got, np.broadcast_to(ref, got.shape), atol=1e-6)
+
+
+def test_zero_survivor_group_keeps_params(rng):
+    x = rng.normal(size=(6, 4)).astype(np.float32)
+    seg = np.array([0, 0, 0, 1, 1, 1])
+    mask = jnp.asarray(np.array([0, 0, 0, 1, 1, 1], np.float32))
+    for fn in (segment_trimmed_mean, segment_coordinate_median):
+        out = np.asarray(fn({"w": jnp.asarray(x)}, seg, 2, mask)["w"])
+        np.testing.assert_array_equal(out[:3], x[:3])  # dead group frozen
+        assert not np.array_equal(out[3:], x[3:])  # alive group aggregated
+
+
+def test_trimmed_mean_discards_outlier_median_too(rng):
+    x = rng.normal(size=(8, 3)).astype(np.float32)
+    clean_mean = x[:7].mean(axis=0)
+    x[7] = 1e6  # one Byzantine client
+    seg = np.zeros(8, np.int64)
+    t = np.asarray(segment_trimmed_mean({"w": jnp.asarray(x)}, seg, 1, None, trim=0.2)["w"])[0]
+    m = np.asarray(segment_coordinate_median({"w": jnp.asarray(x)}, seg, 1, None)["w"])[0]
+    assert np.max(np.abs(t - clean_mean)) < 1.0
+    assert np.max(np.abs(m - clean_mean)) < 1.0
+    # the weighted mean is destroyed by the outlier
+    wm = np.asarray(aggregation.weighted_mean(
+        {"w": jnp.asarray(x)}, jnp.ones(8))["w"])[0]
+    assert np.max(np.abs(wm - clean_mean)) > 1e4
+
+
+# ---------------------------------------------------------------------------
+# Spec parsing / config plumbing
+# ---------------------------------------------------------------------------
+
+def test_parse_aggregator_grammar():
+    assert parse_aggregator("weighted_mean").is_default
+    assert parse_aggregator("trimmed_mean:0.2") == TrimmedMeanAggregator(trim=0.2)
+    assert parse_aggregator("median").name == "coordinate_median"
+    with pytest.raises(ValueError, match="unknown aggregator"):
+        parse_aggregator("krum")
+    with pytest.raises(ValueError, match="trim"):
+        parse_aggregator("trimmed_mean:0.6")
+
+
+def test_aggregator_spec_describe_roundtrip():
+    s = AggregatorSpec.parse("trimmed_mean:0.1/weighted_mean")
+    assert AggregatorSpec.parse(s.describe()) == s
+    assert not s.is_trivial and s.depth == 2
+    assert AggregatorSpec.default(3).is_trivial
+
+
+def test_config_validates_aggregator_depth_and_flags():
+    with pytest.raises(ValueError, match="levels"):
+        HierFAVGConfig(kappa1=2, kappa2=2, aggregators=AggregatorSpec.parse("median/median/median"))
+    with pytest.raises(TypeError, match="AggregatorSpec"):
+        HierFAVGConfig(kappa1=2, kappa2=2, aggregators="median/median")
+    with pytest.raises(ValueError, match="delta_cloud"):
+        HierFAVGConfig(kappa1=2, kappa2=2, delta_cloud=True,
+                       aggregators=AggregatorSpec.parse("weighted_mean/median"))
+    with pytest.raises(ValueError, match="async_cloud"):
+        HierFAVGConfig(kappa1=2, kappa2=2, async_cloud=True,
+                       aggregators=AggregatorSpec.parse("median/weighted_mean"))
+    # robust edge + delta top is fine; trivial spec composes with anything
+    HierFAVGConfig(kappa1=2, kappa2=2, delta_cloud=True,
+                   aggregators=AggregatorSpec.parse("median/weighted_mean"))
+    HierFAVGConfig(kappa1=2, kappa2=2, delta_cloud=True, aggregators=AggregatorSpec.default(2))
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: bit-exactness of the default, robust runs on both engines
+# ---------------------------------------------------------------------------
+
+def _runner(engine, aggregators, *, num_rounds=6, seed=0):
+    rng = np.random.default_rng(seed)
+    data = clustered_gaussians(rng, num_samples=360, num_classes=10, dim=(8,), class_sep=3.0)
+    parts = make_partition("edge_iid", data.y, 2, 3, rng)
+    batcher = FederatedBatcher(
+        {"inputs": data.x, "targets": data.y}, parts, batch_size=4, seed=seed
+    )
+
+    def apply_fn(p, x):
+        return jax.nn.relu(x @ p["w1"]) @ p["w2"]
+
+    runner = FederatedRunner(
+        loss_fn=cnn.make_cnn_loss_fn(apply_fn),
+        optimizer=sgd(0.1),
+        topology=FedTopology(num_edges=2, clients_per_edge=3),
+        hier_config=HierFAVGConfig(kappa1=2, kappa2=3, aggregators=aggregators),
+        data_sizes=batcher.data_sizes,
+        batcher=batcher,
+        runner_config=RunnerConfig(num_rounds=num_rounds, engine=engine),
+    )
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    params = {
+        "w1": jax.random.normal(k1, (8, 16)) * 0.3,
+        "w2": jax.random.normal(k2, (16, 10)) * 0.3,
+    }
+    state = runner.init(jax.random.PRNGKey(seed), params)
+    state = runner.run(state)
+    return runner, state
+
+
+@pytest.mark.parametrize("engine", ["per_round", "superround"])
+def test_default_aggregator_spec_is_bitwise_noop(engine):
+    """An all-weighted_mean AggregatorSpec must take the exact legacy path:
+    identical params and history on the per-round AND superround engines."""
+    r_none, s_none = _runner(engine, None)
+    r_spec, s_spec = _runner(engine, AggregatorSpec.default(2))
+    np.testing.assert_array_equal(np.asarray(s_none.params["w1"]), np.asarray(s_spec.params["w1"]))
+    np.testing.assert_array_equal(np.asarray(s_none.params["w2"]), np.asarray(s_spec.params["w2"]))
+    assert r_none.records_to_dict() == r_spec.records_to_dict()
+
+
+def test_robust_aggregators_engine_parity():
+    """trimmed edge / median cloud runs agree across the two engines (same
+    lax.switch subgraph, scan-fused or not) — up to the documented 1-ULP
+    XLA:CPU codegen drift (docs/performance.md) that the sort/gather
+    statistics amplify past exact equality."""
+    agg = AggregatorSpec.parse("trimmed_mean:0.2/coordinate_median")
+    _, s_per = _runner("per_round", agg)
+    _, s_super = _runner("superround", agg)
+    np.testing.assert_allclose(
+        np.asarray(s_per.params["w1"]), np.asarray(s_super.params["w1"]),
+        rtol=2e-6, atol=1e-6,
+    )
+
+
+def test_robust_cloud_sync_collapses_clients():
+    """After a median cloud boundary every client holds the same model."""
+    agg = AggregatorSpec.parse("weighted_mean/coordinate_median")
+    _, state = _runner("per_round", agg, num_rounds=3)  # round 3 = cloud boundary
+    w1 = np.asarray(state.params["w1"])
+    np.testing.assert_array_equal(w1, np.broadcast_to(w1[0], w1.shape))
+
+
+def test_robust_aggregation_on_ragged_tree(rng):
+    """Trimmed edge sync runs on a ragged HierarchySpec via build_hier_round."""
+    spec = parse_fanouts("3,5,2/3")
+    n = spec.num_clients
+    cfg = HierFAVGConfig.multi_level(
+        (2, 2), aggregators=AggregatorSpec.parse("trimmed_mean:0.2/weighted_mean")
+    )
+    weights = jnp.asarray(rng.integers(1, 4, size=n), jnp.float32)
+
+    def loss_fn(params, batch, _rng):
+        return 0.5 * jnp.sum((params["w"] - batch["c"]) ** 2)
+
+    opt = sgd(0.1)
+    state = init_state(jax.random.PRNGKey(0), {"w": jnp.zeros(4)}, opt, spec, cfg)
+    round_fn = jax.jit(build_hier_round(loss_fn, opt, spec, cfg, weights))
+    batches = {"c": jnp.asarray(rng.normal(size=(2, n, 4)), jnp.float32)}
+    mask = jnp.asarray((rng.random(n) > 0.2).astype(np.float32))
+    state, metrics = round_fn(state, batches, jnp.int32(0), mask)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.all(np.isfinite(np.asarray(state.params["w"])))
+
+
+def test_eval_model_uses_robust_top_aggregator():
+    """The eval/early-stop path scores the model the cloud would actually
+    publish: the robust top-level statistic, not the weighted mean."""
+    r_med, s = _runner("per_round", AggregatorSpec.parse("weighted_mean/coordinate_median"),
+                       num_rounds=1)
+    params = jax.tree_util.tree_map(lambda x: jnp.asarray(np.asarray(x)), s.params)
+    # poison one client: the weighted mean moves, the median must not
+    poisoned = jax.tree_util.tree_map(lambda x: x.at[0].set(1e6), params)
+    med = np.asarray(r_med.eval_model(poisoned, None)["w1"])
+    ref = np.median(np.asarray(poisoned["w1"]), axis=0)
+    np.testing.assert_allclose(med, ref, atol=1e-6)
+
+    r_def, _ = _runner("per_round", None, num_rounds=1)
+    wm = np.asarray(r_def.eval_model(poisoned, None)["w1"])
+    assert np.max(np.abs(wm)) > 1e4  # default path is the (poisoned) mean
+
+
+def test_trimmed_edge_scenario_from_registry():
+    """Acceptance: a trimmed_mean edge-level scenario runs end-to-end from a
+    registry name with no hand-assembled runner."""
+    runner, state = scenarios.get(
+        "trimmed_edge", overrides=["run.num_rounds=4", "run.eval_every=4"]
+    ).run_experiment()
+    assert runner.hier_config.aggregators_active
+    assert runner.hier_config.aggregators.aggregator(1).name == "trimmed_mean:0.1"
+    assert len(runner.history) == 4
+    acc = runner.history[-1].accuracy
+    assert acc is not None and acc > 0.3
+    assert np.all(np.isfinite(np.asarray(state.params["w1"])))

@@ -1,0 +1,250 @@
+"""Declarative ExperimentSpec API: serialization round-trips, dotted-path
+overrides with actionable errors, scenario-registry builds, and equivalence
+of spec-built runners with the explicit FederatedRunner assembly."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FedTopology, HierFAVGConfig, cost_model as cm
+from repro.data import FederatedBatcher, clustered_gaussians, make_partition
+from repro.fed import FederatedRunner, RunnerConfig, scenarios
+from repro.fed.api import (
+    DataSpec,
+    ExperimentSpec,
+    ModelSpec,
+    RunSpec,
+    ScheduleSpec,
+    TopologySpec,
+    TransportSpec,
+)
+from repro.fed.runner import RoundRecord
+from repro.models import cnn
+from repro.optim import sgd
+
+
+# ---------------------------------------------------------------------------
+# Serialization round-trips
+# ---------------------------------------------------------------------------
+
+def test_default_spec_roundtrip():
+    spec = ExperimentSpec()
+    assert ExperimentSpec.from_dict(spec.to_dict()) == spec
+    assert ExperimentSpec.from_json(spec.to_json()) == spec
+
+
+def test_nondefault_spec_roundtrip():
+    spec = ExperimentSpec(
+        name="x",
+        topology=TopologySpec(fanouts="3,5,2/3"),
+        schedule=ScheduleSpec(kappas=(2, 3), sync_opt_state=True),
+        data=DataSpec(partition="edge_niid", classes_per_edge=3, seed=7),
+        model=ModelSpec(lr=0.01, lr_schedule="exponential"),
+        transport=TransportSpec(levels="identity/int8_ef:128"),
+        run=RunSpec(num_rounds=6, engine="per_round"),
+    )
+    rt = ExperimentSpec.from_dict(spec.to_dict())
+    assert rt == spec
+    assert rt.schedule.kappas == (2, 3)  # list -> tuple restored
+
+
+def test_every_scenario_roundtrips_and_builds():
+    for name in scenarios.names():
+        spec = scenarios.get(name)
+        assert ExperimentSpec.from_dict(spec.to_dict()) == spec, name
+        runner = spec.build()
+        assert isinstance(runner, FederatedRunner), name
+        assert runner.spec == spec, name
+
+
+def test_from_dict_unknown_key_names_dotted_path():
+    d = ExperimentSpec().to_dict()
+    d["schedule"]["kapas"] = [4, 2]
+    with pytest.raises(ValueError, match=r"schedule\.kapas"):
+        ExperimentSpec.from_dict(d)
+    with pytest.raises(ValueError, match="bogus"):
+        ExperimentSpec.from_dict({"bogus": {}})
+
+
+# ---------------------------------------------------------------------------
+# Dotted-path overrides
+# ---------------------------------------------------------------------------
+
+def test_override_grammar():
+    spec = ExperimentSpec.parse([
+        "schedule.kappas=4,2",
+        "transport.levels=identity/int8_ef:128",
+        "run.num_rounds=12",
+        "schedule.sync_opt_state=true",
+        "data.class_sep=2.5",
+        "name=custom",
+    ])
+    assert spec.schedule.kappas == (4, 2)
+    assert spec.transport.levels == "identity/int8_ef:128"
+    assert spec.run.num_rounds == 12
+    assert spec.schedule.sync_opt_state is True
+    assert spec.data.class_sep == 2.5
+    assert spec.name == "custom"
+
+
+@pytest.mark.parametrize("bad,fragment", [
+    ("schedule.kapas=4", "kapas"),  # unknown leaf names the path
+    ("bogus.x=1", "bogus"),  # unknown section
+    ("schedule.kappas=abc", "comma-separated"),  # bad tuple value
+    ("run.num_rounds=ten", "integer"),  # bad int
+    ("schedule.sync_opt_state=maybe", "boolean"),  # bad bool
+    ("run=3", "section"),  # assigning to a section
+    ("norounds", "dotted.path=value"),  # missing '='
+])
+def test_override_errors_are_actionable(bad, fragment):
+    with pytest.raises(ValueError, match=fragment):
+        ExperimentSpec.parse([bad])
+
+
+def test_override_leaves_base_untouched():
+    base = scenarios.get("quickstart")
+    tweaked = base.with_overrides(["run.num_rounds=2"])
+    assert base.run.num_rounds == 24 and tweaked.run.num_rounds == 2
+
+
+# ---------------------------------------------------------------------------
+# Build-time validation
+# ---------------------------------------------------------------------------
+
+def test_kappas_depth_mismatch_is_actionable():
+    spec = ExperimentSpec.parse(["schedule.kappas=4,2,2"])  # 2-level topo
+    with pytest.raises(ValueError, match="depth"):
+        spec.build()
+
+
+def test_transport_depth_mismatch_is_actionable():
+    spec = ExperimentSpec.parse(["transport.levels=identity/int8/int8"])
+    with pytest.raises(ValueError, match=r"transport\.levels"):
+        spec.build()
+
+
+def test_unknown_codec_and_aggregator_name_the_field():
+    with pytest.raises(ValueError, match=r"transport\.levels"):
+        ExperimentSpec.parse(["transport.levels=int7"]).build()
+    with pytest.raises(ValueError, match=r"aggregators\.levels"):
+        ExperimentSpec.parse(["aggregators.levels=krum"]).build()
+
+
+def test_spec_rejects_built_forms_in_sections():
+    """The spec tree holds the serializable fed.api wrappers; passing the
+    same-named built forms (fed.transport.TransportSpec /
+    core.aggregation.AggregatorSpec) fails fast with a pointed message."""
+    from repro.core.aggregation import AggregatorSpec as BuiltAggregatorSpec
+    from repro.fed.transport import TransportSpec as BuiltTransportSpec
+
+    with pytest.raises(TypeError, match="serializable spec form"):
+        ExperimentSpec(transport=BuiltTransportSpec.identity(2))
+    with pytest.raises(TypeError, match="serializable spec form"):
+        ExperimentSpec(aggregators=BuiltAggregatorSpec.default(2))
+
+
+def test_runner_config_engine_validated_at_construction():
+    with pytest.raises(ValueError, match="engine"):
+        RunnerConfig(num_rounds=3, engine="warp")
+    with pytest.raises(ValueError, match="engine"):
+        ExperimentSpec.parse(["run.engine=warp"]).build()
+
+
+# ---------------------------------------------------------------------------
+# Spec-built runner == explicit constructor (the quickstart equivalence)
+# ---------------------------------------------------------------------------
+
+def _legacy_quickstart_runner(num_rounds):
+    rng = np.random.default_rng(0)
+    data = clustered_gaussians(rng, num_samples=2000, num_classes=10, dim=(16,), class_sep=3.5)
+    parts = make_partition("edge_niid", data.y, num_edges=4, clients_per_edge=5, rng=rng)
+    batcher = FederatedBatcher({"inputs": data.x, "targets": data.y}, parts, batch_size=8)
+
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {"w1": jax.random.normal(k1, (16, 48)) * 0.25, "b1": jnp.zeros(48),
+                "w2": jax.random.normal(k2, (48, 10)) * 0.25, "b2": jnp.zeros(10)}
+
+    def apply_fn(p, x):
+        return jax.nn.relu(x @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
+
+    runner = FederatedRunner(
+        loss_fn=cnn.make_cnn_loss_fn(apply_fn),
+        optimizer=sgd(0.15),
+        topology=FedTopology(num_edges=4, clients_per_edge=5),
+        hier_config=HierFAVGConfig(kappa1=4, kappa2=2),
+        data_sizes=batcher.data_sizes,
+        batcher=batcher,
+        runner_config=RunnerConfig(num_rounds=num_rounds, eval_every=4),
+        eval_fn=lambda p: float(cnn.accuracy(apply_fn(p, jnp.asarray(data.x)), jnp.asarray(data.y))),
+        costs=cm.paper_workload("mnist"),
+    )
+    state = runner.init(jax.random.PRNGKey(0), init(jax.random.PRNGKey(1)))
+    runner.run(state)
+    return runner
+
+
+def test_quickstart_spec_matches_explicit_assembly():
+    """The rebuilt examples/quickstart.py (registry 'quickstart') must
+    reproduce the pre-redesign hand-assembled runner's history exactly."""
+    rounds = 8
+    legacy = _legacy_quickstart_runner(rounds)
+    runner, _ = scenarios.get(
+        "quickstart", overrides=[f"run.num_rounds={rounds}"]
+    ).run_experiment()
+    a = [dataclasses.astuple(h) for h in legacy.history]
+    b = [dataclasses.astuple(h) for h in runner.history]
+    assert a == b
+
+
+def test_from_dict_rejects_string_for_tuple_field():
+    d = ExperimentSpec().to_dict()
+    d["schedule"]["kappas"] = "42"  # would digit-split to (4, 2)
+    with pytest.raises(ValueError, match=r"schedule\.kappas"):
+        ExperimentSpec.from_dict(d)
+
+
+def test_arch_dataset_mismatch_is_actionable():
+    with pytest.raises(ValueError, match="dataset=tokens"):
+        ExperimentSpec.parse(["model.arch=lm-10m"]).build()
+    with pytest.raises(ValueError, match="language model"):
+        ExperimentSpec.parse(["data.dataset=tokens"]).build()
+
+
+def test_resume_without_checkpoint_dir_raises():
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        scenarios.get("quickstart", overrides=["run.num_rounds=2"]).run_experiment(resume=True)
+
+
+def test_run_experiment_resume_roundtrip(tmp_path):
+    over = [
+        f"run.checkpoint_dir={tmp_path}", "run.checkpoint_every=4",
+        "run.num_rounds=4", "run.eval_every=4",
+    ]
+    spec = scenarios.get("quickstart", overrides=over)
+    spec.run_experiment()
+    # straight-through 8 rounds vs 4 + resume 4: identical final state
+    spec8 = spec.with_overrides(["run.num_rounds=8"])
+    _, s_direct = scenarios.get(
+        "quickstart", overrides=["run.num_rounds=8", "run.eval_every=4"]
+    ).run_experiment()
+    _, s2 = spec8.run_experiment(resume=True)
+    np.testing.assert_array_equal(np.asarray(s2.params["w1"]), np.asarray(s_direct.params["w1"]))
+    assert int(s2.step) == int(s_direct.step)
+
+
+# ---------------------------------------------------------------------------
+# records_to_dict derivation (satellite)
+# ---------------------------------------------------------------------------
+
+def test_records_to_dict_tracks_roundrecord_fields():
+    runner, _ = scenarios.get(
+        "quickstart", overrides=["run.num_rounds=2", "run.eval_every=2"]
+    ).run_experiment()
+    rec = runner.records_to_dict()
+    assert set(rec) == {f.name for f in dataclasses.fields(RoundRecord)}
+    assert rec["round"] == [0, 1]
+    assert rec["loss"] == [h.loss for h in runner.history]
+    assert rec["accuracy"][-1] is not None

@@ -315,9 +315,9 @@ def test_runner_forced_superround_requires_cloud_granularity():
 
 
 def test_runner_rejects_unknown_engine():
-    runner, state = _mlp_runner("warp", num_rounds=3)
+    # validated at construction (RunnerConfig.__post_init__), not first run()
     with pytest.raises(ValueError, match="engine"):
-        runner.run(state)
+        RunnerConfig(num_rounds=3, engine="warp")
 
 
 # ---------------------------------------------------------------------------
