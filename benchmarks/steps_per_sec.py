@@ -1,4 +1,5 @@
-"""Wall-clock training throughput: per-round driver vs superround engine.
+"""Wall-clock training throughput: per-round driver vs superround engine
+vs the client-sharded (mesh) superround.
 
 The first entry in the repo's perf trajectory (``BENCH_throughput.json``).
 This bench measures the *driver*, not the kernels: the model is a
@@ -10,34 +11,64 @@ synchronous batch gather + upload, an un-donated FedState round-trip)
 dominate each edge interval, exactly the overheads the superround engine
 (``fed.engine``) amortizes over a whole cloud interval. The batch-8 sweep
 point shows the compute-bound other end honestly: when the executable
-dominates, both drivers converge.
+dominates, both drivers converge — and it is where the sharded engine has
+real per-device work to parallelize.
 
-Protocol: both drivers share one compiled executable apiece; after a
+Protocol: all drivers share one compiled executable apiece; after a
 warmup chunk (compile + cache warm), alternating timed chunks (order
-flipped every rep to cancel clock drift) of whole cloud intervals, median
+rotated every rep to cancel clock drift) of whole cloud intervals, median
 over reps.
 
     PYTHONPATH=src python -m benchmarks.steps_per_sec            # full sweep
     PYTHONPATH=src python -m benchmarks.steps_per_sec --json     # + BENCH_throughput.json
     PYTHONPATH=src python -m benchmarks.steps_per_sec --smoke    # CI gate:
         # headline shape only, fails if the engine is slower than per-round
+    PYTHONPATH=src python -m benchmarks.steps_per_sec --devices 4 --json
+        # + client-sharded rows over 4 (possibly simulated) devices
+    PYTHONPATH=src python -m benchmarks.steps_per_sec --devices 4 --smoke
+        # multi-device CI gate: sharded engine must not collapse vs 1 device
+
+``--devices K`` must be seen before JAX initializes: this module reads it
+from ``sys.argv`` at import time and sets
+``--xla_force_host_platform_device_count`` so a CPU host simulates the
+mesh (real multi-device backends need no flag).
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import sys
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.core import FedTopology, HierFAVGConfig
-from repro.data import FederatedBatcher, clustered_gaussians, make_partition
-from repro.fed import FederatedRunner, RunnerConfig
-from repro.models import cnn
-from repro.optim import sgd
+def _early_devices() -> int:
+    argv = sys.argv[1:]
+    for i, a in enumerate(argv):
+        if a == "--devices" and i + 1 < len(argv):
+            return int(argv[i + 1])
+        if a.startswith("--devices="):
+            return int(a.split("=", 1)[1])
+    return 0
+
+
+_EARLY_DEVICES = _early_devices()
+if _EARLY_DEVICES > 1 and "jax" not in sys.modules:
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={_EARLY_DEVICES}"
+    )
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import FedTopology, HierFAVGConfig  # noqa: E402
+from repro.data import FederatedBatcher, clustered_gaussians, make_partition  # noqa: E402
+from repro.dist.sharding import client_mesh  # noqa: E402
+from repro.fed import FederatedRunner, RunnerConfig  # noqa: E402
+from repro.models import cnn  # noqa: E402
+from repro.optim import sgd  # noqa: E402
 
 DIM = (8, 8, 1)
 HEADLINE = "N64_k4x4"
@@ -48,6 +79,14 @@ SHAPES = {
     "N64_k8x2": (64, 8, (8, 2), 1),
     "N64_k4x4_b8": (64, 8, (4, 4), 8),  # compute-bound contrast point
 }
+# the --devices sweep: N64 shapes, batch 1 (dispatch-bound) and batch 8
+# (compute-bound, where per-device parallelism has actual work to split)
+SHARDED_SHAPES = ("N64_k4x4", "N64_k4x4_b8")
+SHARDED_SMOKE_SHAPE = "N64_k4x4_b8"
+# the multi-device CI gate is a catastrophic-regression floor, not a
+# scaling promise: simulated CPU devices split one host's cores, so the
+# parallel win tracks the core count, not the device count
+SHARDED_SMOKE_FLOOR = 0.5
 
 
 def _patches(x, k=3):
@@ -77,7 +116,7 @@ def bench_cnn_apply(p, x):
     return x @ p["fw"] + p["fb"]
 
 
-def _make_runner(engine, num_clients, num_edges, kappas, batch, seed=0):
+def _make_runner(engine, num_clients, num_edges, kappas, batch, seed=0, mesh=None):
     rng = np.random.default_rng(seed)
     data = clustered_gaussians(
         rng, num_samples=num_clients * 40, num_classes=10, dim=DIM, class_sep=2.0
@@ -94,6 +133,7 @@ def _make_runner(engine, num_clients, num_edges, kappas, batch, seed=0):
         data_sizes=batcher.data_sizes,
         batcher=batcher,
         runner_config=RunnerConfig(num_rounds=0, engine=engine),
+        mesh=mesh,
     )
     state = runner.init(jax.random.PRNGKey(seed), bench_cnn_init(jax.random.PRNGKey(seed + 1)))
     return runner, state
@@ -107,19 +147,26 @@ def _timed_chunk(runner, state, start_round, rounds):
     return time.perf_counter() - t0, state
 
 
-def run_shape(name, *, reps=5, intervals=20, warmup_intervals=2):
+def run_shape(name, *, reps=5, intervals=20, warmup_intervals=2, devices=0):
+    """Time whole-cloud-interval chunks per driver. ``devices > 1`` adds a
+    "sharded" driver: the superround engine over a ``devices``-way client
+    mesh (same executable protocol, same alternation)."""
     num_clients, num_edges, kappas, batch = SHAPES[name]
     k1, k2 = kappas
     chunk = intervals * k2
 
+    modes = ["per_round", "superround"] + (["sharded"] if devices > 1 else [])
     drivers = {}
-    for mode in ("per_round", "superround"):
-        runner, state = _make_runner(mode, num_clients, num_edges, kappas, batch)
+    for mode in modes:
+        mesh = client_mesh(devices) if mode == "sharded" else None
+        engine = "superround" if mode == "sharded" else mode
+        runner, state = _make_runner(engine, num_clients, num_edges, kappas, batch, mesh=mesh)
         _, state = _timed_chunk(runner, state, 0, warmup_intervals * k2)  # compile + warm
         drivers[mode] = {"runner": runner, "state": state, "done": warmup_intervals * k2, "times": []}
 
     for rep in range(reps):
-        order = ("per_round", "superround") if rep % 2 == 0 else ("superround", "per_round")
+        shift = rep % len(modes)
+        order = modes[shift:] + modes[:shift]
         for mode in order:
             d = drivers[mode]
             dt, d["state"] = _timed_chunk(d["runner"], d["state"], d["done"], chunk)
@@ -127,7 +174,7 @@ def run_shape(name, *, reps=5, intervals=20, warmup_intervals=2):
             d["times"].append(dt)
 
     out = {"num_clients": num_clients, "kappas": list(kappas), "batch": batch}
-    for mode in ("per_round", "superround"):
+    for mode in modes:
         med = float(np.median(drivers[mode]["times"]))
         out[mode] = {
             "ms_per_round": round(med / chunk * 1000, 4),
@@ -137,24 +184,48 @@ def run_shape(name, *, reps=5, intervals=20, warmup_intervals=2):
     out["speedup"] = round(
         out["superround"]["local_steps_per_s"] / out["per_round"]["local_steps_per_s"], 3
     )
+    if "sharded" in drivers:
+        out["devices"] = devices
+        out["sharded_speedup_vs_superround"] = round(
+            out["sharded"]["local_steps_per_s"] / out["superround"]["local_steps_per_s"], 3
+        )
     return out
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
-                    help="headline shape only, quick; exit nonzero if the "
-                         "superround engine is slower than the per-round driver")
+                    help="quick CI gate: headline shape only (plus the sharded "
+                         "gate shape with --devices); exit nonzero if the "
+                         "superround engine is slower than the per-round driver "
+                         "or the sharded engine collapses vs one device")
     ap.add_argument("--json", nargs="?", const="BENCH_throughput.json", default=None,
                     metavar="OUT.json", help="write machine-readable results "
                     "(default path: BENCH_throughput.json)")
+    ap.add_argument("--devices", type=int, default=0, metavar="K",
+                    help="also time the client-sharded superround over a K-way "
+                         "client mesh (read pre-import: simulates K CPU devices "
+                         "via --xla_force_host_platform_device_count)")
     # argv=None means a programmatic call (benchmarks.run): parse nothing
     # rather than falling back to sys.argv — the harness's own --json flag
     # must not be absorbed here and clobber its output file
     args = ap.parse_args([] if argv is None else argv)
 
-    names = [HEADLINE] if args.smoke else list(SHAPES)
-    reps, intervals, warmup = (3, 8, 1) if args.smoke else (5, 20, 2)
+    if args.devices > 1 and len(jax.devices()) < args.devices:
+        raise SystemExit(
+            f"--devices {args.devices} needs {args.devices} visible devices but "
+            f"only {len(jax.devices())} exist; run this module directly "
+            f"(python -m benchmarks.steps_per_sec --devices {args.devices}) so "
+            f"the pre-import hook can set XLA_FLAGS, or export XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={args.devices}"
+        )
+
+    if args.smoke:
+        names = [] if args.devices > 1 else [HEADLINE]  # the multi-device job gates sharded only
+        reps, intervals, warmup = 3, 8, 1
+    else:
+        names = list(SHAPES)
+        reps, intervals, warmup = 5, 20, 2
     shapes = {}
     for name in names:
         shapes[name] = run_shape(name, reps=reps, intervals=intervals, warmup_intervals=warmup)
@@ -164,37 +235,73 @@ def main(argv=None):
             f"superround={s['superround']['local_steps_per_s']},speedup={s['speedup']}"
         )
 
-    head = shapes[HEADLINE]
+    sharded = None
+    if args.devices > 1:
+        snames = (SHARDED_SMOKE_SHAPE,) if args.smoke else SHARDED_SHAPES
+        sharded = {"devices": args.devices, "shapes": {}}
+        for name in snames:
+            row = run_shape(name, reps=reps, intervals=intervals,
+                            warmup_intervals=warmup, devices=args.devices)
+            sharded["shapes"][name] = row
+            print(
+                f"steps_per_sec_sharded_{name},devices={args.devices},"
+                f"superround={row['superround']['client_steps_per_s']},"
+                f"sharded={row['sharded']['client_steps_per_s']},"
+                f"scaling_vs_1dev={row['sharded_speedup_vs_superround']}"
+            )
+        gate_name = SHARDED_SMOKE_SHAPE if SHARDED_SMOKE_SHAPE in sharded["shapes"] else snames[0]
+        row = sharded["shapes"][gate_name]
+        sharded["headline"] = {
+            "shape": gate_name,
+            "devices": args.devices,
+            "client_steps_per_s_1dev": row["superround"]["client_steps_per_s"],
+            "client_steps_per_s_sharded": row["sharded"]["client_steps_per_s"],
+            "scaling_vs_1dev": row["sharded_speedup_vs_superround"],
+        }
+
     results = {
         "bench": "steps_per_sec",
-        "headline": {
+        "shapes": shapes,
+        "env": {"backend": jax.default_backend(), "cpu_count": os.cpu_count(),
+                "devices": len(jax.devices()), "jax": jax.__version__,
+                "smoke": bool(args.smoke)},
+    }
+    head = shapes.get(HEADLINE)
+    if head is not None:
+        results["headline"] = {
             "shape": HEADLINE,
             "speedup": head["speedup"],
             "per_round_local_steps_per_s": head["per_round"]["local_steps_per_s"],
             "superround_local_steps_per_s": head["superround"]["local_steps_per_s"],
-        },
-        "shapes": shapes,
-        "env": {"backend": jax.default_backend(), "cpu_count": os.cpu_count(),
-                "jax": jax.__version__, "smoke": bool(args.smoke)},
-    }
+        }
+    if sharded is not None:
+        results["sharded"] = sharded
     if args.json:
         with open(args.json, "w") as f:
             json.dump(results, f, indent=2)
         print(f"wrote {args.json}")
-    if head["speedup"] < 1.5:
+    if head is not None and head["speedup"] < 1.5:
         print(
             f"steps_per_sec_note,headline speedup {head['speedup']} < 1.5 target "
             "(dispatch-bound regime narrows on loaded/low-core CPU hosts)"
         )
-    if args.smoke and head["speedup"] < 1.0:
+    if args.smoke and head is not None and head["speedup"] < 1.0:
         raise SystemExit(
             f"superround engine slower than per-round driver at the smoke shape "
             f"(speedup {head['speedup']} < 1.0)"
         )
+    if args.smoke and sharded is not None:
+        # gate on the headline entry so the gate and the recorded headline
+        # can never disagree about which shape they describe
+        gate = sharded["headline"]["scaling_vs_1dev"]
+        if gate < SHARDED_SMOKE_FLOOR:
+            raise SystemExit(
+                f"client-sharded superround collapsed at the gate shape "
+                f"({sharded['headline']['shape']}: {gate} < {SHARDED_SMOKE_FLOOR} "
+                f"of the single-device engine)"
+            )
     return results
 
 
 if __name__ == "__main__":
-    import sys
-
     main(sys.argv[1:])

@@ -242,6 +242,61 @@ def delta_weighted_mean(
     return jax.tree_util.tree_map(lambda a, d: (a.astype(jnp.float32) + d.astype(jnp.float32)).astype(a.dtype), anchor, mean_delta)
 
 
+def psum_weighted_mean(
+    tree: PyTree,
+    weights: jnp.ndarray,
+    axis_name: str,
+    mask: Optional[jnp.ndarray] = None,
+    *,
+    anchor: Optional[PyTree] = None,
+) -> Tuple[PyTree, jnp.ndarray]:
+    """Global weighted mean over a client axis sharded along ``axis_name``
+    with exactly ONE cross-device collective.
+
+    Must be called inside ``shard_map``: every leaf is a shard-local
+    (C, ...) slice and ``weights``/``mask`` are the matching (C,) slices.
+    Per-leaf partial weighted sums and the masked weight total are raveled
+    into a single vector and reduced with one grouped ``lax.psum``; the
+    unpacked means broadcast back to every local client. With ``anchor``
+    the mean is taken in delta form, anchor + mean(tree − anchor) — the
+    ``delta_weighted_mean`` identity. Zero global survivors keeps current
+    values, matching ``weighted_mean``.
+
+    Returns ``(tree', alive)`` where ``alive`` is the scalar global
+    denominator > 0 predicate — callers reuse it for transport keep-dead
+    logic without issuing a second collective.
+    """
+    w = weights.astype(jnp.float32)
+    if mask is not None:
+        w = w * mask.astype(jnp.float32)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    anchors = treedef.flatten_up_to(anchor) if anchor is not None else None
+    payload = []
+    for i, x in enumerate(leaves):
+        xf = x.astype(jnp.float32)
+        if anchors is not None:
+            xf = xf - anchors[i].astype(jnp.float32)
+        payload.append(xf)
+    partials = [jnp.sum(p * _bcast_weights(w, p), axis=0).ravel() for p in payload]
+    packed = jnp.concatenate(partials + [jnp.sum(w).reshape(1)])
+    total = jax.lax.psum(packed, axis_name)
+    denom = total[-1]
+    alive = denom > 0
+    safe = jnp.where(alive, denom, 1.0)
+    out = []
+    offset = 0
+    for i, x in enumerate(leaves):
+        param_shape = x.shape[1:]
+        size = int(np.prod(param_shape, dtype=np.int64)) if param_shape else 1
+        mean = (total[offset : offset + size] / safe).reshape(param_shape)
+        offset += size
+        full = jnp.broadcast_to(mean, x.shape)
+        if anchors is not None:
+            full = anchors[i].astype(jnp.float32) + full
+        out.append(jnp.where(alive, full, x.astype(jnp.float32)).astype(x.dtype))
+    return treedef.unflatten(out), alive
+
+
 def hierarchical_mean(
     tree: PyTree,
     weights: jnp.ndarray,
@@ -413,9 +468,12 @@ class TrimmedMeanAggregator:
         return False
 
     def __call__(self, tree, weights, spec, level, mask=None):
-        return segment_trimmed_mean(
-            tree, spec.segments(level), spec.num_nodes(level), mask, trim=self.trim
-        )
+        return self.segment_call(tree, spec.segments(level), spec.num_nodes(level), mask)
+
+    def segment_call(self, tree, segment_ids, num_segments, mask=None):
+        """The statistic over explicit segment ids — the shard-local entry
+        point for the mesh-sharded superround (ids must be concrete)."""
+        return segment_trimmed_mean(tree, segment_ids, num_segments, mask, trim=self.trim)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -431,9 +489,12 @@ class CoordinateMedianAggregator:
         return False
 
     def __call__(self, tree, weights, spec, level, mask=None):
-        return segment_coordinate_median(
-            tree, spec.segments(level), spec.num_nodes(level), mask
-        )
+        return self.segment_call(tree, spec.segments(level), spec.num_nodes(level), mask)
+
+    def segment_call(self, tree, segment_ids, num_segments, mask=None):
+        """The statistic over explicit segment ids — the shard-local entry
+        point for the mesh-sharded superround (ids must be concrete)."""
+        return segment_coordinate_median(tree, segment_ids, num_segments, mask)
 
 
 _AGGREGATOR_FACTORIES = {

@@ -39,9 +39,10 @@ from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import aggregation
-from repro.core.hierarchy import HierarchySpec, as_hierarchy
+from repro.core.hierarchy import HierarchySpec, ShardPlacement, as_hierarchy, plan_shard_placement
 from repro.optim import GradientTransformation, apply_updates
 
 PyTree = Any
@@ -253,19 +254,10 @@ def init_state(
 # Phase builders
 # ---------------------------------------------------------------------------
 
-def build_local_step(
-    loss_fn: LossFn,
-    optimizer: GradientTransformation,
-    *,
-    grad_accum: int = 1,
-):
-    """One local SGD update for all clients (Algorithm 1 l.5).
-
-    batch leaves:
-        grad_accum == 1 : (N, b, ...)
-        grad_accum  > 1 : (grad_accum, N, b, ...)   (scanned microbatches)
-    Returns (state, metrics).
-    """
+def _build_microbatch_grads(loss_fn: LossFn, grad_accum: int):
+    """(params, batch, rngs) -> (summed grads, per-client losses) with the
+    microbatch accumulation scan — shared by the single-device and the
+    client-sharded local steps (identical graphs, identical numerics)."""
 
     def total_loss(params, batch, rngs):
         losses = jax.vmap(loss_fn)(params, batch, rngs)
@@ -285,13 +277,30 @@ def build_local_step(
             acc = jax.tree_util.tree_map(lambda a, b: a + b, acc, g)
             return (acc, losses), ()
 
-        zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
         first = jax.tree_util.tree_map(lambda x: x[0], batch)
         g0, losses0 = grad_fn(params, first, rngs)
         rest = jax.tree_util.tree_map(lambda x: x[1:], batch)
         (acc, losses), _ = jax.lax.scan(body, (g0, losses0), rest)
         acc = jax.tree_util.tree_map(lambda g: g / grad_accum, acc)
         return acc, losses
+
+    return microbatch_grads
+
+
+def build_local_step(
+    loss_fn: LossFn,
+    optimizer: GradientTransformation,
+    *,
+    grad_accum: int = 1,
+):
+    """One local SGD update for all clients (Algorithm 1 l.5).
+
+    batch leaves:
+        grad_accum == 1 : (N, b, ...)
+        grad_accum  > 1 : (grad_accum, N, b, ...)   (scanned microbatches)
+    Returns (state, metrics).
+    """
+    microbatch_grads = _build_microbatch_grads(loss_fn, grad_accum)
 
     def local_step(state: FedState, batch: PyTree) -> Tuple[FedState, dict]:
         rng, step_rng = jax.random.split(state.rng)
@@ -325,7 +334,126 @@ def _maybe_sync_opt_state(opt_state, agg_fn, sync: bool):
     return jax.tree_util.tree_map(lambda x: agg_fn(x) if leaf_ok(x) else x, opt_state)
 
 
-def build_level_sync(topology: Topology, config: HierFAVGConfig, weights: jnp.ndarray, level: int):
+def _shard_row(table, axis: str):
+    """Select this shard's row of a host-side (num_shards, ...) table at
+    trace time inside ``shard_map`` (via ``lax.axis_index``)."""
+    idx = jax.lax.axis_index(axis)
+    return jax.lax.dynamic_index_in_dim(jnp.asarray(table), idx, axis=0, keepdims=False)
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientSharding:
+    """How each shard of the ``axis``-sharded client dimension sees the tree
+    inside a ``shard_map`` body.
+
+    Wraps a ``core.hierarchy.ShardPlacement`` plus the global aggregation
+    weights; the ``local_*`` accessors must be called at trace time inside
+    the body (they select this shard's row of the host tables with
+    ``lax.axis_index``). When every shard has the identical local segment
+    layout (uniform packing), ``local_segments`` returns the concrete ids so
+    ``segment_weighted_mean`` keeps its static uniform reshape fast path.
+    """
+
+    axis: str
+    placement: ShardPlacement
+    weights_table: Any  # np (num_shards, capacity) f32 permuted+padded weights
+
+    @classmethod
+    def build(cls, axis: str, placement: ShardPlacement, weights) -> "ClientSharding":
+        table = placement.pad_weights(np.asarray(weights)).reshape(
+            placement.num_shards, placement.capacity
+        )
+        return cls(axis=axis, placement=placement, weights_table=table)
+
+    def local_weights(self):
+        return _shard_row(self.weights_table, self.axis)
+
+    def static_segments(self, level: int) -> Optional[np.ndarray]:
+        """Concrete (capacity,) local ids when identical across shards."""
+        tab = self.placement.local_segments(level)
+        return tab[0] if bool((tab == tab[0]).all()) else None
+
+    def local_segments(self, level: int):
+        static = self.static_segments(level)
+        if static is not None:
+            return static
+        return _shard_row(self.placement.local_segments(level), self.axis)
+
+    def local_num_segments(self, level: int) -> int:
+        return self.placement.local_num_segments(level)
+
+    def client_ids_table(self) -> np.ndarray:
+        """(num_shards, capacity) original client ids (phantoms read 0)."""
+        return self.placement.gather_index().reshape(
+            self.placement.num_shards, self.placement.capacity
+        )
+
+
+def sharding_incompatibility(
+    config: HierFAVGConfig,
+    topology: Topology,
+    num_shards: int,
+    placement: Optional[ShardPlacement] = None,
+) -> Optional[str]:
+    """Why this schedule cannot run client-sharded over ``num_shards``
+    devices — None when it can. The runner uses this for engine
+    eligibility; ``build_sharded_super_round`` raises on a non-None reason.
+    Pass ``placement`` to validate the layout that will actually run
+    (otherwise the auto-planned one is checked).
+    """
+    spec = as_hierarchy(topology)
+    if config.async_cloud:
+        return (
+            "async_cloud's stale-correction algebra snapshots the whole "
+            "client axis on one device"
+        )
+    if config.delta_cloud and config.sync_opt_state:
+        return "delta_cloud + sync_opt_state do not compose (the opt tree has no anchor)"
+    if placement is None:
+        try:
+            placement = plan_shard_placement(spec, num_shards)
+        except ValueError as e:
+            return str(e)
+    elif placement.num_shards != num_shards or placement.spec != spec:
+        return (
+            f"placement was planned for {placement.num_shards} shard(s) over "
+            f"{placement.spec.describe()}, not {num_shards} shard(s) over "
+            f"{spec.describe()}"
+        )
+    if config.aggregators_active:
+        if config.aggregators.depth != spec.depth:
+            # keep the None-or-reason contract even for configs other
+            # entry points would reject (direct predicate callers)
+            return (
+                f"aggregators cover {config.aggregators.depth} level(s) but "
+                f"the tree has depth {spec.depth}"
+            )
+        if not config.aggregators.aggregator(spec.depth).is_default:
+            return (
+                "a non-default top-level aggregator needs global order "
+                "statistics across shards; only weighted_mean lowers to the "
+                "cloud psum"
+            )
+        for lvl in range(1, spec.depth):
+            if not config.aggregators.aggregator(lvl).is_default:
+                tab = placement.local_segments(lvl)
+                if not bool((tab == tab[0]).all()):
+                    return (
+                        f"the robust aggregator at level {lvl} needs an "
+                        f"identical per-shard segment layout (this packing "
+                        f"is ragged across shards)"
+                    )
+    return None
+
+
+def build_level_sync(
+    topology: Topology,
+    config: HierFAVGConfig,
+    weights: jnp.ndarray,
+    level: int,
+    *,
+    shard: Optional[ClientSharding] = None,
+):
     """Aggregation at one hierarchy level (Algorithm 1 l.25-31 generalized)
     with optional survival mask.
 
@@ -354,6 +482,15 @@ def build_level_sync(topology: Topology, config: HierFAVGConfig, weights: jnp.nd
     *every* level sync (identity levels included) so deltas never straddle
     two broadcasts. Identity-only transports take the exact uncompressed
     path — bitwise unchanged numerics.
+
+    Client-sharded lowering: with ``shard`` (a ``ClientSharding``, for use
+    inside a ``shard_map`` body over the client axis) sub-top levels lower
+    to device-local segment reductions over the shard-local ids — no
+    collective; edge groups never straddle shards by placement — and the
+    top level to one grouped ``psum`` (params and, when ``sync_opt_state``,
+    the opt leaves ride the same packed reduction). Codec round-trips, EF
+    residuals, and robust sub-top aggregators are per-client/per-group and
+    stay shard-local.
     """
     spec = as_hierarchy(topology)
     if not 1 <= level <= spec.depth:
@@ -371,6 +508,8 @@ def build_level_sync(topology: Topology, config: HierFAVGConfig, weights: jnp.nd
         robust = config.aggregators.aggregator(level)
         if robust.is_default:
             robust = None
+    if shard is not None:
+        return _build_sharded_level_sync(spec, config, level, codec, robust, shard)
     seg_ids = jnp.asarray(spec.segments(level), jnp.int32)
     num_segs = spec.num_nodes(level)
 
@@ -430,6 +569,133 @@ def build_level_sync(topology: Topology, config: HierFAVGConfig, weights: jnp.nd
 
                 residual = jax.tree_util.tree_map(keep_residual, residual, state.residual)
         opt_state = _maybe_sync_opt_state(state.opt_state, agg, config.sync_opt_state)
+        return state._replace(params=params, opt_state=opt_state, anchor=anchor, residual=residual)
+
+    return level_sync
+
+
+def _build_sharded_level_sync(spec, config, level, codec, robust, shard: ClientSharding):
+    """The ``shard``-lowered body of ``build_level_sync`` (see its
+    docstring): sub-top levels reduce entirely shard-locally (placement
+    guarantees their groups never straddle shards); the top level issues
+    exactly one grouped psum. Numerics match the single-device sync up to
+    cross-shard summation order at the top level (documented ULP tolerance;
+    sub-top syncs add members in the single-device order)."""
+    depth = spec.depth
+    is_top = level == depth
+    if robust is not None:
+        if is_top:
+            raise ValueError(
+                "a non-default top-level aggregator cannot run client-sharded "
+                "(global order statistics); see sharding_incompatibility"
+            )
+        if shard.static_segments(level) is None:
+            raise ValueError(
+                f"robust aggregator at level {level} needs an identical "
+                f"per-shard segment layout; see sharding_incompatibility"
+            )
+    if is_top and config.delta_cloud and config.sync_opt_state:
+        raise ValueError("delta_cloud + sync_opt_state cannot run client-sharded")
+
+    def stage_local(tree, w_local, mask, upto):
+        out = tree
+        for lvl in range(1, upto + 1):
+            out = aggregation.segment_weighted_mean(
+                out, w_local, shard.local_segments(lvl), shard.local_num_segments(lvl), mask
+            )
+        return out
+
+    def level_sync(state: FedState, mask: Optional[jnp.ndarray] = None) -> FedState:
+        w_local = shard.local_weights()
+        uploaded = state.params
+        residual = state.residual
+        if codec is not None:
+            delta = jax.tree_util.tree_map(
+                lambda x, a: x.astype(jnp.float32) - a.astype(jnp.float32),
+                state.params, state.anchor,
+            )
+            delta_hat, residual = codec.roundtrip(delta, residual)
+            uploaded = jax.tree_util.tree_map(
+                lambda a, d, x: (a.astype(jnp.float32) + d).astype(x.dtype),
+                state.anchor, delta_hat, state.params,
+            )
+        agg = None  # per-tree closure (sub-top opt_state sync)
+        synced_opt = None  # opt_state that rode the top-level packed psum
+        alive_top = None
+        if is_top and config.delta_cloud and state.anchor is not None:
+            params, alive_top = aggregation.psum_weighted_mean(
+                uploaded, w_local, shard.axis, mask, anchor=state.anchor
+            )
+            anchor = jax.tree_util.tree_map(jnp.copy, params)
+        elif is_top:
+            # pack params (+ synced opt leaves) so the cloud boundary issues
+            # exactly one cross-device collective
+            bundle = {"p": uploaded}
+            sync_ix: list = []
+            if config.sync_opt_state:
+                opt_leaves, opt_def = jax.tree_util.tree_flatten(state.opt_state)
+                sync_ix = [
+                    i for i, x in enumerate(opt_leaves)
+                    if isinstance(x, jnp.ndarray) and x.ndim >= 1
+                ]
+                bundle["o"] = [opt_leaves[i] for i in sync_ix]
+            staged = stage_local(bundle, w_local, mask, depth - 1)
+            out, alive_top = aggregation.psum_weighted_mean(staged, w_local, shard.axis, mask)
+            params = out["p"]
+            if config.sync_opt_state:
+                for i, new in zip(sync_ix, out["o"]):
+                    opt_leaves[i] = new
+                synced_opt = jax.tree_util.tree_unflatten(opt_def, opt_leaves)
+            if config.transport_active:
+                anchor = jax.tree_util.tree_map(jnp.copy, params)
+            else:
+                anchor = state.anchor
+        else:
+            if robust is not None:
+                ids = shard.static_segments(level)
+                nseg = shard.local_num_segments(level)
+                agg = lambda t: robust.segment_call(t, ids, nseg, mask)
+            else:
+                agg = lambda t: stage_local(t, w_local, mask, level)
+            params = agg(uploaded)
+            if config.transport_active:
+                anchor = jax.tree_util.tree_map(jnp.copy, params)
+            else:
+                anchor = state.anchor
+        if codec is not None:
+            # mirror of the single-device keep-dead logic (build_level_sync);
+            # at the top level the whole tree is one group, so "my group had
+            # a survivor" is the alive bit the packed psum already reduced
+            w_eff = w_local.astype(jnp.float32)
+            if mask is not None:
+                w_eff = w_eff * mask.astype(jnp.float32)
+            if is_top:
+                received = alive_top
+            else:
+                ids = jnp.asarray(shard.local_segments(level), jnp.int32)
+                nseg = shard.local_num_segments(level)
+                received = jnp.take(jax.ops.segment_sum(w_eff, ids, nseg) > 0, ids)
+
+            def keep_dead(new, old):
+                r = received
+                if r.ndim:
+                    r = r.reshape((-1,) + (1,) * (new.ndim - 1))
+                return jnp.where(r, new, old.astype(new.dtype))
+
+            params = jax.tree_util.tree_map(keep_dead, params, state.params)
+            anchor = jax.tree_util.tree_map(keep_dead, anchor, state.anchor)
+            if residual is not None and state.residual is not None:
+                sent = w_eff > 0
+
+                def keep_residual(new, old):
+                    s = sent.reshape((-1,) + (1,) * (new.ndim - 1))
+                    return jnp.where(s, new, old)
+
+                residual = jax.tree_util.tree_map(keep_residual, residual, state.residual)
+        if synced_opt is not None:
+            opt_state = synced_opt
+        else:
+            opt_state = _maybe_sync_opt_state(state.opt_state, agg, config.sync_opt_state)
         return state._replace(params=params, opt_state=opt_state, anchor=anchor, residual=residual)
 
     return level_sync
@@ -696,5 +962,174 @@ def build_super_round(
         if masks is not None:
             xs = xs + (masks,)
         return jax.lax.scan(round_body, state, xs)
+
+    return super_round
+
+
+def map_stacked_fed_state(state: FedState, stacked_fn, other_fn, stacked_dim: int) -> FedState:
+    """Rebuild a ``FedState`` applying ``stacked_fn`` to every params /
+    opt_state / anchor / residual leaf carrying the leading ``stacked_dim``
+    client axis and ``other_fn`` to everything else (``step``/``rng`` are
+    always "other": their shapes may coincidentally equal ``stacked_dim``).
+    The single place that knows which FedState fields carry client rows —
+    partition specs and the engine's permute/pad both go through it."""
+
+    def leaf(x):
+        if getattr(x, "ndim", 0) >= 1 and x.shape[0] == stacked_dim:
+            return stacked_fn(x)
+        return other_fn(x)
+
+    sub = lambda t: jax.tree_util.tree_map(leaf, t)
+    return FedState(
+        step=other_fn(state.step),
+        params=sub(state.params),
+        opt_state=sub(state.opt_state),
+        rng=other_fn(state.rng),
+        anchor=None if state.anchor is None else sub(state.anchor),
+        residual=None if state.residual is None else sub(state.residual),
+    )
+
+
+def fed_state_partition_specs(state: FedState, axis: str, stacked_dim: int):
+    """PartitionSpecs for a (padded) stacked ``FedState``: leaves with a
+    leading ``stacked_dim`` client axis shard over ``axis``; ``step`` /
+    ``rng`` and scalar opt leaves replicate. Shared by ``shard_map`` specs
+    and the engine's ``NamedSharding`` placement."""
+    from jax.sharding import PartitionSpec as P
+
+    row, rep = P(axis), P()
+    return map_stacked_fed_state(state, lambda _: row, lambda _: rep, stacked_dim)
+
+
+def build_sharded_super_round(
+    loss_fn: LossFn,
+    optimizer: GradientTransformation,
+    topology: Topology,
+    config: HierFAVGConfig,
+    weights: jnp.ndarray,
+    *,
+    mesh,
+    axis: str = "clients",
+    placement: Optional[ShardPlacement] = None,
+    grad_accum: int = 1,
+):
+    """``build_super_round`` with the stacked client axis sharded over
+    ``mesh``'s ``axis`` via ``shard_map`` — the hardware topology mirrors
+    the client-edge-cloud topology.
+
+    The state/batches/masks must be in *placement order*: permuted by
+    ``placement.gather_index()`` and padded to ``placement.padded_clients``
+    (phantom positions carry zero weight; ``fed.engine`` owns the
+    conversion). Inside the body every sub-top aggregation is a device-local
+    segment reduction and each cloud boundary issues exactly one grouped
+    ``psum`` (``core.aggregation.psum_weighted_mean``); per-client RNG
+    streams are reproduced exactly by replicating the ``split`` of the
+    global key and gathering each shard's original client ids, so local
+    steps and sub-top syncs match the single-device superround bit-for-bit
+    and only the cloud psum reassociates the weighted sum (documented ULP
+    tolerance; see docs/performance.md).
+
+        super_round(state, batches, masks=None) -> (state, metrics)
+
+    batch leaves carry (κ₂, κ₁, padded_N, b, ...); ``masks`` is an optional
+    (κ₂, padded_N) stack. Metrics stay per-client so no collective is spent
+    on diagnostics: ``{"loss": (κ₂, κ₁, padded_N), "gsq": (κ₂, κ₁,
+    padded_N), "step": (κ₂,)}`` — the engine reduces them host-side at
+    flush time (phantom columns dropped).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    spec = as_hierarchy(topology)
+    depth = _check_levels(spec, config)
+    num_shards = int(mesh.shape[axis])
+    if placement is None:
+        try:
+            placement = plan_shard_placement(spec, num_shards)
+        except ValueError as e:
+            raise ValueError(f"schedule cannot run client-sharded: {e}") from None
+    # validate the layout that actually runs, not a freshly planned one
+    reason = sharding_incompatibility(config, spec, num_shards, placement=placement)
+    if reason is not None:
+        raise ValueError(f"schedule cannot run client-sharded: {reason}")
+    shard = ClientSharding.build(axis, placement, weights)
+    microbatch_grads = _build_microbatch_grads(loss_fn, grad_accum)
+    level_syncs = [
+        build_level_sync(spec, config, weights, lvl, shard=shard) for lvl in range(1, depth + 1)
+    ]
+    deepest_per_round = jnp.asarray(super_round_schedule(config), jnp.int32)
+    ids_table = shard.client_ids_table()
+    n_real = spec.num_clients
+    n_padded = placement.padded_clients
+
+    def local_step(s: FedState, batch: PyTree, ids):
+        rng, step_rng = jax.random.split(s.rng)
+        # replicated O(N) key derivation + a gather of this shard's original
+        # client ids: every real client sees the exact single-device stream
+        # (phantoms reuse client 0's key; their weight is zero)
+        all_rngs = jax.random.split(step_rng, n_real)
+        rngs = jnp.take(all_rngs, ids, axis=0)
+        grads, losses = microbatch_grads(s.params, batch, rngs)
+        updates, opt_state = optimizer.update(grads, s.opt_state, s.params)
+        params = apply_updates(s.params, updates)
+        gsq = sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)), axis=tuple(range(1, g.ndim)))
+            for g in jax.tree_util.tree_leaves(grads)
+        )
+        return (
+            FedState(
+                step=s.step + 1, params=params, opt_state=opt_state, rng=rng,
+                anchor=s.anchor, residual=s.residual,
+            ),
+            losses.astype(jnp.float32),
+            gsq,
+        )
+
+    def body(state: FedState, batches: PyTree, masks):
+        ids = _shard_row(ids_table, axis)
+
+        def round_body(s, xs):
+            if masks is None:
+                deepest, batch_r = xs
+                mask_r = None
+            else:
+                deepest, batch_r, mask_r = xs
+
+            def step_body(ss, b):
+                ss, losses, gsq = local_step(ss, b, ids)
+                return ss, (losses, gsq)
+
+            s, (losses, gsqs) = jax.lax.scan(step_body, s, batch_r)
+            branches = [(lambda sync: lambda st: sync(st, mask_r))(sync) for sync in level_syncs]
+            s = jax.lax.switch(deepest - 1, branches, s)
+            return s, {"loss": losses, "gsq": gsqs, "step": s.step}
+
+        xs = (deepest_per_round, batches)
+        if masks is not None:
+            xs = xs + (masks,)
+        return jax.lax.scan(round_body, state, xs)
+
+    # batch leaves are (κ₂, κ₁, N, b, ...) — or (κ₂, κ₁, accum, N, b, ...)
+    # when microbatch accumulation shifts the client dim right by one
+    client_dim = 2 + (1 if grad_accum > 1 else 0)
+    batch_spec = P(*([None] * client_dim + [axis]))
+
+    def super_round(state: FedState, batches: PyTree, masks: Optional[jnp.ndarray] = None):
+        state_specs = fed_state_partition_specs(state, axis, n_padded)
+        batch_specs = jax.tree_util.tree_map(lambda _: batch_spec, batches)
+        metric_specs = {"loss": P(None, None, axis), "gsq": P(None, None, axis), "step": P()}
+        if masks is None:
+            fn = shard_map(
+                lambda s, b: body(s, b, None), mesh=mesh,
+                in_specs=(state_specs, batch_specs),
+                out_specs=(state_specs, metric_specs), check_rep=False,
+            )
+            return fn(state, batches)
+        fn = shard_map(
+            body, mesh=mesh,
+            in_specs=(state_specs, batch_specs, P(None, axis)),
+            out_specs=(state_specs, metric_specs), check_rep=False,
+        )
+        return fn(state, batches, masks)
 
     return super_round

@@ -129,6 +129,13 @@ class SuperBatchPrefetcher:
     from it). ``use_thread=False`` degrades to synchronous production (no
     overlap — deterministic single-threaded mode for tests/debugging).
     The worker is the sole batcher consumer while the prefetcher is active.
+
+    Mesh execution: ``device`` may be a ``jax.sharding.Sharding`` (e.g. the
+    engine's ``NamedSharding`` over the ``"clients"`` axis), in which case
+    ``device_put`` uploads each device's block slice directly instead of a
+    single-device copy; ``transform`` is an optional host-side (numpy) hook
+    applied to the assembled block before upload — the engine uses it to
+    permute + pad the client axis into shard placement order.
     """
 
     _SENTINEL_OK = "ok"
@@ -144,12 +151,14 @@ class SuperBatchPrefetcher:
         device=None,
         prefetch: int = 1,
         use_thread: bool = True,
+        transform: Optional[Callable[[PyTree], PyTree]] = None,
     ):
         self.batcher = batcher
         self.rounds_per_block = int(rounds_per_block)
         self.steps_per_round = int(steps_per_round)
         self.num_blocks = num_blocks
         self.device = device
+        self.transform = transform
         self._produced = 0
         self._consumed = 0
         self._use_thread = use_thread
@@ -172,6 +181,8 @@ class SuperBatchPrefetcher:
             ),
             flat,
         )
+        if self.transform is not None:
+            block = self.transform(block)
         block = jax.device_put(block, self.device)  # async upload
         snapshot = self.batcher.state_dict()
         return block, snapshot

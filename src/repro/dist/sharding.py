@@ -15,9 +15,16 @@ Two jobs:
   shards the last dim of matrices over "model" where it divides. Serving
   drops the client axis and shards requests over "data".
 
-Every rule degrades to replication when an axis is absent or does not
-divide — specs stay valid on any mesh, which is what lets one codepath
-serve the single-pod, multi-pod, and interpret/CPU environments.
+Rules degrade to replication when an axis is absent or a non-client dim
+does not divide — specs stay valid on any mesh, which is what lets one
+codepath serve the single-pod, multi-pod, and interpret/CPU environments.
+The one exception is the leading stacked *client* axis: a client count
+that does not divide the mesh's client axes raises instead of silently
+replicating N model copies onto every device.
+
+Also home to the client-sharded superround placement helpers
+(``client_mesh`` / ``fed_state_shardings`` / ``batch_block_sharding`` /
+``mask_stack_sharding``) consumed by ``fed.engine``'s mesh execution path.
 """
 from __future__ import annotations
 
@@ -188,7 +195,15 @@ class ShardingRules:
         for a in axes:
             total *= self.mesh.shape[a]
         if dim_size % total:
-            return None
+            # a silent fall-back to replication here used to hide an N-fold
+            # memory and compute blow-up behind an innocuous-looking config;
+            # an indivisible client count is a topology mistake, not a hint
+            raise ValueError(
+                f"stacked client axis of size {dim_size} is not divisible by the "
+                f"mesh's client axes {axes} ({total} ways); choose a client count "
+                f"that divides the mesh (or drop the client axes from the "
+                f"sharding rules) instead of silently replicating the state"
+            )
         return axes if len(axes) > 1 else axes[0]
 
     def batch_spec(self, shape, *, has_accum: bool = False) -> P:
@@ -231,6 +246,59 @@ class ShardingRules:
             return NamedSharding(self.mesh, P(*members))
 
         return jax.tree_util.tree_map(spec, caches)
+
+
+# ---------------------------------------------------------------------------
+# Client-sharded superround placement (fed.engine's mesh execution path)
+# ---------------------------------------------------------------------------
+
+
+def client_axis_of(mesh) -> str:
+    """The mesh axis the stacked client dim shards over: ``"clients"`` when
+    present, else the mesh's first axis."""
+    names = tuple(mesh.axis_names)
+    return "clients" if "clients" in names else names[0]
+
+
+def client_mesh(num_devices: int = 0, axis: str = "clients"):
+    """A 1-D ``Mesh`` over the first ``num_devices`` local devices (0/None =
+    all). The canonical mesh for the client-sharded superround engine."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    k = len(devs) if not num_devices else int(num_devices)
+    if k < 1:
+        raise ValueError(f"client mesh needs a positive device count, got {k}")
+    if k > len(devs):
+        raise ValueError(
+            f"requested a {k}-device client mesh but only {len(devs)} device(s) "
+            f"are visible; on CPU set XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count={k} before importing jax"
+        )
+    return Mesh(np.asarray(devs[:k]), (axis,))
+
+
+def batch_block_sharding(mesh, axis: str) -> NamedSharding:
+    """Superround batch blocks (κ₂, κ₁, N, b, ...): client dim over ``axis``."""
+    return NamedSharding(mesh, P(None, None, axis))
+
+
+def mask_stack_sharding(mesh, axis: str) -> NamedSharding:
+    """Survival mask stacks (κ₂, N): client dim over ``axis``."""
+    return NamedSharding(mesh, P(None, axis))
+
+
+def fed_state_shardings(mesh, axis: str, state, stacked_dim: int):
+    """NamedShardings for a placement-ordered stacked ``FedState``: leaves
+    with the leading ``stacked_dim`` client axis shard over ``axis``, all
+    else (step, rng, scalar opt leaves) replicates."""
+    from repro.core.hierfavg import fed_state_partition_specs
+
+    specs = fed_state_partition_specs(state, axis, stacked_dim)
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec), specs, is_leaf=lambda x: isinstance(x, P)
+    )
 
 
 def fed_rules(cfg: ArchConfig, mesh) -> ShardingRules:

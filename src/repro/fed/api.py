@@ -28,9 +28,11 @@ benchmark stand-in):
     run          rounds, cadences, engine, seeds
 
 Named paper configurations live in ``repro.fed.scenarios``; anything the
-spec cannot express (mesh shardings, custom models/losses, grad
+spec cannot express (custom meshes, custom models/losses, grad
 accumulation) drops down to the explicit ``FederatedRunner(...)``
-constructor, which is unchanged.
+constructor, which is unchanged. ``topology.mesh_axes`` covers the common
+mesh case declaratively: ``--set topology.mesh_axes=clients:4`` runs the
+superround engine client-sharded over 4 devices.
 """
 from __future__ import annotations
 
@@ -54,11 +56,19 @@ _MISSING = dataclasses.MISSING
 class TopologySpec:
     """The aggregation tree. ``fanouts`` (the ``core.hierarchy.parse_fanouts``
     grammar, e.g. ``"16,12,10,7,5/5"`` or ``"10,10/3,2/2"``) wins when set;
-    otherwise the uniform two-level ``num_edges`` x ``clients_per_edge``."""
+    otherwise the uniform two-level ``num_edges`` x ``clients_per_edge``.
+
+    ``mesh_axes`` maps the tree onto hardware: ``""`` (default) runs
+    single-device; ``"clients"`` shards the stacked client axis over every
+    visible device; ``"clients:4"`` over the first 4. The superround engine
+    then executes client-sharded — edge syncs device-local, one grouped
+    psum per cloud interval (on CPU simulate devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=K``)."""
 
     fanouts: str = ""
     num_edges: int = 5
     clients_per_edge: int = 10
+    mesh_axes: str = ""
 
     def build(self):
         from repro.core.hierarchy import parse_fanouts
@@ -67,6 +77,22 @@ class TopologySpec:
         if self.fanouts:
             return parse_fanouts(self.fanouts)
         return FedTopology(num_edges=self.num_edges, clients_per_edge=self.clients_per_edge)
+
+    def build_mesh(self):
+        """The device mesh ``mesh_axes`` names (None when unset)."""
+        if not self.mesh_axes:
+            return None
+        from repro.dist.sharding import client_mesh
+
+        name, _, size = self.mesh_axes.partition(":")
+        try:
+            num = int(size) if size.strip() else 0
+        except ValueError:
+            raise ValueError(
+                f"topology.mesh_axes={self.mesh_axes!r} must look like "
+                f"'clients' or 'clients:4' (axis name + optional device count)"
+            ) from None
+        return client_mesh(num, axis=name.strip() or "clients")
 
     @property
     def depth(self) -> int:
@@ -402,6 +428,7 @@ class ExperimentSpec:
             failures=failures,
             stragglers=stragglers,
             checkpointer=checkpointer,
+            mesh=self.topology.build_mesh(),
         )
         runner.spec = self  # provenance: the runner knows its declarative form
         return runner
@@ -431,6 +458,8 @@ class ExperimentSpec:
             or f"{self.topology.num_edges}x{self.topology.clients_per_edge}"
         )
         extras = []
+        if self.topology.mesh_axes:
+            extras.append(f"mesh={self.topology.mesh_axes}")
         if self.transport.levels != "identity":
             extras.append(f"transport={self.transport.levels}")
         if self.aggregators.levels != "weighted_mean":

@@ -26,11 +26,23 @@ removes every per-round host cost:
   worker assembles and ``jax.device_put``s interval r+1's
   (κ₂, κ₁, N, b, ...) block while interval r computes.
 
+**Mesh execution** — when the runner carries a device mesh, the engine
+swaps in ``core.hierfavg.build_sharded_super_round``: the stacked client
+axis is permuted into the edge-aligned ``core.hierarchy.ShardPlacement``
+order (each edge subtree wholly on one shard, phantom-padded when the
+packing is ragged) and ``shard_map``-sharded over the mesh's ``"clients"``
+axis. Edge syncs become device-local segment reductions; each cloud
+boundary issues exactly one grouped psum; the prefetcher ``device_put``s
+batch blocks with the matching ``NamedSharding`` so every device receives
+only its shard's slice; metrics stay per-client on device and are reduced
+host-side at flush time. The engine owns the layout conversion: callers
+hand in and get back canonical client order.
+
 Protocol state is bit-exact versus the per-round driver (tests enforce
-it; see docs/performance.md for the two 1-ULP XLA:CPU codegen caveats); the
-runner transparently falls back to the per-round path when ``eval_every``/
-``checkpoint_every`` demand sub-cloud-interval granularity or a mesh
-sharding is in play.
+it; see docs/performance.md for the two 1-ULP XLA:CPU codegen caveats and
+the cloud-psum reassociation tolerance of the mesh path); the runner
+transparently falls back to the per-round path when ``eval_every``/
+``checkpoint_every`` demand sub-cloud-interval granularity.
 """
 from __future__ import annotations
 
@@ -40,16 +52,30 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.hierfavg import FedState, build_super_round
+from repro.core.hierarchy import as_hierarchy, plan_shard_placement
+from repro.core.hierfavg import (
+    FedState,
+    build_sharded_super_round,
+    build_super_round,
+    map_stacked_fed_state,
+)
 from repro.data.pipeline import SuperBatchPrefetcher
 
 PyTree = Any
 
 
+def _map_stacked(state: FedState, fn, lead: int) -> FedState:
+    """Apply ``fn`` to every state leaf carrying the stacked client dim of
+    size ``lead`` (params/opt/anchor/residual rows), pass everything else
+    through — the permute/pad twin of ``fed_state_partition_specs``."""
+    return map_stacked_fed_state(state, fn, lambda x: x, lead)
+
+
 class SuperRoundEngine:
     """Drives a ``FederatedRunner``'s training loop one cloud interval per
-    donated dispatch. Constructed (and cached) by the runner; appends the
-    same per-round ``RoundRecord`` history the per-round path would."""
+    donated dispatch — client-sharded over the runner's mesh when one is
+    configured. Constructed (and cached) by the runner; appends the same
+    per-round ``RoundRecord`` history the per-round path would."""
 
     def __init__(self, runner, *, donate: bool = True, prefetch: bool = True):
         self.runner = runner
@@ -57,21 +83,96 @@ class SuperRoundEngine:
         self.k1 = hier.kappa1
         self.k2 = hier.kappa2_effective
         self.prefetch = prefetch
-        fn = build_super_round(
-            runner.loss_fn,
-            runner.optimizer,
-            runner.topology,
-            hier,
-            runner.weights,
-            grad_accum=runner.grad_accum,
-        )
+        self.mesh = runner.mesh
+        self.placement = None
+        if self.mesh is not None:
+            from repro.dist import sharding as dist_sharding
+
+            self.axis = dist_sharding.client_axis_of(self.mesh)
+            num_shards = int(self.mesh.shape[self.axis])
+            # the runner plans (and caches) the placement during eligibility;
+            # replan only for directly constructed engines
+            self.placement = getattr(runner, "_placement", None)
+            if self.placement is None or self.placement.num_shards != num_shards:
+                self.placement = plan_shard_placement(as_hierarchy(runner.topology), num_shards)
+            fn = build_sharded_super_round(
+                runner.loss_fn,
+                runner.optimizer,
+                runner.topology,
+                hier,
+                runner.weights,
+                mesh=self.mesh,
+                axis=self.axis,
+                placement=self.placement,
+                grad_accum=runner.grad_accum,
+            )
+            self._gather = self.placement.gather_index()
+            self._positions = self.placement.positions()
+            self._valid = self.placement.valid()
+            self._block_sharding = dist_sharding.batch_block_sharding(self.mesh, self.axis)
+            self._mask_sharding = dist_sharding.mask_stack_sharding(self.mesh, self.axis)
+        else:
+            fn = build_super_round(
+                runner.loss_fn,
+                runner.optimizer,
+                runner.topology,
+                hier,
+                runner.weights,
+                grad_accum=runner.grad_accum,
+            )
         self._super = jax.jit(fn, donate_argnums=(0,) if donate else ())
-        # [(round_base, [alive...], device metrics {"loss","grad_norm","step"})]
+        # [(round_base, [alive...], device metrics)] — single-device metrics
+        # are {"loss","grad_norm","step"} (κ₂,) scalars; mesh metrics are
+        # per-client {"loss","gsq"} (κ₂, κ₁, padded_N) + "step" (κ₂,)
         self._pending: List[Tuple[int, List[int], dict]] = []
 
+    # -- placement-order layout conversion (mesh path) ----------------------
+    def _shard_state(self, state: FedState) -> FedState:
+        """Canonical (N, ...) state -> placement-ordered padded state laid
+        out with the engine's NamedShardings (one upload per device)."""
+        from repro.dist.sharding import fed_state_shardings
+
+        gather = jnp.asarray(self._gather)
+        padded = _map_stacked(
+            state, lambda x: jnp.take(x, gather, axis=0), self.runner.topology.num_clients
+        )
+        shardings = fed_state_shardings(
+            self.mesh, self.axis, padded, self.placement.padded_clients
+        )
+        return jax.device_put(padded, shardings)
+
+    def _unshard_state(self, state: FedState) -> FedState:
+        """Placement-ordered padded state -> canonical client order on the
+        default device (phantom rows dropped by the inverse gather)."""
+        pos = jnp.asarray(self._positions)
+        out = _map_stacked(
+            state, lambda x: jnp.take(x, pos, axis=0), self.placement.padded_clients
+        )
+        return jax.device_put(out, jax.devices()[0])
+
+    def _canonical_params(self, state: FedState) -> PyTree:
+        if self.mesh is None:
+            return state.params
+        pos = jnp.asarray(self._positions)
+        return jax.tree_util.tree_map(lambda x: jnp.take(x, pos, axis=0), state.params)
+
+    def _mask_to_device(self, stack: np.ndarray):
+        if self.mesh is None:
+            return jnp.asarray(stack)
+        padded = stack[:, self._gather] * self._valid[None, :].astype(stack.dtype)
+        return jax.device_put(jnp.asarray(padded), self._mask_sharding)
+
+    def _block_transform(self):
+        if self.mesh is None:
+            return None
+        gather = self._gather
+        return lambda block: jax.tree_util.tree_map(lambda x: x[:, :, gather], block)
+
     # ------------------------------------------------------------------
-    def _masks_for_interval(self) -> Tuple[Optional[jnp.ndarray], List[int], Optional[jnp.ndarray]]:
-        """κ₂ host-side survival masks, stacked to (κ₂, N) for the scan.
+    def _masks_for_interval(self) -> Tuple[Optional[np.ndarray], List[int], Optional[np.ndarray]]:
+        """κ₂ host-side survival masks, stacked to a (κ₂, N) numpy block for
+        the scan (canonical client order — the engine permutes for the mesh
+        at upload time).
 
         Returns (mask_stack | None, per-round alive counts, last round's
         mask for the boundary eval). Calls the failure detector once per
@@ -86,22 +187,29 @@ class SuperRoundEngine:
             [m if m is not None else np.ones(n, np.float32) for m in masks]
         )
         alive = [int(row.sum()) for row in stack]
-        stack_dev = jnp.asarray(stack)
-        return stack_dev, alive, stack_dev[-1]
+        return stack, alive, stack[-1]
 
     def _flush(self, wire_per_step: float) -> None:
         """Materialize pending device metrics into RoundRecords (one
         ``device_get`` per outstanding cloud interval) through the runner's
         shared record-assembly helper — both drivers' histories are built
-        by the same code."""
+        by the same code. Mesh metrics arrive per-client (no collective was
+        spent on diagnostics): the loss mean and grad-norm reduce here,
+        over real clients only (phantom pad columns dropped)."""
         r = self.runner
         for round_base, alive, metrics in self._pending:
             vals = jax.device_get(metrics)
             for j in range(self.k2):
                 step = int(vals["step"][j])
+                if self.mesh is None:
+                    loss = float(vals["loss"][j])
+                    gnorm = float(vals["grad_norm"][j])
+                else:
+                    loss = float(np.mean(vals["loss"][j][:, self._valid]))
+                    gsq = vals["gsq"][j][:, self._valid]  # (κ₁, N_real)
+                    gnorm = float(np.mean(np.sqrt(np.sum(gsq, axis=1))))
                 r._record_round(
-                    round_base + j, step, float(vals["loss"][j]),
-                    float(vals["grad_norm"][j]), alive[j], wire_per_step,
+                    round_base + j, step, loss, gnorm, alive[j], wire_per_step,
                 )
         self._pending.clear()
 
@@ -110,7 +218,9 @@ class SuperRoundEngine:
         self, state: FedState, *, start_round: int, num_intervals: int
     ) -> Tuple[FedState, bool]:
         """Run ``num_intervals`` cloud intervals from a cloud-aligned
-        ``start_round``. Returns (state, stopped_early)."""
+        ``start_round``. Takes and returns canonical client order (the mesh
+        path converts to placement order internally). Returns
+        (state, stopped_early)."""
         r = self.runner
         if start_round % self.k2:
             raise ValueError(
@@ -118,20 +228,41 @@ class SuperRoundEngine:
                 f"start_round={start_round} is not a multiple of {self.k2}"
             )
         wire_per_step = r._wire_bytes_per_step(state)
+        if self.mesh is not None:
+            state = self._shard_state(state)
         stopped = False
+        # no failure model -> the all-alive mask triple is identical every
+        # interval: build it once instead of κ₂ detector calls per interval.
+        # An overridden/monkeypatched _mask_for_round is a live seam (the
+        # per-round driver polls it unconditionally), so only the stock
+        # implementation is hoisted.
+        from repro.fed.runner import FederatedRunner
+
+        no_failures = (
+            r.failures is None
+            and r.stragglers is None
+            and getattr(r._mask_for_round, "__func__", None)
+            is FederatedRunner._mask_for_round
+        )
+        static_masks = (None, [r.topology.num_clients] * self.k2, None)
         prefetcher = SuperBatchPrefetcher(
             r.batcher,
             rounds_per_block=self.k2,
             steps_per_round=self.k1,
             num_blocks=num_intervals,
+            device=self._block_sharding if self.mesh is not None else None,
             use_thread=self.prefetch,
+            transform=self._block_transform(),
         )
         try:
             for q in range(num_intervals):
                 round_base = start_round + q * self.k2
                 block, batcher_snapshot = prefetcher.get()
-                mask_stack, alive, last_mask = self._masks_for_interval()
-                state, metrics = self._super(state, block, mask_stack)
+                mask_stack, alive, last_mask = (
+                    static_masks if no_failures else self._masks_for_interval()
+                )
+                mask_dev = None if mask_stack is None else self._mask_to_device(mask_stack)
+                state, metrics = self._super(state, block, mask_dev)
                 self._pending.append((round_base, alive, metrics))
 
                 end_round = round_base + self.k2  # rounds completed so far
@@ -149,7 +280,8 @@ class SuperRoundEngine:
                     self._flush(wire_per_step)
                 acc = None
                 if do_eval:
-                    cloud0 = r.eval_model(state.params, last_mask)
+                    mask_last = None if last_mask is None else jnp.asarray(last_mask)
+                    cloud0 = r.eval_model(self._canonical_params(state), mask_last)
                     acc = float(r.eval_fn(cloud0))
                     r.history[-1].accuracy = acc
                 if do_ckpt:
@@ -158,11 +290,14 @@ class SuperRoundEngine:
                     meta = {"round": end_round, "batcher": batcher_snapshot}
                     if r.failures is not None:
                         meta["failures"] = r.failures.state_dict()
-                    r.checkpointer.save(r.history[-1].step, state, meta)
+                    save_state = state if self.mesh is None else self._unshard_state(state)
+                    r.checkpointer.save(r.history[-1].step, save_state, meta)
                 if acc is not None and r.cfg.target_accuracy and acc >= r.cfg.target_accuracy:
                     stopped = True
                     break
             self._flush(wire_per_step)
         finally:
             prefetcher.stop()
+        if self.mesh is not None:
+            state = self._unshard_state(state)
         return state, stopped

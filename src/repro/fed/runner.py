@@ -18,7 +18,13 @@ delegated to the zero-copy superround engine (``fed.engine``): one donated
 dispatch per κ₂ edge intervals, device-side batch prefetch, and async
 metrics — bit-exact versus this per-round loop, which remains the fallback
 whenever ``eval_every``/``checkpoint_every`` demand finer granularity than
-a cloud interval (or a mesh sharding is configured).
+a cloud interval. With a device mesh (``mesh=`` or ``RunnerConfig.mesh``)
+the engine runs client-sharded over the mesh's ``"clients"`` axis — edge
+syncs device-local, one grouped psum per cloud interval — rather than
+falling back to the per-round loop; only a schedule the sharded lowering
+cannot express (``core.hierfavg.sharding_incompatibility``) or an explicit
+``state_shardings`` pytree keeps whole cloud intervals on the per-round
+path.
 
 When ``hier_config.transport`` declares per-level link codecs, the cost
 accounting automatically switches to the compressed wire: T/E use
@@ -62,6 +68,10 @@ class RunnerConfig:
     # otherwise; "superround" forces the engine (raises if ineligible);
     # "per_round" forces the legacy one-dispatch-per-edge-interval loop.
     engine: str = "auto"
+    # device mesh for client-sharded execution (jax.sharding.Mesh with a
+    # "clients" axis; see dist.sharding.client_mesh). The FederatedRunner
+    # constructor's mesh= argument wins when both are given.
+    mesh: Any = None
 
     def __post_init__(self):
         # fail at construction, not on the first run() call
@@ -125,13 +135,19 @@ class FederatedRunner:
         self.stragglers = stragglers
         self.checkpointer = checkpointer
         self.grad_accum = grad_accum
-        self.mesh = mesh
+        self.mesh = mesh if mesh is not None else runner_config.mesh
+        self._state_shardings = state_shardings
+        self._mesh_reason: Optional[str] = None
+        # the edge-aligned placement is a pure function of (topology, mesh):
+        # plan it once and share it between eligibility checks and the engine
+        self._placement = None
+        self._placement_error: Optional[str] = None
         self._engine = None  # lazily built (and cached) SuperRoundEngine
 
         round_fn = build_hier_round(
             loss_fn, optimizer, topology, hier_config, self.weights, grad_accum=grad_accum
         )
-        if mesh is not None and state_shardings is not None:
+        if self.mesh is not None and state_shardings is not None:
             self._round = jax.jit(round_fn, in_shardings=(state_shardings, None, None, None),
                                   out_shardings=(state_shardings, None))
         else:
@@ -238,14 +254,58 @@ class FederatedRunner:
 
     def _superround_eligible(self, start_round: int) -> bool:
         """The engine drives whole cloud intervals with host seams at cloud
-        boundaries only — eval/checkpoint cadences must land there."""
+        boundaries only — eval/checkpoint cadences must land there. A mesh
+        no longer forces the per-round loop: whole cloud intervals run
+        client-sharded unless the schedule cannot be lowered
+        (``core.hierfavg.sharding_incompatibility``) or the caller pinned an
+        explicit per-round ``state_shardings`` pytree."""
+        self._mesh_reason = None  # never report a stale reason
         k2 = self.hier_config.kappa2_effective
-        if self.mesh is not None or start_round % k2 != 0:
+        if start_round % k2 != 0:
             return False
         for every in (self.cfg.eval_every, self.cfg.checkpoint_every):
             if every and every % k2 != 0:
                 return False
+        if self.mesh is not None:
+            if self._state_shardings is not None:
+                self._mesh_reason = (
+                    "an explicit state_shardings pytree pins the legacy "
+                    "per-round mesh path"
+                )
+                return False
+            if self.grad_accum > 1:
+                # the prefetcher's block layout carries no microbatch axis,
+                # so the engine's client-dim-2 sharding contract breaks
+                self._mesh_reason = "grad_accum > 1 has no sharded block layout yet"
+                return False
+            self._mesh_reason = self._plan_mesh_placement()
+            if self._mesh_reason is not None:
+                return False
         return True
+
+    def _plan_mesh_placement(self) -> Optional[str]:
+        """Plan (once) and validate the edge-aligned placement for the
+        mesh; returns the incompatibility reason, or None with
+        ``self._placement`` populated for the engine to reuse."""
+        from repro.core.hierfavg import sharding_incompatibility
+        from repro.dist.sharding import client_axis_of
+
+        axis = client_axis_of(self.mesh)
+        num_shards = int(self.mesh.shape[axis])
+        if self._placement is None and self._placement_error is None:
+            from repro.core.hierarchy import plan_shard_placement
+
+            try:
+                self._placement = plan_shard_placement(
+                    as_hierarchy(self.topology), num_shards
+                )
+            except ValueError as e:
+                self._placement_error = str(e)
+        if self._placement_error is not None:
+            return self._placement_error
+        return sharding_incompatibility(
+            self.hier_config, self.topology, num_shards, placement=self._placement
+        )
 
     def run(self, state: FedState, *, start_round: int = 0) -> FedState:
         mode = self.cfg.engine  # validated by RunnerConfig.__post_init__
@@ -254,11 +314,14 @@ class FederatedRunner:
             eligible = self._superround_eligible(start_round)
             full = (self.cfg.num_rounds - start_round) // k2 if eligible else 0
             if mode == "superround" and full <= 0:
+                mesh_note = (
+                    f" (mesh: {self._mesh_reason})" if self._mesh_reason else ""
+                )
                 raise ValueError(
                     "engine='superround' needs a cloud-aligned start_round, "
                     "eval_every/checkpoint_every multiples of "
-                    f"kappa2_effective={k2}, no mesh shardings, and at least "
-                    "one whole cloud interval of rounds"
+                    f"kappa2_effective={k2}, a mesh-shardable schedule, and "
+                    f"at least one whole cloud interval of rounds{mesh_note}"
                 )
             if full > 0:
                 if self._engine is None:

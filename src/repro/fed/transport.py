@@ -28,6 +28,11 @@ Error feedback (``int8_ef``): the residual e = (delta + r) − decode(
 encode(delta + r)) is carried per client in ``FedState.residual`` and
 added to the next upload, turning the biased rounding error into a
 telescoping sum (EF-SGD). Caveats in ``docs/compression.md``.
+
+Mesh execution: because blocks never cross client boundaries, every codec
+round-trip (and the EF residual it carries) is a pure per-client-row
+computation — under the client-sharded superround the whole transport
+stays shard-local, bit-identical per client, with no collective traffic.
 """
 from __future__ import annotations
 

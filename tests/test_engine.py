@@ -308,6 +308,42 @@ def test_runner_engine_parity(rng):
     assert rec_a["round"] == list(range(7))  # engine intervals + fallback round
 
 
+def test_engine_hoists_masks_without_failure_model(monkeypatch):
+    """No failure/straggler model -> the all-alive mask triple is built
+    once, not by κ₂ detector polls per cloud interval. (Patched on the
+    class: the stock implementation is what gets hoisted.)"""
+    calls = {"n": 0}
+
+    def counting_mask(self):
+        calls["n"] += 1
+        return None
+
+    monkeypatch.setattr(FederatedRunner, "_mask_for_round", counting_mask)
+    runner, state = _mlp_runner("superround", num_rounds=6)
+    runner.run(state)
+    assert calls["n"] == 0
+    assert [r.round for r in runner.history] == list(range(6))
+
+
+def test_engine_honors_overridden_mask_seam():
+    """An instance-level _mask_for_round override (no failure model set)
+    must still be polled per round — the hoist only covers the stock
+    implementation, keeping engine/per-round parity for injected masks."""
+    calls = {"n": 0}
+
+    def injecting_mask():
+        calls["n"] += 1
+        m = np.ones(6, np.float32)
+        m[5] = 0.0
+        return m
+
+    runner, state = _mlp_runner("superround", num_rounds=6)
+    runner._mask_for_round = injecting_mask
+    runner.run(state)
+    assert calls["n"] == 6  # κ₂ polls per interval, 2 intervals
+    assert all(r.mask_alive == 5 for r in runner.history)
+
+
 def test_runner_forced_superround_requires_cloud_granularity():
     runner, state = _mlp_runner("superround", num_rounds=6, eval_every=1)
     with pytest.raises(ValueError, match="superround"):
