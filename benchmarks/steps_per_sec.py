@@ -27,6 +27,9 @@ over reps.
         # + client-sharded rows over 4 (possibly simulated) devices
     PYTHONPATH=src python -m benchmarks.steps_per_sec --devices 4 --smoke
         # multi-device CI gate: sharded engine must not collapse vs 1 device
+    PYTHONPATH=src python -m benchmarks.steps_per_sec --population --json
+        # population-scale cohort engine only: steady-state client_steps_per_s
+        # on the n1m_cohort4096 scenario, merged into BENCH_throughput.json
 
 ``--devices K`` must be seen before JAX initializes: this module reads it
 from ``sys.argv`` at import time and sets
@@ -192,6 +195,59 @@ def run_shape(name, *, reps=5, intervals=20, warmup_intervals=2, devices=0):
     return out
 
 
+POPULATION_SCENARIO = "n1m_cohort4096"
+
+
+def run_population(name=POPULATION_SCENARIO, *, reps=3, intervals=4, warmup_intervals=1):
+    """Steady-state throughput of the sampled-participation cohort engine on
+    a virtual-client population scenario. Only the cohort is device-resident,
+    so this times the full streaming loop: host-side cohort sampling + lazy
+    per-client batch synthesis (overlapped in the prefetch worker), sticky-row
+    store swap, and the donated cohort superround. One warmup interval pays
+    compilation; timed chunks of whole cloud intervals, median over reps."""
+    from repro.fed import scenarios
+    from repro.fed.engine import CohortEngine
+
+    spec = scenarios.get(name)
+    runner = spec.build()
+    state = runner.init(
+        jax.random.PRNGKey(spec.run.seed), spec.init_params(jax.random.PRNGKey(spec.run.seed + 1))
+    )
+    k1 = runner.hier_config.kappa1
+    k2 = runner.hier_config.kappa2_effective
+    cohort = int(runner.participation.cohort_size)
+    engine = CohortEngine(runner)
+    done = {"intervals": 0}
+
+    def chunk(n):
+        nonlocal state
+        t0 = time.perf_counter()
+        state, _ = engine.run_intervals(
+            state, start_round=done["intervals"] * k2, num_intervals=n
+        )
+        jax.block_until_ready(state.params)
+        done["intervals"] += n
+        return time.perf_counter() - t0
+
+    chunk(warmup_intervals)  # compile + first prefetch fill
+    times = [chunk(intervals) for _ in range(reps)]
+    med = float(np.median(times))
+    steps = intervals * k2 * k1  # local steps per timed chunk
+    store = runner.client_store
+    return {
+        "scenario": name,
+        "num_clients": int(len(runner.batcher.data_sizes)),
+        "cohort_size": cohort,
+        "sampler": runner.participation.sampler,
+        "kappas": [k1, k2],
+        "batch": spec.data.batch_size,
+        "ms_per_interval": round(med / intervals * 1000, 2),
+        "local_steps_per_s": round(steps / med, 2),
+        "client_steps_per_s": round(steps * cohort / med, 1),
+        "client_store_mib": round((store.nbytes if store is not None else 0) / 2**20, 3),
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -202,6 +258,12 @@ def main(argv=None):
     ap.add_argument("--json", nargs="?", const="BENCH_throughput.json", default=None,
                     metavar="OUT.json", help="write machine-readable results "
                     "(default path: BENCH_throughput.json)")
+    ap.add_argument("--population", action="store_true",
+                    help="run ONLY the population-scale cohort bench "
+                         f"({POPULATION_SCENARIO}): steady-state streaming "
+                         "participation over a virtual-client population; with "
+                         "--json the result merges into the existing file "
+                         "without clobbering the shape-sweep keys")
     ap.add_argument("--devices", type=int, default=0, metavar="K",
                     help="also time the client-sharded superround over a K-way "
                          "client mesh (read pre-import: simulates K CPU devices "
@@ -220,7 +282,10 @@ def main(argv=None):
             f"--xla_force_host_platform_device_count={args.devices}"
         )
 
-    if args.smoke:
+    if args.population:
+        names = []  # the population job times the cohort engine only
+        reps, intervals, warmup = 3, 8, 1
+    elif args.smoke:
         names = [] if args.devices > 1 else [HEADLINE]  # the multi-device job gates sharded only
         reps, intervals, warmup = 3, 8, 1
     else:
@@ -259,6 +324,17 @@ def main(argv=None):
             "scaling_vs_1dev": row["sharded_speedup_vs_superround"],
         }
 
+    population = None
+    if args.population:
+        population = run_population(reps=reps, intervals=4, warmup_intervals=warmup)
+        print(
+            f"steps_per_sec_population_{population['scenario']},"
+            f"num_clients={population['num_clients']},"
+            f"cohort={population['cohort_size']}/{population['sampler']},"
+            f"client_steps_per_s={population['client_steps_per_s']},"
+            f"ms_per_interval={population['ms_per_interval']}"
+        )
+
     results = {
         "bench": "steps_per_sec",
         "shapes": shapes,
@@ -276,9 +352,26 @@ def main(argv=None):
         }
     if sharded is not None:
         results["sharded"] = sharded
+    if population is not None:
+        results["population"] = population
     if args.json:
+        # partial runs (--population, --devices-only smoke) merge into the
+        # existing file rather than clobbering the other benches' keys
+        merged = {}
+        if os.path.exists(args.json):
+            try:
+                with open(args.json) as f:
+                    merged = json.load(f)
+            except (OSError, ValueError):
+                merged = {}
+        for key, val in results.items():
+            if key == "shapes" and not val:
+                continue  # keep the previously recorded sweep
+            merged[key] = val
+        if not isinstance(merged.get("shapes"), dict):
+            merged["shapes"] = shapes
         with open(args.json, "w") as f:
-            json.dump(results, f, indent=2)
+            json.dump(merged, f, indent=2)
         print(f"wrote {args.json}")
     if head is not None and head["speedup"] < 1.5:
         print(

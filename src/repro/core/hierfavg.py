@@ -89,6 +89,7 @@ class HierFAVGConfig:
     kappas: Optional[Tuple[int, ...]] = None  # per-level κ vector (None -> (κ₁, κ₂))
     transport: Optional[Any] = None  # fed.transport.TransportSpec: one LinkCodec per level
     aggregators: Optional[Any] = None  # core.aggregation.AggregatorSpec: one per level
+    participation: Optional[Any] = None  # fed.participation.ParticipationSpec: sampled cohorts
 
     def __post_init__(self):
         if self.aggregators is not None:
@@ -145,6 +146,26 @@ class HierFAVGConfig:
                 )
         if self.kappa1 < 1 or self.kappa2 < 1:
             raise ValueError("kappa1/kappa2 must be >= 1")
+        if self.participation is not None:
+            if not hasattr(self.participation, "cohort_size") or not hasattr(
+                self.participation, "is_active"
+            ):
+                raise TypeError(
+                    f"participation must be a fed.participation.ParticipationSpec, got "
+                    f"{type(self.participation).__name__}"
+                )
+            if self.participation.is_active:
+                if self.async_cloud:
+                    raise ValueError(
+                        "sampled participation is incompatible with async_cloud (the "
+                        "stale-correction tree indexes the full population)"
+                    )
+                if self.aggregators_active:
+                    raise ValueError(
+                        "sampled participation requires the default weighted mean at "
+                        "every level (a robust statistic over a sampled cohort is not "
+                        "the population statistic)"
+                    )
 
     @classmethod
     def multi_level(cls, kappas: Sequence[int], **kwargs) -> "HierFAVGConfig":
@@ -199,6 +220,12 @@ class HierFAVGConfig:
         all-``weighted_mean`` AggregatorSpec is numerically the unchanged
         protocol and takes the exact legacy code path)."""
         return self.aggregators is not None and not self.aggregators.is_trivial
+
+    @property
+    def participation_active(self) -> bool:
+        """True iff cohort sampling is on (a cohort_size=0 spec is inert and
+        every engine keeps its full-population behaviour)."""
+        return self.participation is not None and self.participation.is_active
 
 
 class FedState(NamedTuple):
@@ -962,6 +989,197 @@ def build_super_round(
         if masks is not None:
             xs = xs + (masks,)
         return jax.lax.scan(round_body, state, xs)
+
+    return super_round
+
+
+# ---------------------------------------------------------------------------
+# Sampled-participation (cohort) lowering
+# ---------------------------------------------------------------------------
+
+def cohort_incompatibility(
+    config: HierFAVGConfig, topology: Topology, cohort_size: int
+) -> Optional[str]:
+    """None if the schedule can run cohort-sampled, else a human reason.
+
+    Mirrors ``sharding_incompatibility``: the single predicate both the
+    builder (raises) and the runner's dispatch (reports) consult.
+    """
+    spec = as_hierarchy(topology)
+    if config.async_cloud:
+        return "async_cloud's stale-correction tree indexes the full population"
+    if config.aggregators_active:
+        return "a robust statistic over a sampled cohort is not the population statistic"
+    if not 1 <= int(cohort_size) <= spec.num_clients:
+        return f"cohort_size {cohort_size} outside 1..{spec.num_clients} (population)"
+    return None
+
+
+def init_cohort_state(
+    rng: jax.Array,
+    params: PyTree,
+    optimizer: GradientTransformation,
+    config: HierFAVGConfig,
+    cohort_size: int,
+) -> FedState:
+    """Cohort-resident ``FedState``: C stacked rows, not N.
+
+    Zero-init opt_state/residual rows equal what ``ClientStateStore`` hands
+    back for never-sampled clients, so a fresh state is exactly "every
+    cohort member participates for the first time"."""
+    stacked = replicate_for_clients(params, int(cohort_size))
+    return init_state(rng, stacked, optimizer, None, config, already_stacked=True)
+
+
+def _build_cohort_level_sync(spec: HierarchySpec, config: HierFAVGConfig, level: int, cohort_size: int):
+    """``build_level_sync`` lowered for a sampled cohort.
+
+    The cohort's per-level segment ids and weights arrive as *traced* inputs
+    (``cohort = {"segments": (depth-1, C) int32, "weights": (C,) f32}``), so
+    one compiled executable serves every sampled cohort. Segment ids are the
+    cohort members' ORIGINAL node ids per level; reductions still run over
+    the full node count, and nodes with no sampled member contribute nothing
+    (their safe-denominator mean is never taken back). Non-participating
+    clients thus carry exactly zero weight in every edge/cloud mean — the
+    partial-participation HierFAVG semantics.
+
+    The op-for-op body matches ``build_level_sync`` with ``mask=None``. The
+    top stage is cohort-independent (every member maps to the single root),
+    so its ids stay static and keep the contiguous-reshape fast path —
+    bit-identical to the full-population top stage. Sub-top stages use the
+    traced ids' ``segment_sum`` path: bit-identical to the static lowering
+    on ragged topologies (same op), within 1 ULP on uniform ones (where the
+    static path takes the reshape shortcut instead).
+    """
+    depth = spec.depth
+    is_top = level == depth
+    codec = None
+    if config.transport_active:
+        codec = config.transport.codec(level)
+        if codec.is_identity:
+            codec = None
+    top_ids = np.zeros(int(cohort_size), np.int32)
+
+    def seg(cohort, t):
+        return top_ids if t == depth else cohort["segments"][t - 1]
+
+    def stage(tree, cohort, upto):
+        out = tree
+        for t in range(1, upto + 1):
+            out = aggregation.segment_weighted_mean(
+                out, cohort["weights"], seg(cohort, t), spec.num_nodes(t), None
+            )
+        return out
+
+    def level_sync(state: FedState, cohort) -> FedState:
+        uploaded = state.params
+        residual = state.residual
+        if codec is not None:
+            delta = jax.tree_util.tree_map(
+                lambda x, a: x.astype(jnp.float32) - a.astype(jnp.float32),
+                state.params, state.anchor,
+            )
+            delta_hat, residual = codec.roundtrip(delta, residual)
+            uploaded = jax.tree_util.tree_map(
+                lambda a, d, x: (a.astype(jnp.float32) + d).astype(x.dtype),
+                state.anchor, delta_hat, state.params,
+            )
+        if is_top and config.delta_cloud and state.anchor is not None:
+            agg = lambda t: aggregation.delta_weighted_mean(t, state.anchor, cohort["weights"], None)
+            params = agg(uploaded)
+            anchor = jax.tree_util.tree_map(jnp.copy, params)
+        else:
+            agg = lambda t: stage(t, cohort, level)
+            params = agg(uploaded)
+            if config.transport_active:
+                anchor = jax.tree_util.tree_map(jnp.copy, params)
+            else:
+                anchor = state.anchor
+        if codec is not None:
+            # every cohort member uploads and receives (weights are > 0 for
+            # sampled clients); the keep-dead plumbing is kept structurally
+            # identical to build_level_sync so the graphs only differ in ids
+            w_eff = cohort["weights"].astype(jnp.float32)
+            seg_l = jnp.asarray(seg(cohort, level), jnp.int32)
+            received = jnp.take(
+                jax.ops.segment_sum(w_eff, seg_l, spec.num_nodes(level)) > 0, seg_l
+            )
+
+            def keep_dead(new, old):
+                r = received.reshape((-1,) + (1,) * (new.ndim - 1))
+                return jnp.where(r, new, old.astype(new.dtype))
+
+            params = jax.tree_util.tree_map(keep_dead, params, state.params)
+            anchor = jax.tree_util.tree_map(keep_dead, anchor, state.anchor)
+            if residual is not None and state.residual is not None:
+                sent = w_eff > 0
+
+                def keep_residual(new, old):
+                    s = sent.reshape((-1,) + (1,) * (new.ndim - 1))
+                    return jnp.where(s, new, old)
+
+                residual = jax.tree_util.tree_map(keep_residual, residual, state.residual)
+        opt_state = _maybe_sync_opt_state(state.opt_state, agg, config.sync_opt_state)
+        return state._replace(params=params, opt_state=opt_state, anchor=anchor, residual=residual)
+
+    return level_sync
+
+
+def build_cohort_super_round(
+    loss_fn: LossFn,
+    optimizer: GradientTransformation,
+    topology: Topology,
+    config: HierFAVGConfig,
+    *,
+    cohort_size: int,
+    grad_accum: int = 1,
+):
+    """``build_super_round`` for a sampled cohort of C clients.
+
+        super_round(state, batches, cohort) -> (state, metrics)
+
+    ``state`` stacks C rows (``init_cohort_state``); batch leaves carry a
+    leading (κ₂, κ₁) axis pair over cohort-shaped per-step batches;
+    ``cohort`` is the traced ``{"segments": (depth-1, C), "weights": (C,)}``
+    pytree a ``CohortPrefetcher`` assembles per cloud interval. Because the
+    cohort arrays are inputs rather than constants, resampling never
+    recompiles — the executable is reused across every interval.
+
+    With the identity cohort (C == N, weights/segments of the full
+    population) this reproduces ``build_super_round`` exactly: bit-exact on
+    ragged topologies, within the documented 1-ULP summation-order tolerance
+    on uniform ones (see ``_build_cohort_level_sync``).
+    """
+    spec = as_hierarchy(topology)
+    depth = _check_levels(spec, config)
+    reason = cohort_incompatibility(config, spec, cohort_size)
+    if reason is not None:
+        raise ValueError(f"schedule cannot run cohort-sampled: {reason}")
+    local_step = build_local_step(loss_fn, optimizer, grad_accum=grad_accum)
+    level_syncs = [
+        _build_cohort_level_sync(spec, config, l, cohort_size) for l in range(1, depth + 1)
+    ]
+    deepest_per_round = jnp.asarray(super_round_schedule(config), jnp.int32)
+
+    def super_round(state: FedState, batches: PyTree, cohort):
+        def round_body(s, xs):
+            deepest, batch_r = xs
+
+            def step_body(ss, b):
+                ss, m = local_step(ss, b)
+                return ss, (m["loss"], m["grad_norm"])
+
+            s, (losses, gnorms) = jax.lax.scan(step_body, s, batch_r)
+            branches = [(lambda sync: lambda st: sync(st, cohort))(sync) for sync in level_syncs]
+            s = jax.lax.switch(deepest - 1, branches, s)
+            metrics = {
+                "loss": jnp.mean(losses),
+                "grad_norm": jnp.mean(gnorms),
+                "step": s.step,
+            }
+            return s, metrics
+
+        return jax.lax.scan(round_body, state, (deepest_per_round, batches))
 
     return super_round
 

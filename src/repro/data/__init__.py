@@ -1,6 +1,12 @@
 from repro.data import partition, pipeline, synthetic
 from repro.data.partition import partition as make_partition, partition_hierarchy, partition_stats
-from repro.data.pipeline import FederatedBatcher, SuperBatchPrefetcher, global_batch_iterator
+from repro.data.pipeline import (
+    CohortPrefetcher,
+    FederatedBatcher,
+    SuperBatchPrefetcher,
+    VirtualClientBatcher,
+    global_batch_iterator,
+)
 from repro.data.synthetic import ClassificationData, TokenCorpus, clustered_gaussians, embedding_corpus, token_corpus
 
 __all__ = [
@@ -10,8 +16,10 @@ __all__ = [
     "make_partition",
     "partition_hierarchy",
     "partition_stats",
+    "CohortPrefetcher",
     "FederatedBatcher",
     "SuperBatchPrefetcher",
+    "VirtualClientBatcher",
     "global_batch_iterator",
     "ClassificationData",
     "TokenCorpus",

@@ -92,6 +92,23 @@ class FederatedBatcher:
 
         return jax.tree_util.tree_map(lambda *xs: np.stack(xs), *outs)
 
+    # -- sampled-participation view ------------------------------------------
+    def next_batch_for(self, ids: Sequence[int]) -> PyTree:
+        """One cohort batch: leaves (C, b, ...); advances only the sampled
+        clients' cursors. With ids == range(N) this is ``next_batch`` exactly
+        (same per-client draw order), which is what full-participation
+        parity rests on."""
+        rows = [self._next_for(int(i)) for i in ids]
+        idx = np.stack(rows)  # (C, b)
+        return self.batch_fn({k: v[idx] for k, v in self.arrays.items()})
+
+    def next_batches_for(self, ids: Sequence[int], count: int) -> PyTree:
+        """`count` cohort batches with a leading scan axis: (count, C, b, ...)."""
+        outs = [self.next_batch_for(ids) for _ in range(count)]
+        import jax
+
+        return jax.tree_util.tree_map(lambda *xs: np.stack(xs), *outs)
+
     # -- restart safety ------------------------------------------------------
     def state_dict(self) -> Dict[str, Any]:
         return {
@@ -104,6 +121,119 @@ class FederatedBatcher:
         for c, (e, p) in zip(self.cursors, state["cursors"]):
             c.epoch, c.pos = e, p
         self._orders = [self._order(i) for i in range(self.num_clients)]
+
+
+class VirtualClientBatcher:
+    """A population of N *virtual* clients over a shared sample pool.
+
+    At population scale (ROADMAP's "millions of users") materializing N
+    per-client index sets up front is O(N) host memory and startup time.
+    Here a client's shard is a pure function of ``(seed, client_id)`` —
+    ``samples_per_client`` bootstrap draws from the pool, realized lazily
+    only when that client is actually sampled into a cohort. Per-epoch
+    shuffle order is likewise derived from ``(seed, client_id, epoch)``.
+    Cursor state is a dict holding only the clients that ever participated,
+    so batcher memory is ∝ cumulative unique participants, not N.
+
+    Interface-compatible with the cohort slice of ``FederatedBatcher``
+    (``next_batch_for`` / ``next_batches_for`` / ``state_dict``); the
+    full-population ``next_batch`` works too but is intended only for small
+    N (tests).
+    """
+
+    _SHARD_NS = 0x5A4D  # namespaces the shard draw away from the order draw
+
+    def __init__(
+        self,
+        arrays: Dict[str, np.ndarray],
+        *,
+        num_clients: int,
+        samples_per_client: int,
+        batch_size: int,
+        seed: int = 0,
+        batch_fn: Optional[Callable[[Dict[str, np.ndarray]], PyTree]] = None,
+    ):
+        self.arrays = arrays
+        self.num_clients = int(num_clients)
+        self.samples_per_client = int(samples_per_client)
+        self.batch_size = int(batch_size)
+        self.seed = int(seed)
+        self.batch_fn = batch_fn or (lambda d: d)
+        self.num_samples = int(next(iter(arrays.values())).shape[0])
+        if self.samples_per_client < self.batch_size:
+            raise ValueError(
+                f"samples_per_client {self.samples_per_client} < batch_size {self.batch_size}"
+            )
+        self.cursors: Dict[int, ClientCursor] = {}
+
+    @property
+    def data_sizes(self) -> np.ndarray:
+        return np.full(self.num_clients, self.samples_per_client, np.float64)
+
+    def _shard(self, client: int) -> np.ndarray:
+        """(samples_per_client,) pool indices — the client's virtual dataset."""
+        rng = np.random.default_rng((self.seed, self._SHARD_NS, client))
+        return rng.integers(0, self.num_samples, self.samples_per_client)
+
+    def _order(self, client: int, epoch: int) -> np.ndarray:
+        rng = np.random.default_rng((self.seed, client, epoch))
+        return rng.permutation(self.samples_per_client)
+
+    def _take_rows(self, client: int, nbatches: int) -> np.ndarray:
+        """(nbatches, b) pool indices; advances the client's cursor. Epoch
+        semantics mirror ``FederatedBatcher._next_for`` (partial trailing
+        batches are never emitted; the epoch reshuffles instead)."""
+        cur = self.cursors.setdefault(client, ClientCursor())
+        shard = self._shard(client)
+        b = self.batch_size
+        order = None
+        out = np.empty((nbatches, b), np.int64)
+        for j in range(nbatches):
+            if cur.pos + b > self.samples_per_client:
+                cur.epoch += 1
+                cur.pos = 0
+                order = None
+            if order is None:
+                order = self._order(client, cur.epoch)
+            out[j] = shard[order[cur.pos : cur.pos + b]]
+            cur.pos += b
+        return out
+
+    def next_batch_for(self, ids: Sequence[int]) -> PyTree:
+        """One cohort batch: leaves (C, b, ...)."""
+        rows = np.stack([self._take_rows(int(c), 1)[0] for c in ids])  # (C, b)
+        return self.batch_fn({k: v[rows] for k, v in self.arrays.items()})
+
+    def next_batches_for(self, ids: Sequence[int], count: int) -> PyTree:
+        """`count` cohort batches with a leading scan axis: (count, C, b, ...)."""
+        rows = np.stack([self._take_rows(int(c), count) for c in ids], axis=1)
+        return self.batch_fn({k: v[rows] for k, v in self.arrays.items()})
+
+    def next_batch(self) -> PyTree:
+        """Full-population batch (small-N testing only at scale N)."""
+        return self.next_batch_for(range(self.num_clients))
+
+    def next_batches(self, count: int) -> PyTree:
+        outs = [self.next_batch() for _ in range(count)]
+        import jax
+
+        return jax.tree_util.tree_map(lambda *xs: np.stack(xs), *outs)
+
+    # -- restart safety ------------------------------------------------------
+    def state_dict(self) -> Dict[str, Any]:
+        # string keys: this dict rides checkpoint metadata through JSON,
+        # which stringifies int keys — normalize here so save/load is stable
+        return {
+            "seed": self.seed,
+            "cursors": {str(c): (cur.epoch, cur.pos) for c, cur in self.cursors.items()},
+        }
+
+    def load_state_dict(self, state: Dict[str, Any]) -> None:
+        self.seed = int(state["seed"])
+        self.cursors = {
+            int(c): ClientCursor(epoch=int(e), pos=int(p))
+            for c, (e, p) in state["cursors"].items()
+        }
 
 
 class SuperBatchPrefetcher:
@@ -237,6 +367,84 @@ class SuperBatchPrefetcher:
 
     def __exit__(self, *exc) -> None:
         self.stop()
+
+
+class CohortPrefetcher(SuperBatchPrefetcher):
+    """``SuperBatchPrefetcher`` for sampled participation.
+
+    The worker additionally draws the next cloud interval's cohort from a
+    ``fed.participation`` sampler and assembles + uploads everything that is
+    a pure function of the cohort ids — the (κ₂, κ₁, C, b, ...) batch block
+    and the traced ``{"segments": (depth-1, C), "weights": (C,)}`` cohort
+    pytree the cohort superround consumes — so sampling, batch gathers, and
+    the host→device copies all overlap the previous interval's compute.
+    The *client-state* rows are deliberately NOT prefetched: consecutive
+    cohorts may overlap, and a row gathered before the previous interval's
+    writeback would be stale; the engine swaps store rows synchronously
+    (a C-row host gather — cheap next to the batch upload this class hides).
+
+    Restart-exactness: each block's snapshot carries the *sampler* state
+    alongside the batcher cursors, both captured right after producing the
+    block. The live sampler runs ahead of the computation (prefetch), so a
+    checkpoint that recorded the live state would replay *different* cohorts
+    on resume — checkpoints must store the snapshot, mirroring the batcher
+    contract above.
+
+    ``get()`` returns ``((ids, cohort, block), snapshot)``: host-side int64
+    ids for store gather/scatter, device-resident cohort arrays + block, and
+    ``snapshot = {"batcher": ..., "sampler": ...}``.
+    """
+
+    def __init__(
+        self,
+        batcher,
+        sampler,
+        *,
+        segments: np.ndarray,
+        weights: np.ndarray,
+        rounds_per_block: int,
+        steps_per_round: int,
+        num_blocks: Optional[int] = None,
+        device=None,
+        prefetch: int = 1,
+        use_thread: bool = True,
+    ):
+        # fields first: the base __init__ starts the worker thread, which
+        # calls our _make_block immediately
+        self.sampler = sampler
+        self._segments = np.ascontiguousarray(np.asarray(segments, np.int32))
+        self._weights = np.asarray(weights, np.float32)
+        super().__init__(
+            batcher,
+            rounds_per_block=rounds_per_block,
+            steps_per_round=steps_per_round,
+            num_blocks=num_blocks,
+            device=device,
+            prefetch=prefetch,
+            use_thread=use_thread,
+        )
+
+    def _make_block(self):
+        import jax
+
+        ids = np.asarray(self.sampler.sample(), np.int64)
+        flat = self.batcher.next_batches_for(ids, self.rounds_per_block * self.steps_per_round)
+        block = jax.tree_util.tree_map(
+            lambda x: np.reshape(
+                x, (self.rounds_per_block, self.steps_per_round) + x.shape[1:]
+            ),
+            flat,
+        )
+        cohort = {
+            "segments": self._segments[:, ids],
+            "weights": self._weights[ids],
+        }
+        cohort, block = jax.device_put((cohort, block), self.device)  # async upload
+        snapshot = {
+            "batcher": self.batcher.state_dict(),
+            "sampler": self.sampler.state_dict(),
+        }
+        return (ids, cohort, block), snapshot
 
 
 def global_batch_iterator(

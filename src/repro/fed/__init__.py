@@ -1,7 +1,9 @@
-from repro.fed import engine, failures, runner, topology, transport
+from repro.fed import client_store, engine, failures, participation, runner, topology, transport
 from repro.fed import api, scenarios
 from repro.fed.api import ExperimentSpec
-from repro.fed.engine import SuperRoundEngine
+from repro.fed.client_store import ClientStateStore
+from repro.fed.engine import CohortEngine, SuperRoundEngine
+from repro.fed.participation import ParticipationSpec
 from repro.fed.transport import (
     IdentityCodec,
     Int8BlockCodec,
@@ -28,8 +30,13 @@ __all__ = [
     "api",
     "scenarios",
     "ExperimentSpec",
+    "client_store",
+    "ClientStateStore",
     "engine",
+    "CohortEngine",
     "SuperRoundEngine",
+    "participation",
+    "ParticipationSpec",
     "failures",
     "runner",
     "topology",

@@ -42,6 +42,8 @@ from typing import Any, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.fed.participation import ParticipationSpec
+
 PyTree = Any
 
 _MISSING = dataclasses.MISSING
@@ -143,6 +145,11 @@ class DataSpec:
     seq_len: int = 64  # tokens only
     vocab: int = 512  # tokens only
     concentration: float = 0.2  # tokens only
+    # virtual-population mode (gaussians only): N lazy bootstrap shards of
+    # samples_per_client draws over the shared pool instead of a materialized
+    # partition — per-client data is realized only for sampled cohorts
+    virtual_clients: int = 0  # 0 = materialized partition (the default)
+    samples_per_client: int = 64  # virtual shard size (>= batch_size)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -297,6 +304,7 @@ class ExperimentSpec:
     model: ModelSpec = dataclasses.field(default_factory=ModelSpec)
     transport: TransportSpec = dataclasses.field(default_factory=TransportSpec)
     aggregators: AggregatorSpec = dataclasses.field(default_factory=AggregatorSpec)
+    participation: ParticipationSpec = dataclasses.field(default_factory=ParticipationSpec)
     failures: FailureSpec = dataclasses.field(default_factory=FailureSpec)
     cost: CostSpec = dataclasses.field(default_factory=CostSpec)
     run: RunSpec = dataclasses.field(default_factory=RunSpec)
@@ -386,6 +394,7 @@ class ExperimentSpec:
             async_cloud=self.schedule.async_cloud,
             transport=self.transport.build(depth),
             aggregators=self.aggregators.build(depth),
+            participation=self.participation if self.participation.is_active else None,
         )
 
     def init_params(self, rng) -> PyTree:
@@ -464,6 +473,10 @@ class ExperimentSpec:
             extras.append(f"transport={self.transport.levels}")
         if self.aggregators.levels != "weighted_mean":
             extras.append(f"agg={self.aggregators.levels}")
+        if self.participation.is_active:
+            extras.append(
+                f"cohort={self.participation.cohort_size}/{self.participation.sampler}"
+            )
         if self.failures.p_fail > 0:
             extras.append(f"p_fail={self.failures.p_fail:g}")
         tail = (" " + " ".join(extras)) if extras else ""
@@ -698,6 +711,31 @@ def _build_data(spec: ExperimentSpec, topo, bundle):
             rng, num_samples=d.num_samples, num_classes=d.num_classes,
             dim=(d.dim,), class_sep=d.class_sep,
         )
+        if d.virtual_clients:
+            # population mode: no materialized partition — each client's
+            # shard is a lazy function of (seed, client_id), realized only
+            # when that client is sampled into a cohort
+            from repro.data import VirtualClientBatcher
+
+            if d.virtual_clients != n:
+                raise ValueError(
+                    f"data.virtual_clients={d.virtual_clients} must equal the "
+                    f"topology's {n} clients (the population IS the client set)"
+                )
+            batcher = VirtualClientBatcher(
+                {"inputs": data.x, "targets": data.y},
+                num_clients=n,
+                samples_per_client=d.samples_per_client,
+                batch_size=d.batch_size,
+                seed=d.seed,
+            )
+            apply_fn = bundle["apply"]
+            x_all, y_all = jnp.asarray(data.x), jnp.asarray(data.y)
+
+            def eval_fn(p):
+                return float(cnn.accuracy(apply_fn(p, x_all), y_all))
+
+            return batcher, eval_fn
         parts = partition_hierarchy(d.partition, data.y, pspec, rng, **kw)[:n]
         batcher = FederatedBatcher(
             {"inputs": data.x, "targets": data.y}, parts, batch_size=d.batch_size, seed=d.seed
@@ -737,6 +775,7 @@ __all__ = [
     "ExperimentSpec",
     "FailureSpec",
     "ModelSpec",
+    "ParticipationSpec",
     "RunSpec",
     "ScheduleSpec",
     "TopologySpec",

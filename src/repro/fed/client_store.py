@@ -1,0 +1,142 @@
+"""Host-side store for the persistent per-client slice of federated state.
+
+The cohort engine keeps only C sampled clients device-resident; everything
+*sticky* per client — optimizer-state rows (momentum trace, Adam moments)
+and error-feedback residuals — lives here, in host RAM, indexed by original
+client id. Model parameters and transport anchors are deliberately NOT
+stored: the cohort engine only hands control back after a cloud sync, at
+which point every stacked params/anchor row equals the broadcast global
+model, so those rows carry no per-client information.
+
+Memory: backing arrays are ``np.zeros((N,) + row_shape)``. numpy's calloc
+gives copy-on-write zero pages, so physical memory grows with the set of
+clients actually *written*, not with N — a 1M-client population with a 4096
+cohort commits pages roughly in proportion to cumulative unique
+participants. Zero rows are exactly what ``optimizer.init`` produces for
+every in-repo transform (trace/mu/nu start at zeros, EF residuals at zeros),
+so "never sampled" and "freshly initialized" are indistinguishable by
+construction — no touched-mask branch is needed on the gather path.
+
+``state()`` / ``load()`` expose the store as a checkpointable pytree so a
+run can be resumed with all momentum/residual history intact.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Sequence
+
+import numpy as np
+import jax
+
+PyTree = Any
+
+__all__ = ["ClientStateStore", "sticky_rows", "replace_sticky_rows"]
+
+
+def sticky_rows(state, cohort_size: int) -> Dict[str, Any]:
+    """Extract the per-client transient rows of a stacked ``FedState``.
+
+    Returns ``{"opt": [stacked opt leaves...]}`` plus ``"res"`` when the
+    state carries an EF residual. A leaf is per-client iff it has a leading
+    axis of length ``cohort_size`` — the same convention as
+    ``map_stacked_fed_state`` (scalar counts/schedules are shared, not
+    per-client).
+    """
+    opt_leaves = jax.tree_util.tree_leaves(state.opt_state)
+    rows: Dict[str, Any] = {
+        "opt": [x for x in opt_leaves if getattr(x, "ndim", 0) >= 1 and x.shape[0] == cohort_size]
+    }
+    if state.residual is not None:
+        rows["res"] = state.residual
+    return rows
+
+
+def replace_sticky_rows(state, rows: Dict[str, Any], cohort_size: int):
+    """Inverse of :func:`sticky_rows`: swap fresh rows into a ``FedState``."""
+    opt_leaves, opt_def = jax.tree_util.tree_flatten(state.opt_state)
+    fresh = iter(rows["opt"])
+    new_leaves = [
+        next(fresh) if getattr(x, "ndim", 0) >= 1 and x.shape[0] == cohort_size else x
+        for x in opt_leaves
+    ]
+    out = state._replace(opt_state=jax.tree_util.tree_unflatten(opt_def, new_leaves))
+    if "res" in rows:
+        out = out._replace(residual=rows["res"])
+    return out
+
+
+class ClientStateStore:
+    """(N, …) host arrays with gather/scatter by original client id."""
+
+    def __init__(self, num_clients: int, row_template: PyTree):
+        """``row_template`` leaves give per-client row shape/dtype (no client axis)."""
+        self.num_clients = int(num_clients)
+        leaves, self._treedef = jax.tree_util.tree_flatten(row_template)
+        self._arrays: List[np.ndarray] = [
+            np.zeros((self.num_clients,) + tuple(np.shape(leaf)), dtype=np.asarray(leaf).dtype)
+            for leaf in leaves
+        ]
+        self._touched = np.zeros(self.num_clients, np.bool_)
+
+    @classmethod
+    def from_rows(cls, num_clients: int, rows: PyTree) -> "ClientStateStore":
+        """Build from a cohort-stacked rows pytree (leaves have a leading cohort axis)."""
+        template = jax.tree_util.tree_map(lambda x: np.zeros(x.shape[1:], np.asarray(x).dtype)
+                                          if getattr(x, "ndim", 0) >= 1
+                                          else np.zeros((), np.asarray(x).dtype), rows)
+        return cls(num_clients, template)
+
+    # -- shape/introspection -------------------------------------------------
+
+    @property
+    def is_empty(self) -> bool:
+        """True when there is no sticky per-client state (e.g. plain SGD, no EF)."""
+        return not self._arrays
+
+    @property
+    def num_touched(self) -> int:
+        """Clients that have participated at least once (rows ever written)."""
+        return int(self._touched.sum())
+
+    @property
+    def nbytes(self) -> int:
+        """Logical size; physical residency is page-lazy (see module docstring)."""
+        return sum(a.nbytes for a in self._arrays) + self._touched.nbytes
+
+    # -- the cohort swap -----------------------------------------------------
+
+    def gather(self, ids: Sequence[int]) -> PyTree:
+        """Rows for a sampled cohort, zero (= fresh-init) where never written."""
+        idx = np.asarray(ids, np.int64)
+        return jax.tree_util.tree_unflatten(self._treedef, [a[idx] for a in self._arrays])
+
+    def scatter(self, ids: Sequence[int], rows: PyTree) -> None:
+        """Write a cohort's rows back after its cloud interval."""
+        idx = np.asarray(ids, np.int64)
+        leaves = jax.tree_util.tree_leaves(rows)
+        if len(leaves) != len(self._arrays):
+            raise ValueError(f"expected {len(self._arrays)} row leaves, got {len(leaves)}")
+        for arr, leaf in zip(self._arrays, leaves):
+            host = np.asarray(leaf)
+            if host.shape != (idx.shape[0],) + arr.shape[1:]:
+                raise ValueError(
+                    f"row shape {host.shape} incompatible with store leaf {arr.shape}"
+                )
+            arr[idx] = host.astype(arr.dtype, copy=False)
+        self._touched[idx] = True
+
+    # -- checkpointing -------------------------------------------------------
+
+    def state(self) -> Dict[str, Any]:
+        """Checkpointable pytree view (shares buffers; do not mutate)."""
+        return {"leaves": list(self._arrays), "touched": self._touched}
+
+    def load(self, state: Dict[str, Any]) -> None:
+        leaves = list(state["leaves"])
+        if len(leaves) != len(self._arrays):
+            raise ValueError(f"expected {len(self._arrays)} store leaves, got {len(leaves)}")
+        for i, (arr, leaf) in enumerate(zip(self._arrays, leaves)):
+            host = np.asarray(leaf)
+            if host.shape != arr.shape:
+                raise ValueError(f"store leaf {i}: shape {host.shape} != {arr.shape}")
+            self._arrays[i] = host.astype(arr.dtype, copy=False)
+        self._touched = np.asarray(state["touched"], np.bool_).copy()

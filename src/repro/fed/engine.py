@@ -52,14 +52,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import aggregation
 from repro.core.hierarchy import as_hierarchy, plan_shard_placement
 from repro.core.hierfavg import (
     FedState,
+    build_cohort_super_round,
     build_sharded_super_round,
     build_super_round,
     map_stacked_fed_state,
 )
-from repro.data.pipeline import SuperBatchPrefetcher
+from repro.data.pipeline import CohortPrefetcher, SuperBatchPrefetcher
+from repro.fed.client_store import replace_sticky_rows, sticky_rows
 
 PyTree = Any
 
@@ -300,4 +303,162 @@ class SuperRoundEngine:
             prefetcher.stop()
         if self.mesh is not None:
             state = self._unshard_state(state)
+        return state, stopped
+
+
+class CohortEngine:
+    """Superround engine for sampled participation: only the cohort is
+    device-resident.
+
+    Per cloud interval the loop is: take the prefetched ``(ids, cohort,
+    block)`` triple (cohort arrays + batch block already uploading in the
+    worker — see ``CohortPrefetcher``), swap the cohort's sticky rows
+    (stacked opt_state leaves + EF residual) in from the host
+    ``ClientStateStore``, dispatch the donated cohort superround, and write
+    the rows back by original client id. Model params and anchors never
+    touch the store: control returns only at cloud boundaries, where every
+    stacked row equals the fresh broadcast.
+
+    Device footprint is ∝ cohort size C; the (N, …) population exists only
+    as host arrays (store + sampler + batcher cursors). With the identity
+    cohort (C == N) the trajectory reproduces ``SuperRoundEngine``'s —
+    that's the parity anchor the tests pin.
+
+    History/eval/checkpoint cadences are cloud-interval-granular like the
+    superround engine; the per-round fallback does not exist here (the
+    runner validates cadences up front). Checkpoints save the composite
+    ``{"fed": state, "store": store.state()}`` pytree plus the prefetcher's
+    paired batcher+sampler snapshots, so a resumed run replays the exact
+    same cohorts and batches.
+    """
+
+    def __init__(self, runner, *, donate: bool = True, prefetch: bool = True):
+        self.runner = runner
+        hier = runner.hier_config
+        self.k1 = hier.kappa1
+        self.k2 = hier.kappa2_effective
+        self.prefetch = prefetch
+        self.cohort_size = int(hier.participation.cohort_size)
+        self.spec = as_hierarchy(runner.topology)
+        fn = build_cohort_super_round(
+            runner.loss_fn,
+            runner.optimizer,
+            runner.topology,
+            hier,
+            cohort_size=self.cohort_size,
+            grad_accum=runner.grad_accum,
+        )
+        self._super = jax.jit(fn, donate_argnums=(0,) if donate else ())
+        # [(round_base, device metrics)] — {"loss","grad_norm","step"} (κ₂,)
+        self._pending: List[Tuple[int, dict]] = []
+
+    # ------------------------------------------------------------------
+    def _segments_table(self) -> np.ndarray:
+        """(depth-1, N) host table of per-client sub-top ancestor ids; the
+        prefetcher columns it per cohort."""
+        depth = self.spec.depth
+        if depth == 1:
+            return np.zeros((0, self.spec.num_clients), np.int32)
+        return np.stack([np.asarray(self.spec.segments(l), np.int32) for l in range(1, depth)])
+
+    def _load_cohort(self, state: FedState, ids: np.ndarray) -> FedState:
+        """Swap the sampled clients' sticky rows in from the host store."""
+        store = self.runner.client_store
+        if store.is_empty:
+            return state
+        rows = jax.device_put(store.gather(ids))
+        return replace_sticky_rows(state, rows, self.cohort_size)
+
+    def _writeback(self, state: FedState, ids: np.ndarray) -> None:
+        """Persist the cohort's post-interval sticky rows by original id.
+        The ``device_get`` doubles as this interval's sync point, so the
+        store is consistent with ``state`` at every checkpoint boundary."""
+        store = self.runner.client_store
+        if store.is_empty:
+            return
+        store.scatter(ids, jax.device_get(sticky_rows(state, self.cohort_size)))
+
+    def _flush(self, wire_per_step: float) -> None:
+        r = self.runner
+        for round_base, metrics in self._pending:
+            vals = jax.device_get(metrics)
+            for j in range(self.k2):
+                r._record_round(
+                    round_base + j,
+                    int(vals["step"][j]),
+                    float(vals["loss"][j]),
+                    float(vals["grad_norm"][j]),
+                    self.cohort_size,
+                    wire_per_step,
+                )
+        self._pending.clear()
+
+    # ------------------------------------------------------------------
+    def run_intervals(
+        self, state: FedState, *, start_round: int, num_intervals: int
+    ) -> Tuple[FedState, bool]:
+        """Run ``num_intervals`` cloud intervals from a cloud-aligned
+        ``start_round``. Returns (state, stopped_early)."""
+        r = self.runner
+        if start_round % self.k2:
+            raise ValueError(
+                f"cohort engine must start at a cloud boundary: "
+                f"start_round={start_round} is not a multiple of {self.k2}"
+            )
+        r._ensure_client_store(state)
+        wire_per_step = r._wire_bytes_per_step(state)
+        stopped = False
+        prefetcher = CohortPrefetcher(
+            r.batcher,
+            r._cohort_sampler(),
+            segments=self._segments_table(),
+            weights=np.asarray(r.weights, np.float32),
+            rounds_per_block=self.k2,
+            steps_per_round=self.k1,
+            num_blocks=num_intervals,
+            use_thread=self.prefetch,
+        )
+        try:
+            for q in range(num_intervals):
+                round_base = start_round + q * self.k2
+                (ids, cohort, block), snapshot = prefetcher.get()
+                state = self._load_cohort(state, ids)
+                state, metrics = self._super(state, block, cohort)
+                self._writeback(state, ids)
+                self._pending.append((round_base, metrics))
+
+                end_round = round_base + self.k2
+                do_eval = (
+                    r.eval_fn is not None
+                    and r.cfg.eval_every
+                    and end_round % r.cfg.eval_every == 0
+                )
+                do_ckpt = (
+                    r.checkpointer is not None
+                    and r.cfg.checkpoint_every
+                    and end_round % r.cfg.checkpoint_every == 0
+                )
+                if do_eval or do_ckpt:
+                    self._flush(wire_per_step)
+                acc = None
+                if do_eval:
+                    # cohort-weighted cloud model; with C == N this is
+                    # bit-identical to the runner's full-population eval
+                    cloud0 = aggregation.cloud_model(state.params, cohort["weights"])
+                    acc = float(r.eval_fn(cloud0))
+                    r.history[-1].accuracy = acc
+                if do_ckpt:
+                    meta = {
+                        "round": end_round,
+                        "batcher": snapshot["batcher"],
+                        "sampler": snapshot["sampler"],
+                    }
+                    save_state = {"fed": state, "store": r.client_store.state()}
+                    r.checkpointer.save(r.history[-1].step, save_state, meta)
+                if acc is not None and r.cfg.target_accuracy and acc >= r.cfg.target_accuracy:
+                    stopped = True
+                    break
+            self._flush(wire_per_step)
+        finally:
+            prefetcher.stop()
         return state, stopped

@@ -142,35 +142,89 @@ class FederatedRunner:
         # plan it once and share it between eligibility checks and the engine
         self._placement = None
         self._placement_error: Optional[str] = None
-        self._engine = None  # lazily built (and cached) SuperRoundEngine
-
-        round_fn = build_hier_round(
-            loss_fn, optimizer, topology, hier_config, self.weights, grad_accum=grad_accum
+        self._engine = None  # lazily built (and cached) SuperRoundEngine / CohortEngine
+        # sampled participation: the active ParticipationSpec (or None), the
+        # host-side ClientStateStore (built lazily from the first state seen,
+        # which fixes the sticky-row template), and the cached cohort sampler
+        self.participation = (
+            hier_config.participation if getattr(hier_config, "participation_active", False) else None
         )
-        if self.mesh is not None and state_shardings is not None:
-            self._round = jax.jit(round_fn, in_shardings=(state_shardings, None, None, None),
-                                  out_shardings=(state_shardings, None))
+        self.client_store = None
+        self._sampler = None
+
+        if self.participation is not None:
+            # the per-round lowering is never driven under sampled
+            # participation (no full-population state exists to feed it)
+            self._round = None
         else:
-            self._round = jax.jit(round_fn)
+            round_fn = build_hier_round(
+                loss_fn, optimizer, topology, hier_config, self.weights, grad_accum=grad_accum
+            )
+            if self.mesh is not None and state_shardings is not None:
+                self._round = jax.jit(round_fn, in_shardings=(state_shardings, None, None, None),
+                                      out_shardings=(state_shardings, None))
+            else:
+                self._round = jax.jit(round_fn)
         self.history: List[RoundRecord] = []
 
     # ------------------------------------------------------------------
     def init(self, rng: jax.Array, params: PyTree) -> FedState:
+        if self.participation is not None:
+            from repro.core.hierfavg import init_cohort_state
+
+            return init_cohort_state(
+                rng, params, self.optimizer, self.hier_config, self.participation.cohort_size
+            )
         return init_state(rng, params, self.optimizer, self.topology, self.hier_config)
 
     def restore_or_init(self, rng: jax.Array, params: PyTree) -> tuple:
         """(state, start_round). Resumes from the latest checkpoint if any."""
         state = self.init(rng, params)
-        if self.checkpointer is not None:
-            restored = self.checkpointer.restore_latest(state)
+        if self.checkpointer is None:
+            return state, 0
+        if self.participation is not None:
+            # cohort checkpoints are the composite {"fed", "store"} pytree,
+            # with batcher + cohort-sampler snapshots in the metadata
+            store = self._ensure_client_store(state)
+            restored = self.checkpointer.restore_latest({"fed": state, "store": store.state()})
             if restored is not None:
-                state, meta = restored
+                payload, meta = restored
+                store.load(payload["store"])
                 if "batcher" in meta:
                     self.batcher.load_state_dict(meta["batcher"])
-                if self.failures is not None and "failures" in meta:
-                    self.failures.load_state_dict(meta["failures"])
-                return state, int(meta.get("round", 0))
+                if "sampler" in meta:
+                    self._cohort_sampler().load_state_dict(meta["sampler"])
+                return payload["fed"], int(meta.get("round", 0))
+            return state, 0
+        restored = self.checkpointer.restore_latest(state)
+        if restored is not None:
+            state, meta = restored
+            if "batcher" in meta:
+                self.batcher.load_state_dict(meta["batcher"])
+            if self.failures is not None and "failures" in meta:
+                self.failures.load_state_dict(meta["failures"])
+            return state, int(meta.get("round", 0))
         return state, 0
+
+    # -- sampled-participation runtime (shared by engine and resume path) ----
+    def _cohort_sampler(self):
+        """The run's single cohort sampler (cached: its RNG stream IS the
+        cohort sequence, so everyone must share one instance)."""
+        if self._sampler is None:
+            self._sampler = self.participation.build_sampler(as_hierarchy(self.topology))
+        return self._sampler
+
+    def _ensure_client_store(self, state: FedState):
+        """Build (once) the host store from the cohort state's sticky-row
+        template — stacked opt_state leaves + EF residual rows."""
+        if self.client_store is None:
+            from repro.fed.client_store import ClientStateStore, sticky_rows
+
+            rows = sticky_rows(state, int(self.participation.cohort_size))
+            self.client_store = ClientStateStore.from_rows(
+                self.topology.num_clients, jax.device_get(rows)
+            )
+        return self.client_store
 
     # ------------------------------------------------------------------
     def _mask_for_round(self) -> Optional[np.ndarray]:
@@ -307,8 +361,58 @@ class FederatedRunner:
             self.hier_config, self.topology, num_shards, placement=self._placement
         )
 
+    def _cohort_reason(self, start_round: int) -> Optional[str]:
+        """None if the run can go cohort-sampled end-to-end, else why not.
+        There is no per-round fallback for sampled participation — the
+        full-population state the per-round loop needs never exists — so
+        every constraint is a hard error, not a silent downgrade."""
+        from repro.core.hierfavg import cohort_incompatibility
+
+        k2 = self.hier_config.kappa2_effective
+        reason = cohort_incompatibility(
+            self.hier_config, self.topology, self.participation.cohort_size
+        )
+        if reason is not None:
+            return reason
+        if self.cfg.engine == "per_round":
+            return "engine='per_round' has no cohort lowering"
+        if self.mesh is not None or self._state_shardings is not None:
+            return "mesh execution is not supported with sampled participation yet"
+        if self.failures is not None or self.stragglers is not None:
+            return "failure/straggler models need full-population survival masks"
+        if start_round % k2:
+            return f"start_round {start_round} is not a cloud boundary (kappa2_eff={k2})"
+        if (self.cfg.num_rounds - start_round) % k2:
+            return f"num_rounds {self.cfg.num_rounds} is not a whole number of cloud intervals"
+        for name, every in (
+            ("eval_every", self.cfg.eval_every),
+            ("checkpoint_every", self.cfg.checkpoint_every),
+        ):
+            if every and every % k2 != 0:
+                return f"{name}={every} is finer than a cloud interval (kappa2_eff={k2})"
+        return None
+
+    def _run_cohort(self, state: FedState, start_round: int) -> FedState:
+        reason = self._cohort_reason(start_round)
+        if reason is not None:
+            raise ValueError(f"sampled participation cannot run: {reason}")
+        k2 = self.hier_config.kappa2_effective
+        intervals = (self.cfg.num_rounds - start_round) // k2
+        if intervals <= 0:
+            return state
+        if self._engine is None:
+            from repro.fed.engine import CohortEngine
+
+            self._engine = CohortEngine(self)
+        state, _ = self._engine.run_intervals(
+            state, start_round=start_round, num_intervals=intervals
+        )
+        return state
+
     def run(self, state: FedState, *, start_round: int = 0) -> FedState:
         mode = self.cfg.engine  # validated by RunnerConfig.__post_init__
+        if self.participation is not None:
+            return self._run_cohort(state, start_round)
         k2 = self.hier_config.kappa2_effective
         if mode != "per_round":
             eligible = self._superround_eligible(start_round)

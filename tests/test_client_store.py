@@ -1,0 +1,146 @@
+"""ClientStateStore: gather/scatter round-trips, zero-init ≡ fresh optimizer
+state, sticky-row extraction/replacement on real FedStates, and checkpoint
+survival of the composite store pytree."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.core import HierFAVGConfig, init_cohort_state
+from repro.fed.client_store import ClientStateStore, replace_sticky_rows, sticky_rows
+from repro.optim import adam, momentum, sgd
+
+N, C = 20, 4
+
+
+def _template():
+    return {"mu": np.zeros((3, 2), np.float32), "nu": np.zeros((3,), np.float32)}
+
+
+def _rows(rng, count):
+    return {
+        "mu": rng.normal(size=(count, 3, 2)).astype(np.float32),
+        "nu": rng.normal(size=(count, 3)).astype(np.float32),
+    }
+
+
+def test_scatter_gather_roundtrip_bitexact(rng):
+    store = ClientStateStore(N, _template())
+    ids = np.array([2, 7, 11, 19])
+    rows = _rows(rng, C)
+    store.scatter(ids, rows)
+    got = store.gather(ids)
+    for key in ("mu", "nu"):
+        np.testing.assert_array_equal(got[key], rows[key])
+    assert store.num_touched == C
+
+
+def test_never_sampled_rows_are_zero(rng):
+    """Zero rows == optimizer.init output, so first-time participants need
+    no special casing on the gather path."""
+    store = ClientStateStore(N, _template())
+    store.scatter(np.array([0, 1, 2, 3]), _rows(rng, C))
+    fresh = store.gather(np.array([10, 15]))
+    for key in ("mu", "nu"):
+        np.testing.assert_array_equal(fresh[key], np.zeros_like(fresh[key]))
+    assert store.num_touched == C  # reads don't mark
+
+
+def test_scatter_overwrites(rng):
+    store = ClientStateStore(N, _template())
+    ids = np.array([1, 3, 5, 7])
+    store.scatter(ids, _rows(rng, C))
+    second = _rows(rng, C)
+    store.scatter(ids, second)
+    np.testing.assert_array_equal(store.gather(ids)["mu"], second["mu"])
+    assert store.num_touched == C
+
+
+def test_scatter_validates_shapes(rng):
+    store = ClientStateStore(N, _template())
+    with pytest.raises(ValueError, match="row leaves"):
+        store.scatter(np.array([0]), {"mu": np.zeros((1, 3, 2), np.float32)})
+    with pytest.raises(ValueError, match="incompatible"):
+        store.scatter(
+            np.array([0]),
+            {"mu": np.zeros((1, 3, 3), np.float32), "nu": np.zeros((1, 3), np.float32)},
+        )
+
+
+def test_from_rows_strips_cohort_axis(rng):
+    rows = _rows(rng, C)
+    store = ClientStateStore.from_rows(N, rows)
+    assert store.gather(np.arange(N))["mu"].shape == (N, 3, 2)
+    store.scatter(np.arange(C), rows)
+    np.testing.assert_array_equal(store.gather(np.arange(C))["nu"], rows["nu"])
+
+
+def test_empty_store_for_stateless_optimizer():
+    """Plain SGD keeps no per-client rows: the store is empty and the cohort
+    swap is a no-op (the engine skips gather/scatter entirely)."""
+    cfg = HierFAVGConfig(kappa1=2, kappa2=2)
+    state = init_cohort_state(jax.random.PRNGKey(0), {"w": jnp.zeros(3)}, sgd(0.1), cfg, C)
+    rows = sticky_rows(state, C)
+    assert rows["opt"] == [] and "res" not in rows
+    store = ClientStateStore.from_rows(N, jax.device_get(rows))
+    assert store.is_empty
+    assert store.gather(np.arange(C))["opt"] == []
+
+
+@pytest.mark.parametrize("opt_fn", [lambda: momentum(0.1, 0.9), lambda: adam(1e-3)])
+def test_sticky_rows_roundtrip_on_fed_state(opt_fn):
+    """sticky_rows ∘ replace_sticky_rows is the identity on the stacked
+    leaves, and leaves shared (scalar) opt leaves untouched."""
+    cfg = HierFAVGConfig(kappa1=2, kappa2=2)
+    state = init_cohort_state(
+        jax.random.PRNGKey(0), {"w": jnp.zeros((3, 2))}, opt_fn(), cfg, C
+    )
+    rows = sticky_rows(state, C)
+    assert rows["opt"], "stateful optimizer must expose stacked rows"
+    perturbed = {"opt": [x + 1.0 for x in rows["opt"]]}
+    swapped = replace_sticky_rows(state, perturbed, C)
+    back = sticky_rows(swapped, C)
+    for a, b in zip(back["opt"], perturbed["opt"]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(swapped.step) == int(state.step)  # shared leaves untouched
+
+
+def test_store_survives_checkpoint_roundtrip(rng, tmp_path):
+    """state()/load(): a store checkpointed through CheckpointManager comes
+    back bit-exact, touched mask included."""
+    store = ClientStateStore(N, _template())
+    ids = np.array([2, 5, 13, 17])
+    rows = _rows(rng, C)
+    store.scatter(ids, rows)
+    manager = CheckpointManager(str(tmp_path), keep=2)
+    manager.save(1, {"store": store.state()}, {"round": 2})
+
+    restored_store = ClientStateStore(N, _template())
+    payload, meta = manager.restore_latest({"store": restored_store.state()})
+    restored_store.load(payload["store"])
+    assert meta["round"] == 2
+    assert restored_store.num_touched == C
+    for key in ("mu", "nu"):
+        np.testing.assert_array_equal(restored_store.gather(ids)[key], rows[key])
+    np.testing.assert_array_equal(
+        restored_store.gather(np.array([0]))["mu"], np.zeros((1, 3, 2), np.float32)
+    )
+
+
+def test_load_validates_shapes():
+    store = ClientStateStore(N, _template())
+    bad = store.state()
+    with pytest.raises(ValueError, match="store leaves"):
+        store.load({"leaves": bad["leaves"][:1], "touched": bad["touched"]})
+    with pytest.raises(ValueError, match="shape"):
+        store.load(
+            {"leaves": [np.zeros((N + 1, 3, 2), np.float32), np.zeros((N, 3), np.float32)],
+             "touched": bad["touched"]}
+        )
+
+
+def test_nbytes_scales_with_population():
+    small = ClientStateStore(10, _template())
+    big = ClientStateStore(1000, _template())
+    assert big.nbytes > 90 * small.nbytes  # logical size ∝ N (physical is page-lazy)

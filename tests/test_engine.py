@@ -9,14 +9,22 @@ from repro.core import (
     FedTopology,
     HierFAVGConfig,
     aggregation,
+    build_cohort_super_round,
     build_hier_round,
     build_super_round,
+    init_cohort_state,
     init_state,
     super_round_schedule,
 )
-from repro.core.hierarchy import parse_fanouts
+from repro.core.hierarchy import as_hierarchy, parse_fanouts
 from repro.data import FederatedBatcher, SuperBatchPrefetcher, clustered_gaussians, make_partition
-from repro.fed import FailureSimulator, FederatedRunner, RunnerConfig, TransportSpec
+from repro.fed import (
+    FailureSimulator,
+    FederatedRunner,
+    ParticipationSpec,
+    RunnerConfig,
+    TransportSpec,
+)
 from repro.models import cnn
 from repro.optim import momentum, sgd
 
@@ -373,6 +381,250 @@ def test_cloud_model_matches_weighted_mean(rng):
     np.testing.assert_array_equal(
         np.asarray(aggregation.weighted_mean(x, w, dead)["w"][0]),
         np.asarray(aggregation.cloud_model(x, w, dead)["w"]),
+    )
+
+
+# ---------------------------------------------------------------------------
+# sampled participation: identity-cohort parity (C == N)
+# ---------------------------------------------------------------------------
+# The cohort lowering must be the *same algorithm* as the fused superround
+# when every client participates. Ragged trees exercise the segment-sum
+# aggregation path in both builders, so the comparison there is bit-exact;
+# uniform trees are the one place the graphs legitimately differ (the static
+# builder takes the contiguous-reshape shortcut, traced cohort ids cannot),
+# leaving ~1-ULP contraction differences — same situation as
+# `_assert_states_equal`'s documented ulp_tol cases.
+
+def _identity_cohort(spec, sizes):
+    """The cohort dict for 'everyone participates': per-level segment ids
+    columned from the full tree, weights in original client order."""
+    if spec.depth > 1:
+        table = np.stack(
+            [np.asarray(spec.segments(l), np.int32) for l in range(1, spec.depth)]
+        )
+    else:
+        table = np.zeros((0, spec.num_clients), np.int32)
+    return {
+        "segments": jnp.asarray(table),
+        "weights": jnp.asarray(sizes, jnp.float32),
+    }
+
+
+def _drive_cohort_vs_super(topo, cfg, sizes, loss_fn, batch, opt, *, intervals=2):
+    spec = as_hierarchy(topo)
+    n = spec.num_clients
+    k1, k2 = cfg.kappa1, cfg.kappa2_effective
+    w = jnp.asarray(sizes, jnp.float32)
+    s1 = init_state(jax.random.PRNGKey(0), {"w": jnp.zeros(DIM)}, opt, topo, cfg)
+    s2 = init_cohort_state(jax.random.PRNGKey(0), {"w": jnp.zeros(DIM)}, opt, cfg, n)
+    sup = jax.jit(build_super_round(loss_fn, opt, topo, cfg, w), donate_argnums=(0,))
+    coh = jax.jit(
+        build_cohort_super_round(loss_fn, opt, topo, cfg, cohort_size=n),
+        donate_argnums=(0,),
+    )
+    cohort = _identity_cohort(spec, sizes)
+    block = jax.tree_util.tree_map(
+        lambda x: jnp.stack([x] * (k2 * k1)).reshape((k2, k1) + x.shape), batch
+    )
+    m1, m2 = [], []
+    for _ in range(intervals):
+        s1, mt1 = sup(s1, block, None)
+        s2, mt2 = coh(s2, block, cohort)
+        m1.append(jax.device_get(mt1))
+        m2.append(jax.device_get(mt2))
+    return s1, s2, m1, m2
+
+
+@pytest.mark.parametrize(
+    "opt_name,cfg_kw",
+    [
+        ("sgd", {}),
+        ("momentum", {"sync_opt_state": True}),
+        ("sgd", {"transport": TransportSpec.parse("int8_ef:64/int8_ef:64")}),
+    ],
+    ids=["sgd", "momentum_sync_opt", "int8_ef_both"],
+)
+def test_cohort_identity_bitexact_ragged(rng, opt_name, cfg_kw):
+    """Identity cohort == fused superround, bit for bit, on a ragged tree —
+    including synced momentum traces and EF residual/anchor carry."""
+    spec = parse_fanouts("1,2,3/3")
+    sizes, loss_fn, batch = _quad(rng, spec.num_clients)
+    cfg = HierFAVGConfig(kappa1=2, kappa2=3, **cfg_kw)
+    opt = momentum(0.1, 0.9) if opt_name == "momentum" else sgd(0.1)
+    s1, s2, m1, m2 = _drive_cohort_vs_super(spec, cfg, sizes, loss_fn, batch, opt)
+    _assert_states_equal(s1, s2)
+    _assert_trees_equal(s1.rng, s2.rng, "rng")
+    for a, b in zip(m1, m2):
+        np.testing.assert_array_equal(a["loss"], b["loss"])
+        np.testing.assert_array_equal(a["grad_norm"], b["grad_norm"])
+        np.testing.assert_array_equal(a["step"], b["step"])
+
+
+def test_cohort_identity_uniform_ulp(rng):
+    """Uniform trees: the static builder's contiguous-reshape mean vs the
+    cohort's segment-sum over traced ids — op-for-op the same reduction, so
+    agreement is at the documented ~1-ULP codegen tolerance."""
+    sizes, loss_fn, batch = _quad(rng, 6)
+    topo = FedTopology(num_edges=2, clients_per_edge=3)
+    cfg = HierFAVGConfig(kappa1=2, kappa2=2)
+    s1, s2, m1, m2 = _drive_cohort_vs_super(topo, cfg, sizes, loss_fn, batch, sgd(0.1))
+    _assert_states_equal(s1, s2, ulp_tol=True)
+    for a, b in zip(m1, m2):
+        np.testing.assert_allclose(a["loss"], b["loss"], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# sampled participation: runner-level parity and the cohort engine
+# ---------------------------------------------------------------------------
+
+def _ragged_batcher(n, seed=0, batch=4):
+    rng = np.random.default_rng(seed)
+    data = clustered_gaussians(
+        rng, num_samples=40 * n, num_classes=10, dim=(8,), class_sep=3.0
+    )
+    parts = [np.arange(i, 40 * n, n) for i in range(n)]  # round-robin shards
+    batcher = FederatedBatcher(
+        {"inputs": data.x, "targets": data.y}, parts, batch_size=batch, seed=seed
+    )
+    return batcher, data
+
+
+def _ragged_runner(engine, *, participation=None, opt=None, num_rounds=8,
+                   eval_every=4, checkpoint_every=0, seed=0, checkpointer=None,
+                   **cfg_kw):
+    """A runner on the ragged 5,4,3/3 tree (N=12); `participation` routes it
+    through the cohort engine."""
+    topo = parse_fanouts("5,4,3/3")
+    batcher, data = _ragged_batcher(topo.num_clients, seed)
+
+    def apply_fn(p, x):
+        return jax.nn.relu(x @ p["w1"]) @ p["w2"]
+
+    def eval_fn(p):
+        return float(cnn.accuracy(apply_fn(p, jnp.asarray(data.x)), jnp.asarray(data.y)))
+
+    runner = FederatedRunner(
+        loss_fn=cnn.make_cnn_loss_fn(apply_fn),
+        optimizer=opt or sgd(0.1),
+        topology=topo,
+        hier_config=HierFAVGConfig(
+            kappa1=2, kappa2=2, participation=participation, **cfg_kw
+        ),
+        data_sizes=batcher.data_sizes,
+        batcher=batcher,
+        runner_config=RunnerConfig(
+            num_rounds=num_rounds, eval_every=eval_every,
+            checkpoint_every=checkpoint_every, engine=engine,
+        ),
+        eval_fn=eval_fn if eval_every else None,
+        checkpointer=checkpointer,
+    )
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    params = {
+        "w1": jax.random.normal(k1, (8, 16)) * 0.3,
+        "w2": jax.random.normal(k2, (16, 10)) * 0.3,
+    }
+    state = runner.init(jax.random.PRNGKey(seed), params)
+    return runner, state
+
+
+@pytest.mark.parametrize(
+    "opt_name,cfg_kw",
+    [
+        ("sgd", {"sync_opt_state": True}),
+        ("momentum", {}),
+        ("sgd", {"transport": TransportSpec.parse("int8_ef:64/int8_ef:64")}),
+    ],
+    ids=["sgd_sync_opt", "momentum", "int8_ef_both"],
+)
+def test_cohort_runner_parity_full_population(opt_name, cfg_kw):
+    """With C == N (round_robin: every cohort is the whole population, in
+    order) the cohort engine — store swap, prefetched cohort arrays, cohort
+    eval reduction included — reproduces the superround runner's history and
+    final state bit-exactly on the ragged tree."""
+    def build(engine, part):
+        opt = momentum(0.1, 0.9) if opt_name == "momentum" else sgd(0.1)
+        return _ragged_runner(engine, participation=part, opt=opt, **cfg_kw)
+
+    base, bstate = build("superround", None)
+    bstate = base.run(bstate)
+    part = ParticipationSpec(cohort_size=12, sampler="round_robin")
+    coh, cstate = build("auto", part)
+    cstate = coh.run(cstate)
+
+    rec_b, rec_c = base.records_to_dict(), coh.records_to_dict()
+    gn_b, gn_c = rec_b.pop("grad_norm"), rec_c.pop("grad_norm")
+    np.testing.assert_allclose(gn_b, gn_c, rtol=1e-6)  # diagnostic: ULP drift ok
+    assert rec_b == rec_c
+    _assert_states_equal(bstate, cstate)
+    _assert_trees_equal(bstate.rng, cstate.rng, "rng")
+    # momentum/EF leave sticky rows behind; the store must have seen them all
+    if not coh.client_store.is_empty:
+        assert coh.client_store.num_touched == 12
+
+
+def test_cohort_runner_rejects_incompatible_setups():
+    part = ParticipationSpec(cohort_size=6, sampler="uniform")
+    runner, state = _ragged_runner("per_round", participation=part)
+    with pytest.raises(ValueError, match="per_round"):
+        runner.run(state)
+    runner, state = _ragged_runner("auto", participation=part, eval_every=3)
+    with pytest.raises(ValueError, match="eval_every"):
+        runner.run(state)
+
+
+def test_cohort_config_rejects_async_cloud_and_aggregators():
+    part = ParticipationSpec(cohort_size=4)
+    with pytest.raises(ValueError, match="async"):
+        HierFAVGConfig(kappa1=2, kappa2=2, participation=part, async_cloud=True)
+
+
+def test_cohort_resume_parity(tmp_path):
+    """Interrupted + resumed == straight run, bit for bit. The checkpoint
+    carries paired sampler+batcher snapshots (the sampler RNG state IS the
+    cohort sequence) and the full store, so the resumed run replays the
+    exact same cohorts, batches, and sticky rows."""
+    from repro.checkpoint import CheckpointManager
+
+    part = ParticipationSpec(cohort_size=6, sampler="uniform", seed=1)
+
+    def build(ckdir, num_rounds):
+        return _ragged_runner(
+            "auto", participation=part, opt=momentum(0.1, 0.9),
+            num_rounds=num_rounds, eval_every=4, checkpoint_every=4,
+            checkpointer=CheckpointManager(str(ckdir), keep=4),
+        )
+
+    ra, sa = build(tmp_path / "straight", 8)
+    sa = ra.run(sa)
+
+    rb, sb = build(tmp_path / "resumed", 4)
+    rb.run(sb)  # stops (and checkpoints) at round 4
+
+    rc, _ = build(tmp_path / "resumed", 8)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    params = {
+        "w1": jax.random.normal(k1, (8, 16)) * 0.3,
+        "w2": jax.random.normal(k2, (16, 10)) * 0.3,
+    }
+    sc, start = rc.restore_or_init(jax.random.PRNGKey(0), params)
+    assert start == 4
+    sc = rc.run(sc, start_round=start)
+
+    _assert_states_equal(sa, sc)
+    _assert_trees_equal(sa.rng, sc.rng, "rng")
+    # host store contents (momentum traces by original client id) match
+    st_a, st_c = ra.client_store.state(), rc.client_store.state()
+    _assert_trees_equal(st_a["leaves"], st_c["leaves"], "store leaves")
+    np.testing.assert_array_equal(st_a["touched"], st_c["touched"])
+    # the resumed history is the straight run's tail
+    tail = ra.history[4:]
+    assert len(rc.history) == len(tail)
+    for x, y in zip(tail, rc.history):
+        assert (x.round, x.step, x.loss, x.accuracy) == (y.round, y.step, y.loss, y.accuracy)
+    # and both samplers continue on the identical cohort stream
+    np.testing.assert_array_equal(
+        ra._cohort_sampler().sample(), rc._cohort_sampler().sample()
     )
 
 
