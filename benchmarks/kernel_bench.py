@@ -97,6 +97,30 @@ def main(csv=True):
         f"payload_bytes_ratio={f32_bytes/int8_bytes:.2f}x_smaller,hbm_passes=1_vs_3"
     )
 
+    # fused edge-interval megakernel: kappa1 SGD steps + edge mean in one
+    # pass, E=4 edges x 8 clients, P=8192 (64x128), b=2. ULP tolerance vs
+    # the jnp oracle (shared step body; contraction lowering differs inside
+    # the Pallas interpreter — documented in kernels/ref.py)
+    ne, cpe, k1, b, feat, outd = 4, 8, 4, 2, 64, 128
+    n = ne * cpe
+    mp = jnp.asarray(rng.normal(size=(n, feat * outd)) * 0.05, jnp.float32)
+    mx = jnp.asarray(rng.normal(size=(n, k1, b, feat)), jnp.float32)
+    my = jnp.asarray(rng.normal(size=(n, k1, b, outd)), jnp.float32)
+    mw = jnp.asarray(rng.uniform(1, 2, size=(n,)), jnp.float32)
+    t_ref, (p_ref, l_ref, _) = timed(
+        lambda: ref.edge_interval_ref(mp, mx, my, mw, ne, feat=feat, lr=0.05), iters=3
+    )
+    p_k, l_k, _ = ops.edge_interval(mp, mx, my, mw, num_edges=ne, feat=feat, lr=0.05)
+    ok = checks["edge_interval_megakernel"] = bool(
+        np.allclose(np.asarray(p_k), np.asarray(p_ref), rtol=3e-6, atol=5e-7)
+        and np.allclose(np.asarray(l_k), np.asarray(l_ref), rtol=3e-6, atol=5e-7)
+    )
+    # traffic: params+momentum cross HBM once per interval vs once per step
+    print(
+        f"kernel_edge_interval,ref_us={t_ref*1e6:.0f},allclose={ok},"
+        f"hbm_param_passes=2_vs_{2 * k1}"
+    )
+
     bad = sorted(k for k, v in checks.items() if not v)
     if bad:
         # a kernel drifting off its oracle must fail the build (CI smoke step)

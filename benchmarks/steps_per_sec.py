@@ -80,16 +80,32 @@ SHAPES = {
     "N16_k2x2": (16, 4, (2, 2), 1),
     "N64_k4x4": (64, 8, (4, 4), 1),
     "N64_k8x2": (64, 8, (8, 2), 1),
+    "N64_k4x4_b2": (64, 8, (4, 4), 2),  # middle of the b in {1,2,8} sweep
     "N64_k4x4_b8": (64, 8, (4, 4), 8),  # compute-bound contrast point
 }
-# the --devices sweep: N64 shapes, batch 1 (dispatch-bound) and batch 8
-# (compute-bound, where per-device parallelism has actual work to split)
-SHARDED_SHAPES = ("N64_k4x4", "N64_k4x4_b8")
+# the --devices sweep: N64 shapes, a batch sweep b in {1,2,8} from
+# dispatch-bound to compute-bound (where per-device parallelism has actual
+# work to split)
+SHARDED_SHAPES = ("N64_k4x4", "N64_k4x4_b2", "N64_k4x4_b8")
 SHARDED_SMOKE_SHAPE = "N64_k4x4_b8"
 # the multi-device CI gate is a catastrophic-regression floor, not a
 # scaling promise: simulated CPU devices split one host's cores, so the
 # parallel win tracks the core count, not the device count
 SHARDED_SMOKE_FLOOR = 0.5
+# batch-1 floor: dispatch-bound sharding historically regressed to 0.82x of
+# one device; the RNG-hoisted scan must keep it from sliding further (floor
+# is lenient because alternating-chunk medians still move ~30% rep-to-rep
+# on shared CI hosts)
+SHARDED_B1_SHAPE = "N64_k4x4"
+SHARDED_B1_FLOOR = 0.7
+
+# the megakernel contrast point: per-client state past cache (P=307210 MLP,
+# 64 -> 4096 -> 10), batch 1 — the regime the client-blocked edge-interval
+# lowering targets (params block-resident across all kappa1 steps instead of
+# the step-major full-stack sweep)
+MEGAKERNEL_SHAPE = "mlp307k_N32_k8x2"
+MEGAKERNEL_GEOM = (32, 4, (8, 2), 1)  # clients, edges, kappas, batch
+MLP_HIDDEN = 4096
 
 
 def _patches(x, k=3):
@@ -119,7 +135,24 @@ def bench_cnn_apply(p, x):
     return x @ p["fw"] + p["fb"]
 
 
-def _make_runner(engine, num_clients, num_edges, kappas, batch, seed=0, mesh=None):
+def bench_mlp_init(rng):
+    k = jax.random.split(rng, 2)
+    d = DIM[0] * DIM[1] * DIM[2]
+    return {
+        "w1": jax.random.normal(k[0], (d, MLP_HIDDEN)) / np.sqrt(d),
+        "b1": jnp.zeros((MLP_HIDDEN,)),
+        "w2": jax.random.normal(k[1], (MLP_HIDDEN, 10)) * 0.02,
+        "b2": jnp.zeros((10,)),
+    }
+
+
+def bench_mlp_apply(p, x):
+    x = x.reshape((x.shape[0], -1))
+    x = jax.nn.relu(x @ p["w1"] + p["b1"])
+    return x @ p["w2"] + p["b2"]
+
+
+def _make_runner(engine, num_clients, num_edges, kappas, batch, seed=0, mesh=None, model="cnn"):
     rng = np.random.default_rng(seed)
     data = clustered_gaussians(
         rng, num_samples=num_clients * 40, num_classes=10, dim=DIM, class_sep=2.0
@@ -128,8 +161,9 @@ def _make_runner(engine, num_clients, num_edges, kappas, batch, seed=0, mesh=Non
     batcher = FederatedBatcher(
         {"inputs": data.x, "targets": data.y}, parts, batch_size=batch, seed=seed
     )
+    apply_fn = bench_mlp_apply if model == "mlp" else bench_cnn_apply
     runner = FederatedRunner(
-        loss_fn=cnn.make_cnn_loss_fn(bench_cnn_apply),
+        loss_fn=cnn.make_cnn_loss_fn(apply_fn),
         optimizer=sgd(0.1),
         topology=FedTopology(num_edges=num_edges, clients_per_edge=num_clients // num_edges),
         hier_config=HierFAVGConfig(kappa1=kappas[0], kappa2=kappas[1]),
@@ -138,7 +172,8 @@ def _make_runner(engine, num_clients, num_edges, kappas, batch, seed=0, mesh=Non
         runner_config=RunnerConfig(num_rounds=0, engine=engine),
         mesh=mesh,
     )
-    state = runner.init(jax.random.PRNGKey(seed), bench_cnn_init(jax.random.PRNGKey(seed + 1)))
+    init_fn = bench_mlp_init if model == "mlp" else bench_cnn_init
+    state = runner.init(jax.random.PRNGKey(seed), init_fn(jax.random.PRNGKey(seed + 1)))
     return runner, state
 
 
@@ -192,6 +227,50 @@ def run_shape(name, *, reps=5, intervals=20, warmup_intervals=2, devices=0):
         out["sharded_speedup_vs_superround"] = round(
             out["sharded"]["local_steps_per_s"] / out["superround"]["local_steps_per_s"], 3
         )
+    return out
+
+
+def run_megakernel_shape(*, reps=5, intervals=8, warmup_intervals=1):
+    """Time the fused edge-interval megakernel engine against the scan-fused
+    superround at the megakernel's design shape (large per-client state,
+    batch 1). Same executable/alternation protocol as ``run_shape``."""
+    num_clients, num_edges, kappas, batch = MEGAKERNEL_GEOM
+    k1, k2 = kappas
+    chunk = intervals * k2
+
+    modes = ["superround", "megakernel"]
+    drivers = {}
+    for mode in modes:
+        runner, state = _make_runner(mode, num_clients, num_edges, kappas, batch, model="mlp")
+        _, state = _timed_chunk(runner, state, 0, warmup_intervals * k2)
+        if mode == "megakernel" and not runner._engine.uses_megakernel:
+            raise SystemExit(
+                f"megakernel engine fell back at the bench shape: "
+                f"{runner._engine.megakernel_reason}"
+            )
+        drivers[mode] = {"runner": runner, "state": state, "done": warmup_intervals * k2, "times": []}
+
+    for rep in range(reps):
+        shift = rep % len(modes)
+        order = modes[shift:] + modes[:shift]
+        for mode in order:
+            d = drivers[mode]
+            dt, d["state"] = _timed_chunk(d["runner"], d["state"], d["done"], chunk)
+            d["done"] += chunk
+            d["times"].append(dt)
+
+    out = {"num_clients": num_clients, "kappas": list(kappas), "batch": batch,
+           "model": f"mlp_h{MLP_HIDDEN}", "params_per_client": 307210}
+    for mode in modes:
+        med = float(np.median(drivers[mode]["times"]))
+        out[mode] = {
+            "ms_per_round": round(med / chunk * 1000, 4),
+            "local_steps_per_s": round(chunk * k1 / med, 2),
+            "client_steps_per_s": round(chunk * k1 * num_clients / med, 1),
+        }
+    out["megakernel_speedup_vs_superround"] = round(
+        out["megakernel"]["local_steps_per_s"] / out["superround"]["local_steps_per_s"], 3
+    )
     return out
 
 
@@ -300,9 +379,22 @@ def main(argv=None):
             f"superround={s['superround']['local_steps_per_s']},speedup={s['speedup']}"
         )
 
+    megakernel = None
+    if names and not args.smoke:  # full sweep only: the megakernel design shape
+        megakernel = {MEGAKERNEL_SHAPE: run_megakernel_shape(reps=reps)}
+        row = megakernel[MEGAKERNEL_SHAPE]
+        print(
+            f"steps_per_sec_megakernel_{MEGAKERNEL_SHAPE},"
+            f"superround={row['superround']['local_steps_per_s']},"
+            f"megakernel={row['megakernel']['local_steps_per_s']},"
+            f"speedup={row['megakernel_speedup_vs_superround']}"
+        )
+
     sharded = None
     if args.devices > 1:
-        snames = (SHARDED_SMOKE_SHAPE,) if args.smoke else SHARDED_SHAPES
+        # the smoke gate times both floors: the b8 scaling shape and the
+        # dispatch-bound b1 shape (the historical 0.82x regression)
+        snames = (SHARDED_SMOKE_SHAPE, SHARDED_B1_SHAPE) if args.smoke else SHARDED_SHAPES
         sharded = {"devices": args.devices, "shapes": {}}
         for name in snames:
             row = run_shape(name, reps=reps, intervals=intervals,
@@ -340,6 +432,7 @@ def main(argv=None):
         "shapes": shapes,
         "env": {"backend": jax.default_backend(), "cpu_count": os.cpu_count(),
                 "devices": len(jax.devices()), "jax": jax.__version__,
+                "xla_flags": os.environ.get("XLA_FLAGS", ""),
                 "smoke": bool(args.smoke)},
     }
     head = shapes.get(HEADLINE)
@@ -350,6 +443,8 @@ def main(argv=None):
             "per_round_local_steps_per_s": head["per_round"]["local_steps_per_s"],
             "superround_local_steps_per_s": head["superround"]["local_steps_per_s"],
         }
+    if megakernel is not None:
+        results["megakernel"] = megakernel
     if sharded is not None:
         results["sharded"] = sharded
     if population is not None:
@@ -393,6 +488,15 @@ def main(argv=None):
                 f"({sharded['headline']['shape']}: {gate} < {SHARDED_SMOKE_FLOOR} "
                 f"of the single-device engine)"
             )
+        b1_row = sharded["shapes"].get(SHARDED_B1_SHAPE)
+        if b1_row is not None:
+            b1 = b1_row["sharded_speedup_vs_superround"]
+            if b1 < SHARDED_B1_FLOOR:
+                raise SystemExit(
+                    f"batch-1 sharded throughput slid below the floor "
+                    f"({SHARDED_B1_SHAPE}: {b1} < {SHARDED_B1_FLOOR} of the "
+                    f"single-device engine)"
+                )
     return results
 
 

@@ -75,6 +75,46 @@ Topology = Union[FedTopology, HierarchySpec]
 
 
 @dataclasses.dataclass(frozen=True)
+class PrecisionSpec:
+    """Mixed-precision policy for the stacked client state.
+
+    ``param_dtype`` is the storage dtype of the stacked per-client params
+    and their stacked optimizer leaves — the N-times-replicated memory that
+    dominates device footprint (``"bfloat16"`` halves it). Local-step
+    compute runs in the same dtype (batch floating leaves are cast on the
+    way into the loss), while every aggregation keeps accumulating in
+    float32 (``core.aggregation`` upcasts, reduces, casts back), so the
+    per-group / cloud means act as transient fp32 master values re-cast to
+    the storage dtype only at the broadcast boundary. Diagnostics (loss /
+    grad-norm metrics) are always reduced in float32.
+
+    ``remat`` wraps each per-client loss in ``jax.checkpoint`` so the
+    backward pass recomputes activations instead of storing them — the
+    knob that trades local-step FLOPs for activation memory when κ₁ steps
+    are fused into one executable.
+    """
+
+    param_dtype: str = "float32"
+    remat: bool = False
+
+    def __post_init__(self):
+        dt = jnp.dtype(self.param_dtype)  # raises on unknown names
+        if not jnp.issubdtype(dt, jnp.floating):
+            raise ValueError(f"param_dtype must be floating, got {self.param_dtype!r}")
+        object.__setattr__(self, "param_dtype", dt.name)
+
+    @property
+    def dtype(self) -> jnp.dtype:
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def is_active(self) -> bool:
+        """False for the pure-fp32, no-remat default — every builder then
+        takes the exact legacy graph, bitwise unchanged."""
+        return self.remat or self.dtype != jnp.dtype(jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
 class HierFAVGConfig:
     """Aggregation schedule. kappa1: local steps per edge agg; kappa2: edge
     aggs per cloud agg (paper's κ₁, κ₂). For deeper trees, ``kappas`` holds
@@ -90,8 +130,13 @@ class HierFAVGConfig:
     transport: Optional[Any] = None  # fed.transport.TransportSpec: one LinkCodec per level
     aggregators: Optional[Any] = None  # core.aggregation.AggregatorSpec: one per level
     participation: Optional[Any] = None  # fed.participation.ParticipationSpec: sampled cohorts
+    precision: Optional[PrecisionSpec] = None  # mixed-precision policy (None == pure fp32)
 
     def __post_init__(self):
+        if self.precision is not None and not isinstance(self.precision, PrecisionSpec):
+            raise TypeError(
+                f"precision must be a PrecisionSpec, got {type(self.precision).__name__}"
+            )
         if self.aggregators is not None:
             if not hasattr(self.aggregators, "aggregator") or not hasattr(
                 self.aggregators, "is_trivial"
@@ -227,6 +272,12 @@ class HierFAVGConfig:
         every engine keeps its full-population behaviour)."""
         return self.participation is not None and self.participation.is_active
 
+    @property
+    def precision_active(self) -> bool:
+        """True iff the precision policy changes anything (a pure-fp32,
+        no-remat PrecisionSpec keeps the exact legacy graphs)."""
+        return self.precision is not None and self.precision.is_active
+
 
 class FedState(NamedTuple):
     step: jnp.ndarray  # local update counter k
@@ -254,6 +305,13 @@ def init_state(
     already_stacked: bool = False,
 ) -> FedState:
     stacked = params if already_stacked else replicate_for_clients(params, topology.num_clients)
+    if config.precision_active:
+        # stacked client state is stored (and stepped) in the policy dtype;
+        # every aggregation still accumulates in fp32 (core.aggregation)
+        dt = config.precision.dtype
+        stacked = jax.tree_util.tree_map(
+            lambda p: p.astype(dt) if jnp.issubdtype(p.dtype, jnp.floating) else p, stacked
+        )
     opt_state = optimizer.init(stacked)
     if config.async_cloud:
         # stale cross-edge correction tree; first boundary applies zero
@@ -280,6 +338,28 @@ def init_state(
 # ---------------------------------------------------------------------------
 # Phase builders
 # ---------------------------------------------------------------------------
+
+def _apply_precision(loss_fn: LossFn, precision: Optional[PrecisionSpec]) -> LossFn:
+    """Wrap a per-client loss with the ``PrecisionSpec`` policy: optional
+    ``jax.checkpoint`` (remat) and casting the batch's floating leaves to
+    the compute/storage dtype so the forward/backward genuinely run in it.
+    The inert policy (or None) returns ``loss_fn`` unchanged — identical
+    graph, identical numerics."""
+    if precision is None or not precision.is_active:
+        return loss_fn
+    inner = jax.checkpoint(loss_fn) if precision.remat else loss_fn
+    dt = precision.dtype
+    if dt == jnp.dtype(jnp.float32):
+        return inner
+
+    def cast_loss(params, batch, rng):
+        batch = jax.tree_util.tree_map(
+            lambda x: x.astype(dt) if jnp.issubdtype(x.dtype, jnp.floating) else x, batch
+        )
+        return inner(params, batch, rng)
+
+    return cast_loss
+
 
 def _build_microbatch_grads(loss_fn: LossFn, grad_accum: int):
     """(params, batch, rngs) -> (summed grads, per-client losses) with the
@@ -319,15 +399,18 @@ def build_local_step(
     optimizer: GradientTransformation,
     *,
     grad_accum: int = 1,
+    precision: Optional[PrecisionSpec] = None,
 ):
     """One local SGD update for all clients (Algorithm 1 l.5).
 
     batch leaves:
         grad_accum == 1 : (N, b, ...)
         grad_accum  > 1 : (grad_accum, N, b, ...)   (scanned microbatches)
+    ``precision`` applies the mixed-precision policy (batch cast + remat);
+    the loss/grad-norm metrics are reduced in fp32 regardless.
     Returns (state, metrics).
     """
-    microbatch_grads = _build_microbatch_grads(loss_fn, grad_accum)
+    microbatch_grads = _build_microbatch_grads(_apply_precision(loss_fn, precision), grad_accum)
 
     def local_step(state: FedState, batch: PyTree) -> Tuple[FedState, dict]:
         rng, step_rng = jax.random.split(state.rng)
@@ -339,7 +422,7 @@ def build_local_step(
         gnorm = jnp.sqrt(
             sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree_util.tree_leaves(grads))
         )
-        metrics = {"loss": jnp.mean(losses), "grad_norm": gnorm}
+        metrics = {"loss": jnp.mean(losses.astype(jnp.float32)), "grad_norm": gnorm}
         return (
             FedState(
                 step=state.step + 1, params=params, opt_state=opt_state, rng=rng,
@@ -772,7 +855,7 @@ def build_train_step(
     """
     spec = as_hierarchy(topology)
     depth = _check_levels(spec, config)
-    local_step = build_local_step(loss_fn, optimizer, grad_accum=grad_accum)
+    local_step = build_local_step(loss_fn, optimizer, grad_accum=grad_accum, precision=config.precision)
     level_syncs = [build_level_sync(spec, config, weights, l) for l in range(1, depth + 1)]
 
     def train_step(state: FedState, batch: PyTree, mask: Optional[jnp.ndarray] = None):
@@ -827,7 +910,7 @@ def build_hier_round_async(
         raise ValueError(
             f"build_hier_round_async supports two-level hierarchies only, got depth {spec.depth}"
         )
-    local_step = build_local_step(loss_fn, optimizer, grad_accum=grad_accum)
+    local_step = build_local_step(loss_fn, optimizer, grad_accum=grad_accum, precision=config.precision)
     edge = lambda t, m: aggregation.hierarchical_segment_mean(t, weights, spec, 1, m)
     cloud = lambda t, m: aggregation.hierarchical_segment_mean(t, weights, spec, None, m)
 
@@ -886,7 +969,7 @@ def build_hier_round(
     """
     spec = as_hierarchy(topology)
     depth = _check_levels(spec, config)
-    local_step = build_local_step(loss_fn, optimizer, grad_accum=grad_accum)
+    local_step = build_local_step(loss_fn, optimizer, grad_accum=grad_accum, precision=config.precision)
     level_syncs = [build_level_sync(spec, config, weights, l) for l in range(1, depth + 1)]
     kv = config.kappa_vector
     # rounds between level-ℓ aggregations: prod(κ₂..κ_ℓ)  (level 1 = every round)
@@ -959,7 +1042,7 @@ def build_super_round(
     """
     spec = as_hierarchy(topology)
     depth = _check_levels(spec, config)
-    local_step = build_local_step(loss_fn, optimizer, grad_accum=grad_accum)
+    local_step = build_local_step(loss_fn, optimizer, grad_accum=grad_accum, precision=config.precision)
     level_syncs = [build_level_sync(spec, config, weights, l) for l in range(1, depth + 1)]
     deepest_per_round = jnp.asarray(super_round_schedule(config), jnp.int32)
 
@@ -989,6 +1072,240 @@ def build_super_round(
         if masks is not None:
             xs = xs + (masks,)
         return jax.lax.scan(round_body, state, xs)
+
+    return super_round
+
+
+# ---------------------------------------------------------------------------
+# Client-blocked megakernel lowering
+# ---------------------------------------------------------------------------
+
+def megakernel_incompatibility(
+    config: HierFAVGConfig, topology: Topology, *, grad_accum: int = 1
+) -> Optional[str]:
+    """Why this schedule cannot run through the client-blocked megakernel
+    lowering (``build_megakernel_super_round``) — None when it can.
+
+    Mirrors ``sharding_incompatibility``: the single predicate both the
+    builder (raises) and the runner's engine dispatch (reports, then falls
+    back to the scan-fused superround) consult. The megakernel restricts to
+    the paper topology (two uniform levels) and the plain weighted-mean
+    protocol: everything it fuses must be expressible as per-client-block
+    local steps plus a trailing segment mean.
+    """
+    spec = as_hierarchy(topology)
+    if not spec.is_paper_topology:
+        return (
+            f"the megakernel lowering is two-level uniform "
+            f"(clients/edges/cloud) only, got {spec.describe()}"
+        )
+    if config.async_cloud:
+        return "async_cloud's stale-correction algebra is not block-separable"
+    if config.delta_cloud:
+        return "delta_cloud's anchor bookkeeping keeps the scan-fused path"
+    if config.transport_active:
+        return "compressed transports (codec round-trips, EF residuals) keep the scan-fused path"
+    if config.aggregators_active:
+        return "non-default aggregators need the full client axis at each sync"
+    if config.participation_active:
+        return "sampled participation runs through the cohort engine"
+    if config.sync_opt_state:
+        return "optimizer-state averaging keeps the scan-fused path"
+    if grad_accum != 1:
+        return "microbatch accumulation keeps the scan-fused path"
+    return None
+
+
+def _rng_step_table(rng: jax.Array, steps: int, num_clients: int):
+    """Precompute the per-step per-client key table the sequential
+    ``build_local_step`` chain would derive: step t does
+    ``rng, step_rng = split(rng); split(step_rng, N)``. A scan of splits
+    followed by one vmapped N-way split reproduces the exact same keys
+    (bit-exact), returning (final rng, (steps, N, 2) table)."""
+
+    def body(c, _):
+        c, s = jax.random.split(c)
+        return c, s
+
+    rng, step_keys = jax.lax.scan(body, rng, None, length=steps)
+    table = jax.vmap(lambda k: jax.random.split(k, num_clients))(step_keys)
+    return rng, table
+
+
+def _megakernel_block_clients(clients_per_edge: int, bytes_per_client: int) -> int:
+    """Client-block size: the largest divisor of ``clients_per_edge`` whose
+    block of param+opt rows fits the residency budget (a few MB — VMEM-scale
+    on TPU, LLC-scale on CPU). Blocks never straddle an edge, so the
+    trailing segment mean stays a per-edge reshape."""
+    budget = 4 << 20
+    best = 1
+    for b in range(1, clients_per_edge + 1):
+        if clients_per_edge % b == 0 and b * bytes_per_client <= budget:
+            best = b
+    return best
+
+
+def build_megakernel_super_round(
+    loss_fn: LossFn,
+    optimizer: GradientTransformation,
+    topology: Topology,
+    config: HierFAVGConfig,
+    weights: jnp.ndarray,
+    *,
+    grad_accum: int = 1,
+    block_clients: Optional[int] = None,
+):
+    """``build_super_round`` lowered client-blocked: the fused edge-interval
+    megakernel as one executable per cloud interval.
+
+    The scan-fused superround is step-major — every client advances one
+    local step before any client takes its next — so each of the κ₁ steps
+    streams the whole stacked (N, …) state through the memory hierarchy.
+    This lowering is client-major: per edge interval it maps over blocks of
+    ``block_clients`` clients, each block running all κ₁ (unrolled) local
+    steps while its params/opt rows stay resident (VMEM on TPU, LLC on
+    CPU), then applies the trailing edge/cloud weighted mean. Per-step
+    memory traffic drops by ~κ₁× once the stacked state exceeds the cache —
+    the regime where this path wins (see docs/performance.md); eligibility
+    is ``megakernel_incompatibility``.
+
+        super_round(state, batches, masks=None) -> (state, metrics)
+
+    Same contract as ``build_super_round`` — batch leaves (κ₂, κ₁, N, b,
+    …), metrics ``{"loss": (κ₂,), "grad_norm": (κ₂,), "step": (κ₂,)}`` —
+    except ``masks`` must be None (the eligibility predicate routes failure
+    models to the scan-fused engine). Per-client RNG streams, batches, and
+    step math are identical to the baseline; only the summation *order* of
+    the segment means and metric reductions differs (documented tolerance,
+    ``tests/test_megakernel.py``).
+    """
+    spec = as_hierarchy(topology)
+    _check_levels(spec, config)
+    reason = megakernel_incompatibility(config, spec, grad_accum=grad_accum)
+    if reason is not None:
+        raise ValueError(f"schedule cannot run through the megakernel: {reason}")
+    n = spec.num_clients
+    num_edges = spec.num_nodes(1)
+    cpe = n // num_edges
+    k1, k2 = config.kappa1, config.kappa2_effective
+    deepest_per_round = super_round_schedule(config)  # static: 1 = edge, 2 = cloud
+    w = jnp.asarray(weights, jnp.float32)
+    wg = w.reshape(num_edges, cpe)
+    den_edge = jnp.sum(wg, axis=1)
+    den_cloud = jnp.sum(w)
+
+    loss_p = _apply_precision(loss_fn, config.precision)
+
+    def total_loss(params, batch, rngs):
+        losses = jax.vmap(loss_p)(params, batch, rngs)
+        return jnp.sum(losses), losses
+
+    grad_fn = jax.grad(total_loss, has_aux=True)
+
+    def edge_mean_leaf(x):
+        xf = x.astype(jnp.float32).reshape((num_edges, cpe) + x.shape[1:])
+        wexp = wg.reshape((num_edges, cpe) + (1,) * (x.ndim - 1))
+        m = jnp.sum(xf * wexp, axis=1) / den_edge.reshape((num_edges,) + (1,) * (x.ndim - 1))
+        return jnp.broadcast_to(m[:, None], xf.shape).reshape(x.shape).astype(x.dtype)
+
+    def cloud_mean_leaf(x):
+        xf = x.astype(jnp.float32)
+        wexp = w.reshape((n,) + (1,) * (x.ndim - 1))
+        m = jnp.sum(xf * wexp, axis=0) / den_cloud
+        return jnp.broadcast_to(m[None], x.shape).astype(x.dtype)
+
+    tmap, tleaves = jax.tree_util.tree_map, jax.tree_util.tree_leaves
+
+    def block_steps(carry):
+        """All κ₁ local steps for one client block, params/opt resident.
+        carry leaves: params (Bc, …), opt (stacked (Bc, …) or shared
+        scalar), batches (κ₁, Bc, …), rngs (κ₁, Bc, 2)."""
+        params, opt, batches, rngs = carry
+        losses_t, gsq_t = [], []
+        for t in range(k1):
+            batch_t = tmap(lambda x: x[t], batches)
+            grads, losses = grad_fn(params, batch_t, rngs[t])
+            updates, opt = optimizer.update(grads, opt, params)
+            params = apply_updates(params, updates)
+            losses_t.append(losses.astype(jnp.float32))
+            gsq_t.append(
+                sum(
+                    jnp.sum(jnp.square(g.astype(jnp.float32)), axis=tuple(range(1, g.ndim)))
+                    for g in tleaves(grads)
+                )
+            )
+        return params, opt, jnp.stack(losses_t), jnp.stack(gsq_t)
+
+    def super_round(state: FedState, batches: PyTree, masks: Optional[jnp.ndarray] = None):
+        if masks is not None:
+            raise TypeError(
+                "the megakernel superround takes no survival masks; failure "
+                "models are routed to the scan-fused engine by eligibility"
+            )
+        params, opt_state = state.params, state.opt_state
+        for leaf in tleaves(opt_state):
+            if getattr(leaf, "ndim", 0) >= 1 and leaf.shape[0] != n:
+                raise ValueError(
+                    f"megakernel needs optimizer state leaves that are either "
+                    f"scalar (shared) or stacked (N, ...); got shape {leaf.shape}"
+                )
+        bytes_per_client = sum(x.nbytes // n for x in tleaves(params)) + sum(
+            x.nbytes // n for x in tleaves(opt_state) if getattr(x, "ndim", 0) >= 1
+        )
+        bc = block_clients if block_clients is not None else _megakernel_block_clients(
+            cpe, max(1, bytes_per_client)
+        )
+        if cpe % bc != 0:
+            raise ValueError(f"block_clients={bc} does not divide clients_per_edge={cpe}")
+        nb = n // bc
+
+        def reblock(x):
+            return x.reshape((nb, bc) + x.shape[1:])
+
+        def reblock_steps(x):
+            # (κ₁, N, ...) -> (nb, κ₁, Bc, ...): client-major blocks, each
+            # carrying its own κ₁-step slice of batches/keys
+            return jnp.moveaxis(x, 1, 0).reshape((nb, bc, k1) + x.shape[2:]).swapaxes(1, 2)
+
+        def block_opt(x):
+            if getattr(x, "ndim", 0) >= 1 and x.shape[0] == n:
+                return reblock(x)
+            return jnp.broadcast_to(x[None], (nb,) + jnp.shape(x))
+
+        def unblock_opt(x, ref):
+            if getattr(ref, "ndim", 0) >= 1 and ref.shape[0] == n:
+                return x.reshape((n,) + x.shape[2:])
+            return x[0]  # shared leaf: every block stepped it identically
+
+        rng, table = _rng_step_table(state.rng, k1 * k2, n)
+        step0 = state.step
+        loss_r, gnorm_r, step_r = [], [], []
+        for j in range(k2):
+            pb = tmap(reblock, params)
+            ob = tmap(block_opt, opt_state)
+            bj = tmap(lambda x: reblock_steps(x[j]), batches)
+            tb = reblock_steps(table[j * k1 : (j + 1) * k1])
+            pb, ob, losses, gsq = jax.lax.map(block_steps, (pb, ob, bj, tb))
+            params = tmap(lambda x: x.reshape((n,) + x.shape[2:]), pb)
+            opt_state = tmap(unblock_opt, ob, opt_state)
+            # (nb, κ₁, Bc) -> (κ₁, N) in canonical client order
+            ls = jnp.moveaxis(losses, 0, 1).reshape(k1, n)
+            gs = jnp.moveaxis(gsq, 0, 1).reshape(k1, n)
+            loss_r.append(jnp.mean(ls))
+            gnorm_r.append(jnp.mean(jnp.sqrt(jnp.sum(gs, axis=1))))
+            step_r.append(step0 + (j + 1) * k1)
+            mean_leaf = cloud_mean_leaf if deepest_per_round[j] == 2 else edge_mean_leaf
+            params = tmap(mean_leaf, params)
+        new_state = FedState(
+            step=step0 + k1 * k2, params=params, opt_state=opt_state, rng=rng,
+            anchor=state.anchor, residual=state.residual,
+        )
+        metrics = {
+            "loss": jnp.stack(loss_r),
+            "grad_norm": jnp.stack(gnorm_r),
+            "step": jnp.stack(step_r),
+        }
+        return new_state, metrics
 
     return super_round
 
@@ -1155,7 +1472,7 @@ def build_cohort_super_round(
     reason = cohort_incompatibility(config, spec, cohort_size)
     if reason is not None:
         raise ValueError(f"schedule cannot run cohort-sampled: {reason}")
-    local_step = build_local_step(loss_fn, optimizer, grad_accum=grad_accum)
+    local_step = build_local_step(loss_fn, optimizer, grad_accum=grad_accum, precision=config.precision)
     level_syncs = [
         _build_cohort_level_sync(spec, config, l, cohort_size) for l in range(1, depth + 1)
     ]
@@ -1271,7 +1588,7 @@ def build_sharded_super_round(
     if reason is not None:
         raise ValueError(f"schedule cannot run client-sharded: {reason}")
     shard = ClientSharding.build(axis, placement, weights)
-    microbatch_grads = _build_microbatch_grads(loss_fn, grad_accum)
+    microbatch_grads = _build_microbatch_grads(_apply_precision(loss_fn, config.precision), grad_accum)
     level_syncs = [
         build_level_sync(spec, config, weights, lvl, shard=shard) for lvl in range(1, depth + 1)
     ]
@@ -1280,13 +1597,7 @@ def build_sharded_super_round(
     n_real = spec.num_clients
     n_padded = placement.padded_clients
 
-    def local_step(s: FedState, batch: PyTree, ids):
-        rng, step_rng = jax.random.split(s.rng)
-        # replicated O(N) key derivation + a gather of this shard's original
-        # client ids: every real client sees the exact single-device stream
-        # (phantoms reuse client 0's key; their weight is zero)
-        all_rngs = jax.random.split(step_rng, n_real)
-        rngs = jnp.take(all_rngs, ids, axis=0)
+    def local_step(s: FedState, batch: PyTree, rngs):
         grads, losses = microbatch_grads(s.params, batch, rngs)
         updates, opt_state = optimizer.update(grads, s.opt_state, s.params)
         params = apply_updates(s.params, updates)
@@ -1296,7 +1607,7 @@ def build_sharded_super_round(
         )
         return (
             FedState(
-                step=s.step + 1, params=params, opt_state=opt_state, rng=rng,
+                step=s.step + 1, params=params, opt_state=opt_state, rng=s.rng,
                 anchor=s.anchor, residual=s.residual,
             ),
             losses.astype(jnp.float32),
@@ -1305,24 +1616,44 @@ def build_sharded_super_round(
 
     def body(state: FedState, batches: PyTree, masks):
         ids = _shard_row(ids_table, axis)
+        k1 = config.kappa1
+        k2 = len(super_round_schedule(config))
+        # Per-step key derivation hoisted out of the step scan: the baseline
+        # chain (rng, step_rng = split(rng); split(step_rng, N)) replicated
+        # O(N) work inside every sequential scan iteration, which at batch 1
+        # dominated the (tiny) per-step math. A scan of bare splits plus one
+        # vmapped N-way split + gather of this shard's original client ids
+        # reproduces the exact same keys (bit-exact; phantoms reuse client
+        # 0's key, their weight is zero) as one batched op per interval.
+        def split_body(c, _):
+            c, s = jax.random.split(c)
+            return c, s
+
+        rng_out, step_keys = jax.lax.scan(split_body, state.rng, None, length=k1 * k2)
+        local_keys = jax.vmap(
+            lambda k: jnp.take(jax.random.split(k, n_real), ids, axis=0)
+        )(step_keys)
+        local_keys = local_keys.reshape((k2, k1) + local_keys.shape[1:])
+        state = state._replace(rng=rng_out)
 
         def round_body(s, xs):
             if masks is None:
-                deepest, batch_r = xs
+                deepest, batch_r, keys_r = xs
                 mask_r = None
             else:
-                deepest, batch_r, mask_r = xs
+                deepest, batch_r, keys_r, mask_r = xs
 
-            def step_body(ss, b):
-                ss, losses, gsq = local_step(ss, b, ids)
+            def step_body(ss, bk):
+                b, rngs = bk
+                ss, losses, gsq = local_step(ss, b, rngs)
                 return ss, (losses, gsq)
 
-            s, (losses, gsqs) = jax.lax.scan(step_body, s, batch_r)
+            s, (losses, gsqs) = jax.lax.scan(step_body, s, (batch_r, keys_r))
             branches = [(lambda sync: lambda st: sync(st, mask_r))(sync) for sync in level_syncs]
             s = jax.lax.switch(deepest - 1, branches, s)
             return s, {"loss": losses, "gsq": gsqs, "step": s.step}
 
-        xs = (deepest_per_round, batches)
+        xs = (deepest_per_round, batches, local_keys)
         if masks is not None:
             xs = xs + (masks,)
         return jax.lax.scan(round_body, state, xs)

@@ -21,6 +21,7 @@ benchmark stand-in):
     schedule     the κ-vector + sync/delta/async flags
     data         synthetic dataset + partition protocol + batching
     model        architecture + optimizer + LR schedule
+    precision    client compute/state dtype + remat (``core.hierfavg.PrecisionSpec``)
     transport    per-level link codecs (``fed.transport`` grammar)
     aggregators  per-level aggregation statistic (``core.aggregation``)
     failures     failure / straggler injection
@@ -42,6 +43,7 @@ from typing import Any, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.hierfavg import PrecisionSpec
 from repro.fed.participation import ParticipationSpec
 
 PyTree = Any
@@ -284,7 +286,7 @@ class RunSpec:
     checkpoint_every: int = 0
     checkpoint_dir: str = ""
     target_accuracy: float = 0.0
-    engine: str = "auto"  # auto | superround | per_round
+    engine: str = "auto"  # auto | superround | megakernel | per_round
     seed: int = 0
 
 
@@ -302,6 +304,7 @@ class ExperimentSpec:
     schedule: ScheduleSpec = dataclasses.field(default_factory=ScheduleSpec)
     data: DataSpec = dataclasses.field(default_factory=DataSpec)
     model: ModelSpec = dataclasses.field(default_factory=ModelSpec)
+    precision: PrecisionSpec = dataclasses.field(default_factory=PrecisionSpec)
     transport: TransportSpec = dataclasses.field(default_factory=TransportSpec)
     aggregators: AggregatorSpec = dataclasses.field(default_factory=AggregatorSpec)
     participation: ParticipationSpec = dataclasses.field(default_factory=ParticipationSpec)
@@ -395,6 +398,7 @@ class ExperimentSpec:
             transport=self.transport.build(depth),
             aggregators=self.aggregators.build(depth),
             participation=self.participation if self.participation.is_active else None,
+            precision=self.precision if self.precision.is_active else None,
         )
 
     def init_params(self, rng) -> PyTree:
@@ -477,6 +481,9 @@ class ExperimentSpec:
             extras.append(
                 f"cohort={self.participation.cohort_size}/{self.participation.sampler}"
             )
+        if self.precision.is_active:
+            tag = self.precision.param_dtype + ("+remat" if self.precision.remat else "")
+            extras.append(f"precision={tag}")
         if self.failures.p_fail > 0:
             extras.append(f"p_fail={self.failures.p_fail:g}")
         tail = (" " + " ".join(extras)) if extras else ""
@@ -776,6 +783,7 @@ __all__ = [
     "FailureSpec",
     "ModelSpec",
     "ParticipationSpec",
+    "PrecisionSpec",
     "RunSpec",
     "ScheduleSpec",
     "TopologySpec",

@@ -57,6 +57,7 @@ from repro.core.hierarchy import as_hierarchy, plan_shard_placement
 from repro.core.hierfavg import (
     FedState,
     build_cohort_super_round,
+    build_megakernel_super_round,
     build_sharded_super_round,
     build_super_round,
     map_stacked_fed_state,
@@ -88,6 +89,15 @@ class SuperRoundEngine:
         self.prefetch = prefetch
         self.mesh = runner.mesh
         self.placement = None
+        # engine="megakernel" is an opt-in fast path: whole cloud intervals
+        # through the client-blocked lowering when the schedule is block-
+        # separable, otherwise the scan-fused superround with a named reason
+        # (queryable here and on runner._megakernel_reason — the same
+        # report-don't-raise idiom as the mesh's sharding_incompatibility)
+        self.uses_megakernel = False
+        self.megakernel_reason: Optional[str] = None
+        if getattr(runner.cfg, "engine", "") == "megakernel":
+            self.megakernel_reason = runner._check_megakernel()
         if self.mesh is not None:
             from repro.dist import sharding as dist_sharding
 
@@ -114,6 +124,16 @@ class SuperRoundEngine:
             self._valid = self.placement.valid()
             self._block_sharding = dist_sharding.batch_block_sharding(self.mesh, self.axis)
             self._mask_sharding = dist_sharding.mask_stack_sharding(self.mesh, self.axis)
+        elif getattr(runner.cfg, "engine", "") == "megakernel" and self.megakernel_reason is None:
+            fn = build_megakernel_super_round(
+                runner.loss_fn,
+                runner.optimizer,
+                runner.topology,
+                hier,
+                runner.weights,
+                grad_accum=runner.grad_accum,
+            )
+            self.uses_megakernel = True
         else:
             fn = build_super_round(
                 runner.loss_fn,

@@ -66,6 +66,9 @@ class RunnerConfig:
     # "auto": superround engine (fed.engine) for every whole cloud interval
     # whose boundaries satisfy eval/checkpoint granularity, per-round
     # otherwise; "superround" forces the engine (raises if ineligible);
+    # "megakernel" is the opt-in client-blocked fast path (falls back to the
+    # scan-fused superround with a named reason when the schedule is not
+    # block-separable; see core.hierfavg.megakernel_incompatibility);
     # "per_round" forces the legacy one-dispatch-per-edge-interval loop.
     engine: str = "auto"
     # device mesh for client-sharded execution (jax.sharding.Mesh with a
@@ -75,9 +78,10 @@ class RunnerConfig:
 
     def __post_init__(self):
         # fail at construction, not on the first run() call
-        if self.engine not in ("auto", "superround", "per_round"):
+        if self.engine not in ("auto", "superround", "megakernel", "per_round"):
             raise ValueError(
-                f"RunnerConfig.engine must be auto|superround|per_round, got {self.engine!r}"
+                f"RunnerConfig.engine must be auto|superround|megakernel|per_round, "
+                f"got {self.engine!r}"
             )
 
 
@@ -138,6 +142,7 @@ class FederatedRunner:
         self.mesh = mesh if mesh is not None else runner_config.mesh
         self._state_shardings = state_shardings
         self._mesh_reason: Optional[str] = None
+        self._megakernel_reason: Optional[str] = None
         # the edge-aligned placement is a pure function of (topology, mesh):
         # plan it once and share it between eligibility checks and the engine
         self._placement = None
@@ -361,6 +366,34 @@ class FederatedRunner:
             self.hier_config, self.topology, num_shards, placement=self._placement
         )
 
+    def _check_megakernel(self) -> Optional[str]:
+        """None if whole cloud intervals can run through the client-blocked
+        megakernel lowering, else why the engine falls back to the scan-fused
+        superround. Runner-level seams first (mesh routing, masks, overridden
+        detectors), then the schedule-level predicate
+        (``core.hierfavg.megakernel_incompatibility``). The reason is cached
+        on ``_megakernel_reason`` for reporting — the fallback is named, not
+        silent, mirroring the ``_mesh_reason`` idiom."""
+        from repro.core.hierfavg import megakernel_incompatibility
+
+        if self.mesh is not None:
+            reason = "a device mesh routes to the client-sharded superround"
+        elif self.grad_accum > 1:
+            reason = "microbatch accumulation keeps the scan-fused path"
+        elif self.failures is not None or self.stragglers is not None:
+            reason = "failure/straggler masks need the scan-fused survival plumbing"
+        elif (
+            getattr(self._mask_for_round, "__func__", None)
+            is not FederatedRunner._mask_for_round
+        ):
+            reason = "an overridden failure detector is a live per-round mask seam"
+        else:
+            reason = megakernel_incompatibility(
+                self.hier_config, self.topology, grad_accum=self.grad_accum
+            )
+        self._megakernel_reason = reason
+        return reason
+
     def _cohort_reason(self, start_round: int) -> Optional[str]:
         """None if the run can go cohort-sampled end-to-end, else why not.
         There is no per-round fallback for sampled participation — the
@@ -417,12 +450,12 @@ class FederatedRunner:
         if mode != "per_round":
             eligible = self._superround_eligible(start_round)
             full = (self.cfg.num_rounds - start_round) // k2 if eligible else 0
-            if mode == "superround" and full <= 0:
+            if mode in ("superround", "megakernel") and full <= 0:
                 mesh_note = (
                     f" (mesh: {self._mesh_reason})" if self._mesh_reason else ""
                 )
                 raise ValueError(
-                    "engine='superround' needs a cloud-aligned start_round, "
+                    f"engine={mode!r} needs a cloud-aligned start_round, "
                     "eval_every/checkpoint_every multiples of "
                     f"kappa2_effective={k2}, a mesh-shardable schedule, and "
                     f"at least one whole cloud interval of rounds{mesh_note}"

@@ -81,6 +81,21 @@ def segment_dequant_mean(q, scales, weights, segment_ids, num_segments, *, block
     )
 
 
+def edge_interval(params, inputs, targets, weights, *, num_edges, feat, lr,
+                  momentum=0.0, mu=None):
+    """Fused edge interval: κ₁ local SGD(+momentum) steps for every client
+    plus the trailing per-edge weighted mean, one kernel launch per cloud-
+    free sync — the megakernel's TPU lowering (flat-row linear clients; the
+    engine's general-model path is ``core.hierfavg.build_megakernel_super_round``).
+    Returns (aggregated params (N, P), losses (N, κ₁), mu (N, P))."""
+    from repro.kernels import megakernel as _mk
+
+    return _mk.edge_interval_pallas(
+        params, inputs, targets, weights, num_edges=num_edges, feat=feat,
+        lr=lr, momentum=momentum, mu=mu, interpret=use_interpret(),
+    )
+
+
 def quantize_int8(x, *, qblock=256):
     return _qz.quantize_pallas(x, qblock=qblock, interpret=use_interpret())
 

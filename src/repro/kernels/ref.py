@@ -97,6 +97,57 @@ def segment_dequant_mean_ref(
     return jnp.concatenate(outs, axis=1)[:, :d]
 
 
+def edge_interval_ref(
+    params: jnp.ndarray,
+    inputs: jnp.ndarray,
+    targets: jnp.ndarray,
+    weights: jnp.ndarray,
+    num_edges: int,
+    *,
+    feat: int,
+    lr: float,
+    momentum: float = 0.0,
+    mu: jnp.ndarray = None,
+):
+    """Oracle for the fused edge-interval megakernel.
+
+    params: (N, P = feat·out) flat client rows; inputs: (N, κ₁, b, feat);
+    targets: (N, κ₁, b, out); weights: (N,). Runs the κ₁ local SGD
+    (+momentum) steps then the per-edge weighted mean, edge by edge in
+    kernel grid order, through the *same* ``_interval_steps`` body the
+    Pallas kernel traces. Interpret-mode parity is ULP-level (~1e-7): the
+    step math is shared, only the lowering of the einsum contractions
+    differs inside the Pallas interpreter. Returns (aggregated params
+    (N, P), losses (N, κ₁) f32, mu (N, P))."""
+    from repro.kernels.megakernel import _interval_steps
+
+    n, p = params.shape
+    out = p // feat
+    c = n // num_edges
+    if mu is None:
+        mu = jnp.zeros_like(params)
+    w = weights.reshape(n, 1).astype(jnp.float32)
+    outs, louts, mouts = [], [], []
+    for e in range(num_edges):
+        sl = slice(e * c, (e + 1) * c)
+        pe = params[sl].astype(jnp.float32).reshape(c, feat, out)
+        me = mu[sl].astype(jnp.float32).reshape(c, feat, out)
+        pe, me, le = _interval_steps(
+            pe, inputs[sl].astype(jnp.float32), targets[sl].astype(jnp.float32),
+            me, lr=lr, momentum=momentum,
+        )
+        we = w[sl]
+        mean = jnp.sum(pe * we[..., None], axis=0) / jnp.sum(we)
+        outs.append(jnp.broadcast_to(mean[None], pe.shape).reshape(c, p))
+        louts.append(le)
+        mouts.append(me.reshape(c, p))
+    return (
+        jnp.concatenate(outs).astype(params.dtype),
+        jnp.concatenate(louts).astype(jnp.float32),
+        jnp.concatenate(mouts).astype(params.dtype),
+    )
+
+
 def attention_ref(
     q: jnp.ndarray,
     k: jnp.ndarray,

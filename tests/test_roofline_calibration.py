@@ -1,0 +1,41 @@
+"""Roofline calibration against the edge-interval megakernel (marker:
+``calibration`` — timing-sensitive, host-dependent, not tier-1; run with
+``pytest -m calibration``)."""
+import pytest
+
+from repro.analysis.roofline import (
+    calibrate_megakernel,
+    measure_host_peaks,
+    megakernel_interval_cost,
+)
+
+pytestmark = pytest.mark.calibration
+
+# achieved throughput can legitimately sit far below peak (tiny shape, jit
+# overhead) but must never *beat* the host's measured peak by more than the
+# micro-probes' own noise
+LOOSE_FACTOR = 2.0
+
+
+def test_interval_cost_model_scales():
+    c1 = megakernel_interval_cost(num_clients=8, kappa1=4, batch=2, feat=64, out=128)
+    c2 = megakernel_interval_cost(num_clients=16, kappa1=4, batch=2, feat=64, out=128)
+    assert c2["flops"] == 2 * c1["flops"]
+    assert c2["bytes"] == 2 * c1["bytes"]
+    # doubling kappa1 doubles step work but NOT the params/momentum traffic
+    c3 = megakernel_interval_cost(num_clients=8, kappa1=8, batch=2, feat=64, out=128)
+    assert c3["flops"] < 2 * c1["flops"]
+    assert c3["bytes"] < 2 * c1["bytes"]
+
+
+def test_calibration_achieved_within_peak_envelope():
+    peaks = measure_host_peaks(n=512, reps=3)
+    assert peaks["flops"] > 0 and peaks["bw"] > 0
+    res = calibrate_megakernel(reps=3, peaks=peaks)
+    assert res.elapsed_s > 0
+    # the loose-factor envelope: achieved in (0, LOOSE_FACTOR x peak]
+    assert 0 < res.flops_fraction <= LOOSE_FACTOR, res.to_dict()
+    assert 0 < res.bw_fraction <= LOOSE_FACTOR, res.to_dict()
+    d = res.to_dict()
+    for key in ("achieved_flops", "achieved_bw", "peak_flops", "peak_bw"):
+        assert d[key] > 0
