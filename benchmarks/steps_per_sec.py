@@ -30,6 +30,10 @@ over reps.
     PYTHONPATH=src python -m benchmarks.steps_per_sec --population --json
         # population-scale cohort engine only: steady-state client_steps_per_s
         # on the n1m_cohort4096 scenario, merged into BENCH_throughput.json
+    PYTHONPATH=src python -m benchmarks.steps_per_sec --population --devices 4 --json
+        # + "population_sharded": the same scenario through the sharded
+        # cohort engine over a 4-way client mesh, vs the 1-device cohort
+        # engine (with --smoke: fails below the 0.7x collapse floor)
 
 ``--devices K`` must be seen before JAX initializes: this module reads it
 from ``sys.argv`` at import time and sets
@@ -275,56 +279,100 @@ def run_megakernel_shape(*, reps=5, intervals=8, warmup_intervals=1):
 
 
 POPULATION_SCENARIO = "n1m_cohort4096"
+# the sharded-cohort CI gate is (like the full-population one) a
+# catastrophic-regression floor: simulated devices split one host's cores
+POPULATION_SHARDED_FLOOR = 0.7
 
 
-def run_population(name=POPULATION_SCENARIO, *, reps=3, intervals=4, warmup_intervals=1):
+def run_population(name=POPULATION_SCENARIO, *, reps=3, intervals=4,
+                   warmup_intervals=1, devices=0):
     """Steady-state throughput of the sampled-participation cohort engine on
     a virtual-client population scenario. Only the cohort is device-resident,
     so this times the full streaming loop: host-side cohort sampling + lazy
     per-client batch synthesis (overlapped in the prefetch worker), sticky-row
     store swap, and the donated cohort superround. One warmup interval pays
-    compilation; timed chunks of whole cloud intervals, median over reps."""
+    compilation; timed chunks of whole cloud intervals, median over reps.
+
+    With ``devices > 1`` a second driver runs the same scenario through the
+    sharded cohort engine (``topology.mesh_axes=clients:K``) with the same
+    alternating-chunk protocol, and a ``(single_row, sharded_section)`` pair
+    is returned; otherwise ``(single_row, None)``.
+    """
     from repro.fed import scenarios
     from repro.fed.engine import CohortEngine
 
-    spec = scenarios.get(name)
-    runner = spec.build()
-    state = runner.init(
-        jax.random.PRNGKey(spec.run.seed), spec.init_params(jax.random.PRNGKey(spec.run.seed + 1))
-    )
-    k1 = runner.hier_config.kappa1
-    k2 = runner.hier_config.kappa2_effective
-    cohort = int(runner.participation.cohort_size)
-    engine = CohortEngine(runner)
-    done = {"intervals": 0}
-
-    def chunk(n):
-        nonlocal state
-        t0 = time.perf_counter()
-        state, _ = engine.run_intervals(
-            state, start_round=done["intervals"] * k2, num_intervals=n
+    def make_driver(overrides):
+        spec = scenarios.get(name, overrides)
+        runner = spec.build()
+        state = runner.init(
+            jax.random.PRNGKey(spec.run.seed),
+            spec.init_params(jax.random.PRNGKey(spec.run.seed + 1)),
         )
-        jax.block_until_ready(state.params)
-        done["intervals"] += n
+        return {"spec": spec, "runner": runner, "engine": CohortEngine(runner),
+                "state": state, "intervals": 0, "times": []}
+
+    modes = ["single"] + (["sharded"] if devices > 1 else [])
+    drivers = {"single": make_driver([])}
+    if devices > 1:
+        drivers["sharded"] = make_driver([f"topology.mesh_axes=clients:{devices}"])
+    k1 = drivers["single"]["runner"].hier_config.kappa1
+    k2 = drivers["single"]["runner"].hier_config.kappa2_effective
+    cohort = int(drivers["single"]["runner"].participation.cohort_size)
+
+    def chunk(d, n):
+        t0 = time.perf_counter()
+        d["state"], _ = d["engine"].run_intervals(
+            d["state"], start_round=d["intervals"] * k2, num_intervals=n
+        )
+        jax.block_until_ready(d["state"].params)
+        d["intervals"] += n
         return time.perf_counter() - t0
 
-    chunk(warmup_intervals)  # compile + first prefetch fill
-    times = [chunk(intervals) for _ in range(reps)]
-    med = float(np.median(times))
+    for mode in modes:
+        chunk(drivers[mode], warmup_intervals)  # compile + first prefetch fill
+    for rep in range(reps):
+        shift = rep % len(modes)
+        for mode in modes[shift:] + modes[:shift]:
+            d = drivers[mode]
+            d["times"].append(chunk(d, intervals))
+
     steps = intervals * k2 * k1  # local steps per timed chunk
-    store = runner.client_store
-    return {
+
+    def row(d):
+        med = float(np.median(d["times"]))
+        store = d["runner"].client_store
+        return {
+            "scenario": name,
+            "num_clients": int(len(d["runner"].batcher.data_sizes)),
+            "cohort_size": cohort,
+            "sampler": d["runner"].participation.sampler,
+            "kappas": [k1, k2],
+            "batch": d["spec"].data.batch_size,
+            "ms_per_interval": round(med / intervals * 1000, 2),
+            "local_steps_per_s": round(steps / med, 2),
+            "client_steps_per_s": round(steps * cohort / med, 1),
+            "client_store_mib": round((store.nbytes if store is not None else 0) / 2**20, 3),
+        }
+
+    single = row(drivers["single"])
+    if devices <= 1:
+        return single, None
+    sh = row(drivers["sharded"])
+    sharded = {
         "scenario": name,
-        "num_clients": int(len(runner.batcher.data_sizes)),
+        "devices": devices,
+        "batch": single["batch"],
         "cohort_size": cohort,
-        "sampler": runner.participation.sampler,
-        "kappas": [k1, k2],
-        "batch": spec.data.batch_size,
-        "ms_per_interval": round(med / intervals * 1000, 2),
-        "local_steps_per_s": round(steps / med, 2),
-        "client_steps_per_s": round(steps * cohort / med, 1),
-        "client_store_mib": round((store.nbytes if store is not None else 0) / 2**20, 3),
+        "sampler": single["sampler"],
+        "single": {k: single[k] for k in
+                   ("ms_per_interval", "local_steps_per_s", "client_steps_per_s")},
+        "sharded": {k: sh[k] for k in
+                    ("ms_per_interval", "local_steps_per_s", "client_steps_per_s")},
+        "scaling_vs_1dev": round(
+            sh["client_steps_per_s"] / single["client_steps_per_s"], 3
+        ),
     }
+    return single, sharded
 
 
 def main(argv=None):
@@ -391,7 +439,7 @@ def main(argv=None):
         )
 
     sharded = None
-    if args.devices > 1:
+    if args.devices > 1 and not args.population:
         # the smoke gate times both floors: the b8 scaling shape and the
         # dispatch-bound b1 shape (the historical 0.82x regression)
         snames = (SHARDED_SMOKE_SHAPE, SHARDED_B1_SHAPE) if args.smoke else SHARDED_SHAPES
@@ -416,9 +464,11 @@ def main(argv=None):
             "scaling_vs_1dev": row["sharded_speedup_vs_superround"],
         }
 
-    population = None
+    population = population_sharded = None
     if args.population:
-        population = run_population(reps=reps, intervals=4, warmup_intervals=warmup)
+        population, population_sharded = run_population(
+            reps=reps, intervals=4, warmup_intervals=warmup, devices=args.devices
+        )
         print(
             f"steps_per_sec_population_{population['scenario']},"
             f"num_clients={population['num_clients']},"
@@ -426,6 +476,14 @@ def main(argv=None):
             f"client_steps_per_s={population['client_steps_per_s']},"
             f"ms_per_interval={population['ms_per_interval']}"
         )
+        if population_sharded is not None:
+            print(
+                f"steps_per_sec_population_sharded_{population_sharded['scenario']},"
+                f"devices={population_sharded['devices']},"
+                f"single={population_sharded['single']['client_steps_per_s']},"
+                f"sharded={population_sharded['sharded']['client_steps_per_s']},"
+                f"scaling_vs_1dev={population_sharded['scaling_vs_1dev']}"
+            )
 
     results = {
         "bench": "steps_per_sec",
@@ -449,6 +507,8 @@ def main(argv=None):
         results["sharded"] = sharded
     if population is not None:
         results["population"] = population
+    if population_sharded is not None:
+        results["population_sharded"] = population_sharded
     if args.json:
         # partial runs (--population, --devices-only smoke) merge into the
         # existing file rather than clobbering the other benches' keys
@@ -478,6 +538,13 @@ def main(argv=None):
             f"superround engine slower than per-round driver at the smoke shape "
             f"(speedup {head['speedup']} < 1.0)"
         )
+    # sharded gate failures must be diagnosable from the log alone: simulated
+    # devices split one host's cores, so a collapse on a 1-core runner is an
+    # environment fact, not a code regression
+    env_note = (
+        f"[cpu_count={os.cpu_count()}, "
+        f"xla_flags={os.environ.get('XLA_FLAGS', '') or '<unset>'!s}]"
+    )
     if args.smoke and sharded is not None:
         # gate on the headline entry so the gate and the recorded headline
         # can never disagree about which shape they describe
@@ -486,7 +553,7 @@ def main(argv=None):
             raise SystemExit(
                 f"client-sharded superround collapsed at the gate shape "
                 f"({sharded['headline']['shape']}: {gate} < {SHARDED_SMOKE_FLOOR} "
-                f"of the single-device engine)"
+                f"of the single-device engine) {env_note}"
             )
         b1_row = sharded["shapes"].get(SHARDED_B1_SHAPE)
         if b1_row is not None:
@@ -495,8 +562,16 @@ def main(argv=None):
                 raise SystemExit(
                     f"batch-1 sharded throughput slid below the floor "
                     f"({SHARDED_B1_SHAPE}: {b1} < {SHARDED_B1_FLOOR} of the "
-                    f"single-device engine)"
+                    f"single-device engine) {env_note}"
                 )
+    if args.smoke and population_sharded is not None:
+        gate = population_sharded["scaling_vs_1dev"]
+        if gate < POPULATION_SHARDED_FLOOR:
+            raise SystemExit(
+                f"sharded cohort engine collapsed on {population_sharded['scenario']} "
+                f"({gate} < {POPULATION_SHARDED_FLOOR} of the single-device cohort "
+                f"engine over {population_sharded['devices']} devices) {env_note}"
+            )
     return results
 
 

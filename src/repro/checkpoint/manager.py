@@ -112,7 +112,7 @@ class CheckpointManager:
                 raise ValueError(f"leaf shape mismatch: ckpt {a.shape} vs template {np.shape(t)}")
             cast.append(a.astype(np.asarray(t).dtype) if hasattr(t, "dtype") else a)
         state = jax.tree_util.tree_unflatten(treedef, cast)
-        return state, meta.get("user", {})
+        return state, _unjsonable(meta.get("user", {}))
 
     def restore_latest(self, template: PyTree) -> Optional[Tuple[PyTree, Dict]]:
         for step in reversed(self.committed_steps()):
@@ -134,4 +134,16 @@ def _jsonable(obj):
         return int(obj)
     if isinstance(obj, (np.floating,)):
         return float(obj)
+    return obj
+
+
+def _unjsonable(obj):
+    """Inverse of :func:`_jsonable` for the ndarray encoding (other values
+    round-trip through JSON natively)."""
+    if isinstance(obj, dict):
+        if "__ndarray__" in obj:
+            return np.asarray(obj["__ndarray__"], dtype=obj["dtype"])
+        return {k: _unjsonable(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_unjsonable(v) for v in obj]
     return obj

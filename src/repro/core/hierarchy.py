@@ -352,6 +352,44 @@ def plan_shard_placement(spec: HierarchySpec, num_shards: int) -> ShardPlacement
     return ShardPlacement(num_shards=num_shards, capacity=capacity, perm=tuple(perm), spec=spec)
 
 
+def cohort_hierarchy(spec: HierarchySpec, quotas) -> HierarchySpec:
+    """The *slot* tree of a stratified cohort: ``quotas[e]`` cohort slots
+    under level-1 node e, upper tiers unchanged.
+
+    Slots stand in for the sampled clients; because stratified cohorts are
+    sorted and edges are contiguous id ranges, slot j of every interval's
+    cohort reports to the same edge — the cohort tree (and any placement
+    planned from it) is a pure function of (topology, quotas).
+    """
+    q = np.asarray(quotas, np.int64)
+    if spec.depth == 1:
+        # depth-1 trees have one "edge" (the root); all slots report to it
+        if q.shape != (1,) or int(q.sum()) < 1:
+            raise ValueError(f"depth-1 tree needs a single root quota, got {q}")
+        return HierarchySpec(parents=(tuple([0] * int(q[0])),))
+    num_edges = spec.num_nodes(1)
+    if q.shape != (num_edges,):
+        raise ValueError(f"quotas must be ({num_edges},) (one per level-1 node), got {q.shape}")
+    if np.any(q < 1):
+        raise ValueError("every level-1 node needs >= 1 cohort slot (floor-1 quotas)")
+    slot_parents = tuple(int(e) for e in np.repeat(np.arange(num_edges), q))
+    return HierarchySpec(parents=(slot_parents,) + spec.parents[1:])
+
+
+def plan_cohort_placement(spec: HierarchySpec, quotas, num_shards: int) -> ShardPlacement:
+    """Edge-aligned shard placement for a stratified cohort's *slot* axis.
+
+    ``plan_shard_placement`` over :func:`cohort_hierarchy`: whole root-child
+    subtrees of slots pack onto shards, so every sub-top cohort sync stays
+    device-local and the placement is reused for every sampled cohort
+    (placement-stable packing). The returned placement's ``spec`` is the
+    slot tree (``num_clients == sum(quotas)``); at ``cohort == population``
+    the quotas equal the edge sizes and this is exactly
+    ``plan_shard_placement(spec, num_shards)``.
+    """
+    return plan_shard_placement(cohort_hierarchy(spec, quotas), num_shards)
+
+
 def parse_fanouts(text: str) -> HierarchySpec:
     """Parse a CLI fan-out string, bottom-up, levels separated by '/'.
 

@@ -42,7 +42,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import aggregation
-from repro.core.hierarchy import HierarchySpec, ShardPlacement, as_hierarchy, plan_shard_placement
+from repro.core.hierarchy import (
+    HierarchySpec,
+    ShardPlacement,
+    as_hierarchy,
+    plan_cohort_placement,
+    plan_shard_placement,
+)
 from repro.optim import GradientTransformation, apply_updates
 
 PyTree = Any
@@ -1329,6 +1335,18 @@ def cohort_incompatibility(
         return "a robust statistic over a sampled cohort is not the population statistic"
     if not 1 <= int(cohort_size) <= spec.num_clients:
         return f"cohort_size {cohort_size} outside 1..{spec.num_clients} (population)"
+    part = config.participation
+    if part is not None and getattr(part, "sampler", None) == "stratified" and spec.depth >= 2:
+        num_edges = spec.num_nodes(1)
+        if int(cohort_size) < num_edges:
+            # the floor-1-per-alive-edge quota would otherwise over-allocate;
+            # reject at eligibility time, naming both numbers, instead of
+            # surfacing deep inside sampler construction
+            return (
+                f"stratified sampling needs cohort_size >= num_edges "
+                f"({cohort_size} < {num_edges}): every alive edge gets a "
+                f"floor-1 quota, so a smaller cohort cannot cover the edges"
+            )
     return None
 
 
@@ -1360,13 +1378,19 @@ def _build_cohort_level_sync(spec: HierarchySpec, config: HierFAVGConfig, level:
     clients thus carry exactly zero weight in every edge/cloud mean — the
     partial-participation HierFAVG semantics.
 
-    The op-for-op body matches ``build_level_sync`` with ``mask=None``. The
-    top stage is cohort-independent (every member maps to the single root),
-    so its ids stay static and keep the contiguous-reshape fast path —
-    bit-identical to the full-population top stage. Sub-top stages use the
-    traced ids' ``segment_sum`` path: bit-identical to the static lowering
-    on ragged topologies (same op), within 1 ULP on uniform ones (where the
-    static path takes the reshape shortcut instead).
+    The op-for-op body matches ``build_level_sync``. The top stage is
+    cohort-independent (every member maps to the single root), so its ids
+    stay static and keep the contiguous-reshape fast path — bit-identical
+    to the full-population top stage. Sub-top stages use the traced ids'
+    ``segment_sum`` path: bit-identical to the static lowering on ragged
+    topologies (same op), within 1 ULP on uniform ones (where the static
+    path takes the reshape shortcut instead).
+
+    ``mask`` is an optional (C,) survival vector over the *cohort* columns
+    (the failure model's population mask gathered at the sampled ids):
+    masked members carry zero weight at every staged level — exactly the
+    ``hierarchical_segment_mean`` mask semantics, so at C == N the masked
+    cohort sync reproduces the masked full-population sync.
     """
     depth = spec.depth
     is_top = level == depth
@@ -1380,15 +1404,15 @@ def _build_cohort_level_sync(spec: HierarchySpec, config: HierFAVGConfig, level:
     def seg(cohort, t):
         return top_ids if t == depth else cohort["segments"][t - 1]
 
-    def stage(tree, cohort, upto):
+    def stage(tree, cohort, upto, mask):
         out = tree
         for t in range(1, upto + 1):
             out = aggregation.segment_weighted_mean(
-                out, cohort["weights"], seg(cohort, t), spec.num_nodes(t), None
+                out, cohort["weights"], seg(cohort, t), spec.num_nodes(t), mask
             )
         return out
 
-    def level_sync(state: FedState, cohort) -> FedState:
+    def level_sync(state: FedState, cohort, mask: Optional[jnp.ndarray] = None) -> FedState:
         uploaded = state.params
         residual = state.residual
         if codec is not None:
@@ -1402,21 +1426,23 @@ def _build_cohort_level_sync(spec: HierarchySpec, config: HierFAVGConfig, level:
                 state.anchor, delta_hat, state.params,
             )
         if is_top and config.delta_cloud and state.anchor is not None:
-            agg = lambda t: aggregation.delta_weighted_mean(t, state.anchor, cohort["weights"], None)
+            agg = lambda t: aggregation.delta_weighted_mean(t, state.anchor, cohort["weights"], mask)
             params = agg(uploaded)
             anchor = jax.tree_util.tree_map(jnp.copy, params)
         else:
-            agg = lambda t: stage(t, cohort, level)
+            agg = lambda t: stage(t, cohort, level, mask)
             params = agg(uploaded)
             if config.transport_active:
                 anchor = jax.tree_util.tree_map(jnp.copy, params)
             else:
                 anchor = state.anchor
         if codec is not None:
-            # every cohort member uploads and receives (weights are > 0 for
-            # sampled clients); the keep-dead plumbing is kept structurally
+            # every unmasked cohort member uploads and receives (weights are
+            # > 0 for sampled clients); the keep-dead plumbing is structurally
             # identical to build_level_sync so the graphs only differ in ids
             w_eff = cohort["weights"].astype(jnp.float32)
+            if mask is not None:
+                w_eff = w_eff * mask.astype(jnp.float32)
             seg_l = jnp.asarray(seg(cohort, level), jnp.int32)
             received = jnp.take(
                 jax.ops.segment_sum(w_eff, seg_l, spec.num_nodes(level)) > 0, seg_l
@@ -1453,13 +1479,16 @@ def build_cohort_super_round(
 ):
     """``build_super_round`` for a sampled cohort of C clients.
 
-        super_round(state, batches, cohort) -> (state, metrics)
+        super_round(state, batches, cohort, masks=None) -> (state, metrics)
 
     ``state`` stacks C rows (``init_cohort_state``); batch leaves carry a
     leading (κ₂, κ₁) axis pair over cohort-shaped per-step batches;
     ``cohort`` is the traced ``{"segments": (depth-1, C), "weights": (C,)}``
-    pytree a ``CohortPrefetcher`` assembles per cloud interval. Because the
-    cohort arrays are inputs rather than constants, resampling never
+    pytree a ``CohortPrefetcher`` assembles per cloud interval; ``masks`` is
+    an optional (κ₂, C) stack of survival vectors over the cohort columns
+    (failure/straggler draws gathered at the sampled ids — participation
+    and survival compose by masking the cohort's weight columns). Because
+    the cohort arrays are inputs rather than constants, resampling never
     recompiles — the executable is reused across every interval.
 
     With the identity cohort (C == N, weights/segments of the full
@@ -1478,16 +1507,22 @@ def build_cohort_super_round(
     ]
     deepest_per_round = jnp.asarray(super_round_schedule(config), jnp.int32)
 
-    def super_round(state: FedState, batches: PyTree, cohort):
+    def super_round(state: FedState, batches: PyTree, cohort, masks: Optional[jnp.ndarray] = None):
         def round_body(s, xs):
-            deepest, batch_r = xs
+            if masks is None:
+                deepest, batch_r = xs
+                mask_r = None
+            else:
+                deepest, batch_r, mask_r = xs
 
             def step_body(ss, b):
                 ss, m = local_step(ss, b)
                 return ss, (m["loss"], m["grad_norm"])
 
             s, (losses, gnorms) = jax.lax.scan(step_body, s, batch_r)
-            branches = [(lambda sync: lambda st: sync(st, cohort))(sync) for sync in level_syncs]
+            branches = [
+                (lambda sync: lambda st: sync(st, cohort, mask_r))(sync) for sync in level_syncs
+            ]
             s = jax.lax.switch(deepest - 1, branches, s)
             metrics = {
                 "loss": jnp.mean(losses),
@@ -1496,7 +1531,10 @@ def build_cohort_super_round(
             }
             return s, metrics
 
-        return jax.lax.scan(round_body, state, (deepest_per_round, batches))
+        xs = (deepest_per_round, batches)
+        if masks is not None:
+            xs = xs + (masks,)
+        return jax.lax.scan(round_body, state, xs)
 
     return super_round
 
@@ -1680,5 +1718,254 @@ def build_sharded_super_round(
             out_specs=(state_specs, metric_specs), check_rep=False,
         )
         return fn(state, batches, masks)
+
+    return super_round
+
+
+# ---------------------------------------------------------------------------
+# Sharded cohort lowering (population scale x device scale)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class _CohortSharding(ClientSharding):
+    """``ClientSharding`` over a sampled cohort's *slot* axis.
+
+    Placement-stable packing makes the slot layout — and so every local
+    segment table — static (a pure function of topology, cohort size, and
+    mesh), but the aggregation weights are the sampled cohort's weight
+    columns, traced per interval. ``weights_table`` is repurposed as a
+    one-slot mutable cell the ``shard_map`` body fills with this shard's
+    traced (capacity,) weight slice before any level sync traces.
+    """
+
+    def bind_local_weights(self, w_local) -> None:
+        self.weights_table[0] = w_local
+
+    def local_weights(self):
+        w = self.weights_table[0]
+        if w is None:
+            raise RuntimeError(
+                "cohort shard weights are bound inside the shard_map body; "
+                "call bind_local_weights first"
+            )
+        return w
+
+
+def _cohort_quotas(spec: HierarchySpec, cohort_size: int) -> np.ndarray:
+    """Per-level-1-node stratified slot quotas — the pure function of
+    (topology, cohort_size) that placement-stable packing rests on."""
+    if spec.depth == 1:
+        return np.asarray([int(cohort_size)], np.int64)
+    from repro.fed.participation import stratified_quotas
+
+    return stratified_quotas(spec.group_sizes(1), int(cohort_size))
+
+
+def sharded_cohort_incompatibility(
+    config: HierFAVGConfig,
+    topology: Topology,
+    cohort_size: int,
+    num_shards: int,
+    placement: Optional[ShardPlacement] = None,
+) -> Optional[str]:
+    """Why this schedule cannot run cohort-sampled AND client-sharded over
+    ``num_shards`` devices — None when it can.
+
+    Mirrors ``sharding_incompatibility``/``cohort_incompatibility``: the
+    single predicate both ``build_sharded_cohort_super_round`` (raises) and
+    the runner's eligibility dispatch (reports) consult. Pass ``placement``
+    to validate the cohort slot placement that will actually run.
+    """
+    spec = as_hierarchy(topology)
+    reason = cohort_incompatibility(config, spec, cohort_size)
+    if reason is not None:
+        return reason
+    part = config.participation
+    if part is not None and getattr(part, "sampler", None) != "stratified" and spec.depth >= 2:
+        return (
+            f"sharded cohorts need the stratified sampler (placement-stable "
+            f"per-edge quotas fix the slot->shard layout); got "
+            f"{getattr(part, 'sampler', None)!r}"
+        )
+    if config.delta_cloud and config.sync_opt_state:
+        return "delta_cloud + sync_opt_state do not compose (the opt tree has no anchor)"
+    try:
+        quotas = _cohort_quotas(spec, cohort_size)
+    except ValueError as e:
+        return str(e)
+    if placement is None:
+        try:
+            plan_cohort_placement(spec, quotas, num_shards)
+        except ValueError as e:
+            return str(e)
+    else:
+        from repro.core.hierarchy import cohort_hierarchy
+
+        slot_spec = cohort_hierarchy(spec, quotas)
+        if placement.num_shards != num_shards or placement.spec != slot_spec:
+            return (
+                f"placement was planned for {placement.num_shards} shard(s) over "
+                f"{placement.spec.describe()}, not {num_shards} shard(s) over "
+                f"the {slot_spec.describe()} cohort slot tree"
+            )
+    return None
+
+
+def build_sharded_cohort_super_round(
+    loss_fn: LossFn,
+    optimizer: GradientTransformation,
+    topology: Topology,
+    config: HierFAVGConfig,
+    *,
+    cohort_size: int,
+    mesh,
+    axis: str = "clients",
+    placement: Optional[ShardPlacement] = None,
+    grad_accum: int = 1,
+):
+    """``build_cohort_super_round`` with the cohort's slot axis sharded over
+    ``mesh``'s ``axis`` — population scale and device scale multiply.
+
+    **Placement-stable packing.** Under stratified sampling the per-edge
+    cohort quotas are a pure function of (topology, cohort_size)
+    (``fed.participation.stratified_quotas``), so the cohort's *slot* tree
+    (``core.hierarchy.cohort_hierarchy``) — slot j always reports to the
+    same edge — and the edge-aligned shard placement planned from it
+    (``plan_cohort_placement``) are computed once and reused for every
+    sampled cohort. Per-interval sampling only changes which client fills
+    each fixed per-edge slot: segment tables stay static (keeping the
+    uniform reshape fast paths), and only the (padded_C,) weight vector is
+    traced. Phantom slots (LPT packing pad) carry zero weight.
+
+        super_round(state, batches, weights, masks=None) -> (state, metrics)
+
+    Inputs are in *slot placement order*, permuted by
+    ``placement.gather_index()`` and padded to ``placement.padded_clients``
+    (``fed.engine.CohortEngine`` owns the conversion): state stacks
+    padded_C rows, batch leaves carry (κ₂, κ₁, padded_C, b, ...),
+    ``weights`` is the (padded_C,) sampled weight vector (phantoms zero),
+    ``masks`` an optional (κ₂, padded_C) survival stack. Sub-top syncs are
+    device-local segment means adding members in the single-device cohort
+    order (bit-exact); each cloud boundary issues exactly one grouped psum
+    (documented rtol=3e-6 reassociation tolerance). Per-slot RNG streams
+    reproduce the single-device cohort engine's position-keyed streams
+    exactly (hoisted split table gathered at slot ids — at C == N these are
+    the original client ids, matching ``build_sharded_super_round``).
+    Metrics stay per-client: ``{"loss": (κ₂, κ₁, padded_C), "gsq": (κ₂,
+    κ₁, padded_C), "step": (κ₂,)}``, reduced host-side at flush.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    spec = as_hierarchy(topology)
+    depth = _check_levels(spec, config)
+    num_shards = int(mesh.shape[axis])
+    reason = sharded_cohort_incompatibility(
+        config, spec, cohort_size, num_shards, placement=placement
+    )
+    if reason is not None:
+        raise ValueError(f"schedule cannot run sharded-cohort: {reason}")
+    if placement is None:
+        placement = plan_cohort_placement(spec, _cohort_quotas(spec, cohort_size), num_shards)
+    shard = _CohortSharding(axis=axis, placement=placement, weights_table=[None])
+    microbatch_grads = _build_microbatch_grads(_apply_precision(loss_fn, config.precision), grad_accum)
+    level_syncs = []
+    for lvl in range(1, depth + 1):
+        codec = None
+        if config.transport_active:
+            codec = config.transport.codec(lvl)
+            if codec.is_identity:
+                codec = None
+        # robust is always None here: cohort_incompatibility rejects
+        # non-default aggregators before this point
+        level_syncs.append(
+            _build_sharded_level_sync(placement.spec, config, lvl, codec, None, shard)
+        )
+    deepest_per_round = jnp.asarray(super_round_schedule(config), jnp.int32)
+    slots_table = shard.client_ids_table()  # (num_shards, capacity) slot ids
+    c = int(cohort_size)
+    c_padded = placement.padded_clients
+
+    def local_step(s: FedState, batch: PyTree, rngs):
+        grads, losses = microbatch_grads(s.params, batch, rngs)
+        updates, opt_state = optimizer.update(grads, s.opt_state, s.params)
+        params = apply_updates(s.params, updates)
+        gsq = sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)), axis=tuple(range(1, g.ndim)))
+            for g in jax.tree_util.tree_leaves(grads)
+        )
+        return (
+            FedState(
+                step=s.step + 1, params=params, opt_state=opt_state, rng=s.rng,
+                anchor=s.anchor, residual=s.residual,
+            ),
+            losses.astype(jnp.float32),
+            gsq,
+        )
+
+    def body(state: FedState, batches: PyTree, weights, masks):
+        shard.bind_local_weights(weights)
+        slots = _shard_row(slots_table, axis)
+        k1 = config.kappa1
+        k2 = len(super_round_schedule(config))
+        # hoisted per-step key table (see build_sharded_super_round): the
+        # single-device cohort chain is (rng, step_rng = split(rng);
+        # split(step_rng, C)) keyed by cohort POSITION; reproducing it here
+        # via a scan of splits + a gather of this shard's slot ids is
+        # bit-exact (phantoms reuse slot 0's key, their weight is zero)
+        def split_body(cc, _):
+            cc, s = jax.random.split(cc)
+            return cc, s
+
+        rng_out, step_keys = jax.lax.scan(split_body, state.rng, None, length=k1 * k2)
+        local_keys = jax.vmap(
+            lambda k: jnp.take(jax.random.split(k, c), slots, axis=0)
+        )(step_keys)
+        local_keys = local_keys.reshape((k2, k1) + local_keys.shape[1:])
+        state = state._replace(rng=rng_out)
+
+        def round_body(s, xs):
+            if masks is None:
+                deepest, batch_r, keys_r = xs
+                mask_r = None
+            else:
+                deepest, batch_r, keys_r, mask_r = xs
+
+            def step_body(ss, bk):
+                b, rngs = bk
+                ss, losses, gsq = local_step(ss, b, rngs)
+                return ss, (losses, gsq)
+
+            s, (losses, gsqs) = jax.lax.scan(step_body, s, (batch_r, keys_r))
+            branches = [(lambda sync: lambda st: sync(st, mask_r))(sync) for sync in level_syncs]
+            s = jax.lax.switch(deepest - 1, branches, s)
+            return s, {"loss": losses, "gsq": gsqs, "step": s.step}
+
+        xs = (deepest_per_round, batches, local_keys)
+        if masks is not None:
+            xs = xs + (masks,)
+        return jax.lax.scan(round_body, state, xs)
+
+    client_dim = 2 + (1 if grad_accum > 1 else 0)
+    batch_spec = P(*([None] * client_dim + [axis]))
+
+    def super_round(state: FedState, batches: PyTree, weights, masks: Optional[jnp.ndarray] = None):
+        state_specs = fed_state_partition_specs(state, axis, c_padded)
+        batch_specs = jax.tree_util.tree_map(lambda _: batch_spec, batches)
+        metric_specs = {"loss": P(None, None, axis), "gsq": P(None, None, axis), "step": P()}
+        if masks is None:
+            fn = shard_map(
+                lambda s, b, w: body(s, b, w, None), mesh=mesh,
+                in_specs=(state_specs, batch_specs, P(axis)),
+                out_specs=(state_specs, metric_specs), check_rep=False,
+            )
+            return fn(state, batches, weights)
+        fn = shard_map(
+            body, mesh=mesh,
+            in_specs=(state_specs, batch_specs, P(axis), P(None, axis)),
+            out_specs=(state_specs, metric_specs), check_rep=False,
+        )
+        return fn(state, batches, weights, masks)
 
     return super_round

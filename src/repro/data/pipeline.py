@@ -408,12 +408,22 @@ class CohortPrefetcher(SuperBatchPrefetcher):
         device=None,
         prefetch: int = 1,
         use_thread: bool = True,
+        placement=None,
+        weights_device=None,
     ):
         # fields first: the base __init__ starts the worker thread, which
         # calls our _make_block immediately
         self.sampler = sampler
         self._segments = np.ascontiguousarray(np.asarray(segments, np.int32))
         self._weights = np.asarray(weights, np.float32)
+        # sharded-cohort mode: with a `placement` (cohort ShardPlacement) the
+        # worker permutes the block's client axis into slot placement order,
+        # pads, and uploads per-device slices — `device` is then the block's
+        # NamedSharding and `weights_device` the (padded_C,) row sharding.
+        # Segments are not uploaded: placement-stable packing makes every
+        # segment table static in the sharded lowering.
+        self._placement = placement
+        self._weights_device = weights_device
         super().__init__(
             batcher,
             rounds_per_block=rounds_per_block,
@@ -435,11 +445,20 @@ class CohortPrefetcher(SuperBatchPrefetcher):
             ),
             flat,
         )
-        cohort = {
-            "segments": self._segments[:, ids],
-            "weights": self._weights[ids],
-        }
-        cohort, block = jax.device_put((cohort, block), self.device)  # async upload
+        if self._placement is not None:
+            # slot placement order: phantom slots replicate slot 0's batch
+            # (their weight is zero), matching the sharded superround's pad
+            gather = self._placement.gather_index()
+            block = jax.tree_util.tree_map(lambda x: x[:, :, gather], block)
+            cohort = {"weights": self._placement.pad_weights(self._weights[ids])}
+            block = jax.device_put(block, self.device)  # async per-device upload
+            cohort = jax.device_put(cohort, self._weights_device)
+        else:
+            cohort = {
+                "segments": self._segments[:, ids],
+                "weights": self._weights[ids],
+            }
+            cohort, block = jax.device_put((cohort, block), self.device)  # async upload
         snapshot = {
             "batcher": self.batcher.state_dict(),
             "sampler": self.sampler.state_dict(),

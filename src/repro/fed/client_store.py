@@ -124,6 +124,25 @@ class ClientStateStore:
             arr[idx] = host.astype(arr.dtype, copy=False)
         self._touched[idx] = True
 
+    # -- the sharded cohort swap ---------------------------------------------
+
+    def gather_placed(self, ids: Sequence[int], placement) -> PyTree:
+        """Rows for a sampled cohort in *slot placement order*: gather by
+        original client id, then permute/pad by ``placement.gather_index()``
+        so leaf leading axes are ``placement.padded_clients``. Phantom slots
+        read slot 0's client — their weight is zero, so the values are inert
+        and scatter_placed drops them on the way back."""
+        idx = np.asarray(ids, np.int64)[placement.gather_index()]
+        return jax.tree_util.tree_unflatten(self._treedef, [a[idx] for a in self._arrays])
+
+    def scatter_placed(self, ids: Sequence[int], placement, rows: PyTree) -> None:
+        """Inverse of :func:`gather_placed`: un-permute padded rows back to
+        sampled-id order (``placement.positions()`` drops phantoms), then
+        scatter by original client id."""
+        pos = placement.positions()
+        rows = jax.tree_util.tree_map(lambda x: np.asarray(x)[pos], rows)
+        self.scatter(ids, rows)
+
     # -- checkpointing -------------------------------------------------------
 
     def state(self) -> Dict[str, Any]:

@@ -344,6 +344,16 @@ class CohortEngine:
     cohort (C == N) the trajectory reproduces ``SuperRoundEngine``'s —
     that's the parity anchor the tests pin.
 
+    **Mesh execution** — with a runner mesh the engine swaps in
+    ``core.hierfavg.build_sharded_cohort_super_round``: stratified quotas
+    make the cohort's slot→edge layout a pure function of (topology,
+    cohort_size), so the slot ``ShardPlacement`` is planned once and every
+    sampled cohort reuses one executable and one layout. The prefetcher
+    permutes/pads blocks into slot order and ``device_put``s per-device
+    slices; store rows ride ``gather_placed``/``scatter_placed``; per-shard
+    memory is ∝ C / num_shards. Survival masks compose with sampling on
+    both paths by masking the cohort's weight columns.
+
     History/eval/checkpoint cadences are cloud-interval-granular like the
     superround engine; the per-round fallback does not exist here (the
     runner validates cadences up front). Checkpoints save the composite
@@ -360,17 +370,94 @@ class CohortEngine:
         self.prefetch = prefetch
         self.cohort_size = int(hier.participation.cohort_size)
         self.spec = as_hierarchy(runner.topology)
-        fn = build_cohort_super_round(
-            runner.loss_fn,
-            runner.optimizer,
-            runner.topology,
-            hier,
-            cohort_size=self.cohort_size,
-            grad_accum=runner.grad_accum,
-        )
+        self.mesh = runner.mesh
+        self.placement = None
+        self._weights_np = np.asarray(runner.weights, np.float32)
+        if self.mesh is not None:
+            from repro.core.hierfavg import (
+                _cohort_quotas,
+                build_sharded_cohort_super_round,
+            )
+            from repro.dist import sharding as dist_sharding
+
+            self.axis = dist_sharding.client_axis_of(self.mesh)
+            num_shards = int(self.mesh.shape[self.axis])
+            # the runner plans (and caches) the cohort slot placement during
+            # eligibility; replan only for directly constructed engines
+            self.placement = getattr(runner, "_cohort_placement", None)
+            if self.placement is None or self.placement.num_shards != num_shards:
+                from repro.core.hierarchy import plan_cohort_placement
+
+                self.placement = plan_cohort_placement(
+                    self.spec, _cohort_quotas(self.spec, self.cohort_size), num_shards
+                )
+            fn = build_sharded_cohort_super_round(
+                runner.loss_fn,
+                runner.optimizer,
+                runner.topology,
+                hier,
+                cohort_size=self.cohort_size,
+                mesh=self.mesh,
+                axis=self.axis,
+                placement=self.placement,
+                grad_accum=runner.grad_accum,
+            )
+            self._gather = self.placement.gather_index()
+            self._positions = self.placement.positions()
+            self._valid = self.placement.valid()
+            self._block_sharding = dist_sharding.batch_block_sharding(self.mesh, self.axis)
+            self._mask_sharding = dist_sharding.mask_stack_sharding(self.mesh, self.axis)
+            from jax.sharding import NamedSharding, PartitionSpec
+
+            self._row_sharding = NamedSharding(self.mesh, PartitionSpec(self.axis))
+        else:
+            fn = build_cohort_super_round(
+                runner.loss_fn,
+                runner.optimizer,
+                runner.topology,
+                hier,
+                cohort_size=self.cohort_size,
+                grad_accum=runner.grad_accum,
+            )
         self._super = jax.jit(fn, donate_argnums=(0,) if donate else ())
-        # [(round_base, device metrics)] — {"loss","grad_norm","step"} (κ₂,)
-        self._pending: List[Tuple[int, dict]] = []
+        # [(round_base, [alive...], device metrics)] — single-device metrics
+        # are {"loss","grad_norm","step"} (κ₂,) scalars; mesh metrics are
+        # per-client {"loss","gsq"} (κ₂, κ₁, padded_C) + "step" (κ₂,)
+        self._pending: List[Tuple[int, List[int], dict]] = []
+
+    # -- slot-placement layout conversion (mesh path) -----------------------
+    @property
+    def _state_rows(self) -> int:
+        """Leading stacked dim of the live state: C single-device,
+        padded_C on the mesh path."""
+        return self.cohort_size if self.mesh is None else self.placement.padded_clients
+
+    def _shard_state(self, state: FedState) -> FedState:
+        """Canonical (C, ...) cohort state -> slot-placement-ordered padded
+        state laid out with the engine's NamedShardings."""
+        from repro.dist.sharding import fed_state_shardings
+
+        gather = jnp.asarray(self._gather)
+        padded = _map_stacked(state, lambda x: jnp.take(x, gather, axis=0), self.cohort_size)
+        shardings = fed_state_shardings(
+            self.mesh, self.axis, padded, self.placement.padded_clients
+        )
+        return jax.device_put(padded, shardings)
+
+    def _unshard_state(self, state: FedState) -> FedState:
+        """Slot-placement-ordered padded state -> canonical cohort order on
+        the default device (phantom rows dropped)."""
+        pos = jnp.asarray(self._positions)
+        out = _map_stacked(
+            state, lambda x: jnp.take(x, pos, axis=0), self.placement.padded_clients
+        )
+        return jax.device_put(out, jax.devices()[0])
+
+    def _canonical_params(self, state: FedState) -> PyTree:
+        if self.mesh is None:
+            return state.params
+        pos = jnp.asarray(self._positions)
+        return jax.tree_util.tree_map(lambda x: jnp.take(x, pos, axis=0), state.params)
 
     # ------------------------------------------------------------------
     def _segments_table(self) -> np.ndarray:
@@ -381,13 +468,36 @@ class CohortEngine:
             return np.zeros((0, self.spec.num_clients), np.int32)
         return np.stack([np.asarray(self.spec.segments(l), np.int32) for l in range(1, depth)])
 
+    def _masks_for_interval(self, ids: np.ndarray):
+        """κ₂ survival draws over the population, columned at the sampled
+        ids: participation and failure compose by masking the cohort's
+        weight columns. Returns (device mask stack | None, per-round alive
+        counts, last round's cohort columns for the boundary eval)."""
+        r = self.runner
+        masks = [r._mask_for_round() for _ in range(self.k2)]
+        if all(m is None for m in masks):
+            return None, [self.cohort_size] * self.k2, None
+        n = r.topology.num_clients
+        stack = np.stack([m if m is not None else np.ones(n, np.float32) for m in masks])
+        cols = stack[:, ids]  # (κ₂, C) — the sampled cohort's survival bits
+        alive = [int(row.sum()) for row in cols]
+        if self.mesh is None:
+            return jnp.asarray(cols), alive, cols[-1]
+        padded = cols[:, self._gather] * self._valid[None, :].astype(cols.dtype)
+        return jax.device_put(jnp.asarray(padded), self._mask_sharding), alive, cols[-1]
+
     def _load_cohort(self, state: FedState, ids: np.ndarray) -> FedState:
         """Swap the sampled clients' sticky rows in from the host store."""
         store = self.runner.client_store
         if store.is_empty:
             return state
-        rows = jax.device_put(store.gather(ids))
-        return replace_sticky_rows(state, rows, self.cohort_size)
+        if self.mesh is None:
+            rows = jax.device_put(store.gather(ids))
+        else:
+            rows = jax.device_put(
+                store.gather_placed(ids, self.placement), self._row_sharding
+            )
+        return replace_sticky_rows(state, rows, self._state_rows)
 
     def _writeback(self, state: FedState, ids: np.ndarray) -> None:
         """Persist the cohort's post-interval sticky rows by original id.
@@ -396,19 +506,30 @@ class CohortEngine:
         store = self.runner.client_store
         if store.is_empty:
             return
-        store.scatter(ids, jax.device_get(sticky_rows(state, self.cohort_size)))
+        rows = jax.device_get(sticky_rows(state, self._state_rows))
+        if self.mesh is None:
+            store.scatter(ids, rows)
+        else:
+            store.scatter_placed(ids, self.placement, rows)
 
     def _flush(self, wire_per_step: float) -> None:
         r = self.runner
-        for round_base, metrics in self._pending:
+        for round_base, alive, metrics in self._pending:
             vals = jax.device_get(metrics)
             for j in range(self.k2):
+                if self.mesh is None:
+                    loss = float(vals["loss"][j])
+                    gnorm = float(vals["grad_norm"][j])
+                else:
+                    loss = float(np.mean(vals["loss"][j][:, self._valid]))
+                    gsq = vals["gsq"][j][:, self._valid]  # (κ₁, C)
+                    gnorm = float(np.mean(np.sqrt(np.sum(gsq, axis=1))))
                 r._record_round(
                     round_base + j,
                     int(vals["step"][j]),
-                    float(vals["loss"][j]),
-                    float(vals["grad_norm"][j]),
-                    self.cohort_size,
+                    loss,
+                    gnorm,
+                    alive[j],
                     wire_per_step,
                 )
         self._pending.clear()
@@ -427,25 +548,49 @@ class CohortEngine:
             )
         r._ensure_client_store(state)
         wire_per_step = r._wire_bytes_per_step(state)
+        if self.mesh is not None:
+            state = self._shard_state(state)
         stopped = False
+        # no failure model -> skip the κ₂ detector calls per interval; an
+        # overridden/monkeypatched _mask_for_round is a live seam, so only
+        # the stock implementation is hoisted (same idiom as the superround
+        # engine above)
+        from repro.fed.runner import FederatedRunner
+
+        no_failures = (
+            r.failures is None
+            and r.stragglers is None
+            and getattr(r._mask_for_round, "__func__", None)
+            is FederatedRunner._mask_for_round
+        )
+        static_masks = (None, [self.cohort_size] * self.k2, None)
         prefetcher = CohortPrefetcher(
             r.batcher,
             r._cohort_sampler(),
             segments=self._segments_table(),
-            weights=np.asarray(r.weights, np.float32),
+            weights=self._weights_np,
             rounds_per_block=self.k2,
             steps_per_round=self.k1,
             num_blocks=num_intervals,
+            device=self._block_sharding if self.mesh is not None else None,
             use_thread=self.prefetch,
+            placement=self.placement,
+            weights_device=self._row_sharding if self.mesh is not None else None,
         )
         try:
             for q in range(num_intervals):
                 round_base = start_round + q * self.k2
                 (ids, cohort, block), snapshot = prefetcher.get()
+                mask_dev, alive, last_mask = (
+                    static_masks if no_failures else self._masks_for_interval(ids)
+                )
                 state = self._load_cohort(state, ids)
-                state, metrics = self._super(state, block, cohort)
+                if self.mesh is None:
+                    state, metrics = self._super(state, block, cohort, mask_dev)
+                else:
+                    state, metrics = self._super(state, block, cohort["weights"], mask_dev)
                 self._writeback(state, ids)
-                self._pending.append((round_base, metrics))
+                self._pending.append((round_base, alive, metrics))
 
                 end_round = round_base + self.k2
                 do_eval = (
@@ -464,7 +609,12 @@ class CohortEngine:
                 if do_eval:
                     # cohort-weighted cloud model; with C == N this is
                     # bit-identical to the runner's full-population eval
-                    cloud0 = aggregation.cloud_model(state.params, cohort["weights"])
+                    mask_last = None if last_mask is None else jnp.asarray(last_mask)
+                    cloud0 = aggregation.cloud_model(
+                        self._canonical_params(state),
+                        jnp.asarray(self._weights_np[ids]),
+                        mask_last,
+                    )
                     acc = float(r.eval_fn(cloud0))
                     r.history[-1].accuracy = acc
                 if do_ckpt:
@@ -473,7 +623,12 @@ class CohortEngine:
                         "batcher": snapshot["batcher"],
                         "sampler": snapshot["sampler"],
                     }
-                    save_state = {"fed": state, "store": r.client_store.state()}
+                    if r.failures is not None:
+                        # mask draws for this interval already happened, so
+                        # the simulator state resumes at exactly end_round
+                        meta["failures"] = r.failures.state_dict()
+                    fed = state if self.mesh is None else self._unshard_state(state)
+                    save_state = {"fed": fed, "store": r.client_store.state()}
                     r.checkpointer.save(r.history[-1].step, save_state, meta)
                 if acc is not None and r.cfg.target_accuracy and acc >= r.cfg.target_accuracy:
                     stopped = True
@@ -481,4 +636,6 @@ class CohortEngine:
             self._flush(wire_per_step)
         finally:
             prefetcher.stop()
+        if self.mesh is not None:
+            state = self._unshard_state(state)
         return state, stopped

@@ -40,6 +40,7 @@ __all__ = [
     "RoundRobinSampler",
     "StratifiedSampler",
     "stratified_quotas",
+    "stratified_slot_edges",
     "build_sampler",
 ]
 
@@ -182,6 +183,22 @@ def stratified_quotas(edge_sizes: np.ndarray, cohort_size: int) -> np.ndarray:
             quota[order[:remaining]] += 1
         else:
             quota[open_ix] += add
+
+
+def stratified_slot_edges(edge_sizes: np.ndarray, cohort_size: int) -> np.ndarray:
+    """(cohort_size,) edge id owning each cohort *slot* under stratified
+    sampling.
+
+    Because edges are contiguous sorted id ranges and the per-edge quotas
+    are fixed, every sorted stratified cohort fills the same slot→edge
+    layout: slot j belongs to the edge whose quota block covers j. This is
+    the placement-stability contract the sharded cohort lowering builds on —
+    the slot layout (and hence the shard placement planned from it) is a
+    pure function of (topology, cohort_size), independent of which clients
+    the sampler draws each interval.
+    """
+    quotas = stratified_quotas(edge_sizes, cohort_size)
+    return np.repeat(np.arange(quotas.shape[0], dtype=np.int64), quotas)
 
 
 class StratifiedSampler(CohortSampler):

@@ -147,6 +147,10 @@ class FederatedRunner:
         # plan it once and share it between eligibility checks and the engine
         self._placement = None
         self._placement_error: Optional[str] = None
+        # the cohort *slot* placement (sampled participation + mesh) is
+        # likewise pure in (topology, mesh, cohort_size): planned once
+        self._cohort_placement = None
+        self._cohort_placement_error: Optional[str] = None
         self._engine = None  # lazily built (and cached) SuperRoundEngine / CohortEngine
         # sampled participation: the active ParticipationSpec (or None), the
         # host-side ClientStateStore (built lazily from the first state seen,
@@ -199,6 +203,8 @@ class FederatedRunner:
                     self.batcher.load_state_dict(meta["batcher"])
                 if "sampler" in meta:
                     self._cohort_sampler().load_state_dict(meta["sampler"])
+                if self.failures is not None and "failures" in meta:
+                    self.failures.load_state_dict(meta["failures"])
                 return payload["fed"], int(meta.get("round", 0))
             return state, 0
         restored = self.checkpointer.restore_latest(state)
@@ -394,11 +400,46 @@ class FederatedRunner:
         self._megakernel_reason = reason
         return reason
 
+    def _plan_cohort_placement(self) -> Optional[str]:
+        """Plan (once) and validate the cohort *slot* placement for the
+        mesh; returns the incompatibility reason, or None with
+        ``self._cohort_placement`` populated for the engine to reuse.
+        Placement-stable packing: the slot layout is a pure function of
+        (topology, mesh, cohort_size), so one plan serves every interval."""
+        from repro.core.hierfavg import (
+            _cohort_quotas,
+            sharded_cohort_incompatibility,
+        )
+        from repro.dist.sharding import client_axis_of
+
+        axis = client_axis_of(self.mesh)
+        num_shards = int(self.mesh.shape[axis])
+        cohort_size = self.participation.cohort_size
+        if self._cohort_placement is None and self._cohort_placement_error is None:
+            from repro.core.hierarchy import plan_cohort_placement
+
+            spec = as_hierarchy(self.topology)
+            try:
+                self._cohort_placement = plan_cohort_placement(
+                    spec, _cohort_quotas(spec, cohort_size), num_shards
+                )
+            except ValueError as e:
+                self._cohort_placement_error = str(e)
+        if self._cohort_placement_error is not None:
+            return self._cohort_placement_error
+        return sharded_cohort_incompatibility(
+            self.hier_config, self.topology, cohort_size, num_shards,
+            placement=self._cohort_placement,
+        )
+
     def _cohort_reason(self, start_round: int) -> Optional[str]:
         """None if the run can go cohort-sampled end-to-end, else why not.
         There is no per-round fallback for sampled participation — the
         full-population state the per-round loop needs never exists — so
-        every constraint is a hard error, not a silent downgrade."""
+        every constraint is a hard error, not a silent downgrade.
+        Failure/straggler models compose (the engine masks the sampled
+        cohort's weight columns); a mesh composes through the sharded
+        cohort lowering when ``sharded_cohort_incompatibility`` clears it."""
         from repro.core.hierfavg import cohort_incompatibility
 
         k2 = self.hier_config.kappa2_effective
@@ -409,10 +450,14 @@ class FederatedRunner:
             return reason
         if self.cfg.engine == "per_round":
             return "engine='per_round' has no cohort lowering"
-        if self.mesh is not None or self._state_shardings is not None:
-            return "mesh execution is not supported with sampled participation yet"
-        if self.failures is not None or self.stragglers is not None:
-            return "failure/straggler models need full-population survival masks"
+        if self._state_shardings is not None:
+            return "an explicit state_shardings pytree pins the legacy per-round mesh path"
+        if self.mesh is not None:
+            if self.grad_accum > 1:
+                return "grad_accum > 1 has no sharded block layout yet"
+            reason = self._plan_cohort_placement()
+            if reason is not None:
+                return reason
         if start_round % k2:
             return f"start_round {start_round} is not a cloud boundary (kappa2_eff={k2})"
         if (self.cfg.num_rounds - start_round) % k2:

@@ -71,7 +71,8 @@ except ModuleNotFoundError:
                 size = int(rng.integers(min_size, max_size + 1))
                 return [elements.sample(rng) for _ in range(size)]
 
-            return _Strategy(sample, boundaries=([elements.boundaries[0]] * max(min_size, 1),))
+            # boundary must be hashable (dedup via dict.fromkeys) -> tuple
+            return _Strategy(sample, boundaries=(tuple([elements.boundaries[0]] * max(min_size, 1)),))
 
     st = _Strategies()
 
