@@ -11,6 +11,8 @@ benches no longer hand-wire ``FederatedRunner(...)`` constructors.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -99,6 +101,31 @@ def first_reach(runner, alpha):
         if h.accuracy is not None and h.accuracy >= alpha:
             return h.step, h.sim_time_s, h.sim_energy_j
     return None
+
+
+def merge_write_json(path, results, *, skip_empty=()):
+    """Merge-preserving bench JSON write: load the existing file (if any),
+    overwrite only the keys in ``results``, keep everything else. A key
+    named in ``skip_empty`` whose new value is falsy keeps its previously
+    recorded value — partial runs (``--smoke``, single-section reruns)
+    must not clobber another bench family's sweep. Returns the merged
+    dict as written."""
+    merged = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                merged = json.load(f)
+        except (OSError, ValueError):
+            merged = {}
+    if not isinstance(merged, dict):
+        merged = {}
+    for key, val in results.items():
+        if key in skip_empty and not val and key in merged:
+            continue
+        merged[key] = val
+    with open(path, "w") as f:
+        json.dump(merged, f, indent=2)
+    return merged
 
 
 def timed(fn, *args, iters=5, warmup=2):

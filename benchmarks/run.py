@@ -27,6 +27,7 @@ from benchmarks import (
     fig4_convergence,
     kernel_bench,
     roofline_report,
+    round_time_sim,
     steps_per_sec,
     table1_cost_model,
     table2_latency_energy,
@@ -41,6 +42,7 @@ BENCHES = {
     "aggregation_scaling": aggregation_scaling.main,
     "compression_tradeoff": compression_tradeoff.main,
     "roofline_report": roofline_report.main,
+    "round_time_sim": round_time_sim.main,
     "steps_per_sec": steps_per_sec.main,
 }
 

@@ -512,21 +512,11 @@ def main(argv=None):
     if args.json:
         # partial runs (--population, --devices-only smoke) merge into the
         # existing file rather than clobbering the other benches' keys
-        merged = {}
-        if os.path.exists(args.json):
-            try:
-                with open(args.json) as f:
-                    merged = json.load(f)
-            except (OSError, ValueError):
-                merged = {}
-        for key, val in results.items():
-            if key == "shapes" and not val:
-                continue  # keep the previously recorded sweep
-            merged[key] = val
+        from benchmarks.common import merge_write_json
+
+        merged = merge_write_json(args.json, results, skip_empty=("shapes",))
         if not isinstance(merged.get("shapes"), dict):
-            merged["shapes"] = shapes
-        with open(args.json, "w") as f:
-            json.dump(merged, f, indent=2)
+            merge_write_json(args.json, {"shapes": shapes})
         print(f"wrote {args.json}")
     if head is not None and head["speedup"] < 1.5:
         print(

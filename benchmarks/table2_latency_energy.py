@@ -9,11 +9,39 @@ kappa2; E is U-shaped) is the reproduction target.
 IIc [beyond paper]: the IIa edge-IID sweep rerun with an int8 cloud hop
 (``fed.transport``) — same schedules, ~¼ the DCN bytes, so the T_alpha
 accounting reflects the compressed wire.
+
+``--sim`` [beyond paper] appends stochastic percentile rows: each IIa
+point's T_alpha replayed by ``repro.sim`` under the ``congested_backhaul``
+network (10% of edges 8x slower + lognormal jitter), scaling the measured
+steps-to-accuracy by the round-time distribution. Rounds are treated as
+perfectly correlated (one network world per trial scales every interval
+alike) — a tail-heavy upper-bound reading, stated here once.
 """
 from benchmarks.common import first_reach, run_schedule
 
 
-def main(csv=True):
+def _sim_rows(k1, k2, steps, label, trials=200):
+    """p50/p99 T_alpha under the congested-backhaul network."""
+    import numpy as np
+
+    from repro.fed import scenarios
+    from repro.sim import simulate_spec
+
+    spec = scenarios.get(
+        "congested_backhaul", overrides=[f"schedule.kappas={k1},{k2}"]
+    )
+    res = simulate_spec(spec, trials=trials)
+    n_intervals = steps / (k1 * k2)
+    t_alpha = n_intervals * res.round_time
+    p50, p99 = np.percentile(t_alpha, [50.0, 99.0])
+    print(
+        f"table2sim_{label}_k1={k1}_k2={k2},trials={trials},"
+        f"T50={p50:.1f}s,T99={p99:.1f}s,tail_ratio={p99 / p50:.3f}"
+    )
+    return float(p50), float(p99)
+
+
+def main(csv=True, sim=False, sim_trials=200):
     print("# Table IIa (mnist costs, alpha=0.85)")
     rows = []
     for dist in ("edge_iid", "edge_niid"):
@@ -26,6 +54,8 @@ def main(csv=True):
             steps, T, E = hit
             rows.append((dist, k1, k2, steps, T, E))
             print(f"table2a_{dist}_k1={k1}_k2={k2},steps={steps},T={T:.1f}s,E={E:.2f}J")
+            if sim:
+                _sim_rows(k1, k2, steps, dist, trials=sim_trials)
 
     print("# Table IIc (mnist costs, alpha=0.85, edge IID, int8 cloud hop)")
     for k1, k2 in ((30, 2), (15, 4), (6, 10)):
@@ -52,4 +82,11 @@ def main(csv=True):
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sim", action="store_true",
+                    help="append stochastic T_alpha percentile rows (repro.sim)")
+    ap.add_argument("--sim-trials", type=int, default=200)
+    args = ap.parse_args()
+    main(sim=args.sim, sim_trials=args.sim_trials)

@@ -26,6 +26,8 @@ benchmark stand-in):
     aggregators  per-level aggregation statistic (``core.aggregation``)
     failures     failure / straggler injection
     cost         the paper's T/E cost model workload
+    network      per-entity cost distributions for the replay simulator
+                 (``repro.sim``; inert for training)
     run          rounds, cadences, engine, seeds
 
 Named paper configurations live in ``repro.fed.scenarios``; anything the
@@ -45,6 +47,7 @@ import numpy as np
 
 from repro.core.hierfavg import PrecisionSpec
 from repro.fed.participation import ParticipationSpec
+from repro.sim.distributions import NetworkSpec
 
 PyTree = Any
 
@@ -310,6 +313,7 @@ class ExperimentSpec:
     participation: ParticipationSpec = dataclasses.field(default_factory=ParticipationSpec)
     failures: FailureSpec = dataclasses.field(default_factory=FailureSpec)
     cost: CostSpec = dataclasses.field(default_factory=CostSpec)
+    network: NetworkSpec = dataclasses.field(default_factory=NetworkSpec)
     run: RunSpec = dataclasses.field(default_factory=RunSpec)
 
     def __post_init__(self):

@@ -313,6 +313,8 @@ class SuperRoundEngine:
                     meta = {"round": end_round, "batcher": batcher_snapshot}
                     if r.failures is not None:
                         meta["failures"] = r.failures.state_dict()
+                    if r.stragglers is not None:
+                        meta["stragglers"] = r.stragglers.state_dict()
                     save_state = state if self.mesh is None else self._unshard_state(state)
                     r.checkpointer.save(r.history[-1].step, save_state, meta)
                 if acc is not None and r.cfg.target_accuracy and acc >= r.cfg.target_accuracy:
@@ -627,6 +629,8 @@ class CohortEngine:
                         # mask draws for this interval already happened, so
                         # the simulator state resumes at exactly end_round
                         meta["failures"] = r.failures.state_dict()
+                    if r.stragglers is not None:
+                        meta["stragglers"] = r.stragglers.state_dict()
                     fed = state if self.mesh is None else self._unshard_state(state)
                     save_state = {"fed": fed, "store": r.client_store.state()}
                     r.checkpointer.save(r.history[-1].step, save_state, meta)

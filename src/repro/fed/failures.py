@@ -95,6 +95,15 @@ class StragglerModel:
         d = deadline if deadline is not None else self.deadline_for(kappa1)
         return (lat <= d).astype(np.float32), d
 
+    def state_dict(self):
+        # slowness rides along (it is drawn from the same stream at
+        # construction, so a resumed model must not redraw it)
+        return {"slowness": self.slowness.copy(), "rng": self._rng.bit_generator.state}
+
+    def load_state_dict(self, s):
+        self.slowness = s["slowness"].copy()
+        self._rng.bit_generator.state = s["rng"]
+
 
 @dataclasses.dataclass
 class SubtreeOutageSimulator:

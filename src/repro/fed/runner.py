@@ -205,6 +205,8 @@ class FederatedRunner:
                     self._cohort_sampler().load_state_dict(meta["sampler"])
                 if self.failures is not None and "failures" in meta:
                     self.failures.load_state_dict(meta["failures"])
+                if self.stragglers is not None and "stragglers" in meta:
+                    self.stragglers.load_state_dict(meta["stragglers"])
                 return payload["fed"], int(meta.get("round", 0))
             return state, 0
         restored = self.checkpointer.restore_latest(state)
@@ -214,6 +216,8 @@ class FederatedRunner:
                 self.batcher.load_state_dict(meta["batcher"])
             if self.failures is not None and "failures" in meta:
                 self.failures.load_state_dict(meta["failures"])
+            if self.stragglers is not None and "stragglers" in meta:
+                self.stragglers.load_state_dict(meta["stragglers"])
             return state, int(meta.get("round", 0))
         return state, 0
 
@@ -544,6 +548,8 @@ class FederatedRunner:
                 meta = {"round": r + 1, "batcher": self.batcher.state_dict()}
                 if self.failures is not None:
                     meta["failures"] = self.failures.state_dict()
+                if self.stragglers is not None:
+                    meta["stragglers"] = self.stragglers.state_dict()
                 self.checkpointer.save(int(state.step), state, meta)
 
             if acc is not None and self.cfg.target_accuracy and acc >= self.cfg.target_accuracy:

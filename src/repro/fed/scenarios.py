@@ -22,6 +22,7 @@ from repro.fed.api import (
     ExperimentSpec,
     FailureSpec,
     ModelSpec,
+    NetworkSpec,
     ParticipationSpec,
     RunSpec,
     ScheduleSpec,
@@ -247,6 +248,60 @@ def _n1m_cohort4096() -> ExperimentSpec:
         participation=ParticipationSpec(cohort_size=4096, sampler="stratified"),
         cost=CostSpec(workload="none"),
         run=RunSpec(num_rounds=8, eval_every=0),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Simulation scenarios (repro.sim; benchmarks/round_time_sim.py)
+# ---------------------------------------------------------------------------
+
+@register(
+    "congested_backhaul",
+    "sim: 10% of edges on an 8x-slower backhaul + lognormal link jitter — "
+    "p99 round time vs the analytic point estimate",
+)
+def _congested_backhaul() -> ExperimentSpec:
+    return _bench(
+        "congested_backhaul", kappas=(6, 10), partition="edge_iid", rounds=40,
+        network=NetworkSpec(
+            edge_backhaul="mixture:0.9@1,0.1@8",
+            backhaul_jitter="lognormal:0.25",
+            link_jitter="lognormal:0.15",
+            seed=11,
+        ),
+    )
+
+
+@register(
+    "hetero_clients_assoc",
+    "sim: heterogeneous client speeds + a congested uplink band with "
+    "contention — the association-optimizer target (HFEL)",
+)
+def _hetero_clients_assoc() -> ExperimentSpec:
+    return _bench(
+        "hetero_clients_assoc", kappas=(6, 10), partition="edge_iid", rounds=40,
+        network=NetworkSpec(
+            client_speed="lognormal:0.35",
+            edge_uplink="mixture:0.6@1,0.4@4",
+            link_jitter="lognormal:0.2",
+            contention=True,
+            seed=3,
+        ),
+    )
+
+
+@register(
+    "straggler_tail",
+    "sim: deadline-based straggler exclusion priced by the replay from the "
+    "same StragglerModel distribution the runner masks with",
+)
+def _straggler_tail() -> ExperimentSpec:
+    return _bench(
+        "straggler_tail", kappas=(6, 10), partition="edge_iid", rounds=40,
+        failures=FailureSpec(straggler_sigma=0.4, straggler_mean_s=1.0, seed=5),
+        network=NetworkSpec(
+            compute_jitter="lognormal:0.4", jitter_granularity="interval", seed=5
+        ),
     )
 
 

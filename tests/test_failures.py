@@ -32,6 +32,21 @@ def test_straggler_deadline_excludes_slow_tail():
     assert deadline > 8.0  # above the nominal 8 steps
 
 
+def test_straggler_state_roundtrip():
+    a = StragglerModel(16, mean_step_s=1.0, sigma=0.3, seed=2)
+    a.interval_latency(4)
+    s = a.state_dict()
+    want = [a.interval_latency(4) for _ in range(3)]
+    # a different seed draws different slowness — load must restore both
+    # the persistent slowness array and the live RNG stream
+    b = StragglerModel(16, mean_step_s=1.0, sigma=0.3, seed=77)
+    b.load_state_dict(s)
+    np.testing.assert_array_equal(a.slowness, b.slowness)
+    got = [b.interval_latency(4) for _ in range(3)]
+    np.testing.assert_array_equal(np.stack(want), np.stack(got))
+    np.testing.assert_array_equal(a.survivors(8)[0], b.survivors(8)[0])
+
+
 def test_combine_masks():
     assert combine_masks(None, None) is None
     a = np.array([1.0, 0.0, 1.0])

@@ -1,0 +1,507 @@
+"""repro.sim: round DAG, zero-variance parity, replay determinism,
+distributions, straggler calibration, and the association optimizer."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import cost_model as cm
+from repro.core.hierarchy import HierarchySpec
+from repro.fed.failures import StragglerModel
+from repro.sim import (
+    AGG,
+    HOP,
+    STEP,
+    DeterministicDist,
+    LogNormalDist,
+    MixtureDist,
+    NetworkSpec,
+    SimCosts,
+    assemble_durations,
+    assignment_to_spec,
+    build_round_dag,
+    draw_jitter_tables,
+    from_cluster,
+    from_roofline,
+    from_workload,
+    optimize_association,
+    parse_distribution,
+    replay_once,
+    simulate_round,
+    simulate_spec,
+    straggler_masks,
+    straggler_network,
+    sweep,
+)
+from repro.sim.dag import _boundary_level
+
+UNIFORM = HierarchySpec.uniform(5, 10)
+RAGGED = HierarchySpec.from_fanouts([[16, 12, 10, 7, 5], [5]])
+
+
+# ---------------------------------------------------------------------------
+# DAG construction
+# ---------------------------------------------------------------------------
+
+def test_boundary_levels():
+    # kappas (k1, 3, 2): level-2 boundary every 3rd interval, level-3 every 6th
+    assert [_boundary_level(r, (4, 3, 2)) for r in range(6)] == [1, 1, 2, 1, 1, 3]
+    assert [_boundary_level(r, (6, 10)) for r in range(10)] == [1] * 9 + [2]
+
+
+def test_dag_topology_and_counts():
+    dag = build_round_dag(UNIFORM, (6, 10))
+    assert dag.num_intervals == 10
+    # 50 clients x 6 steps x 10 intervals; uplink per client-interval; one
+    # edge agg per edge-interval; one backhaul hop per edge + the cloud agg
+    assert dag.counts() == {
+        "nodes": 3000 + 500 + 50 + 5 + 1, "steps": 3000, "hops": 505, "aggs": 51,
+    }
+    for i, ps in enumerate(dag.preds):
+        assert np.all(ps < i)  # topological order
+    assert dag.kind[dag.sink] == AGG and dag.level[dag.sink] == dag.spec.depth
+
+
+def test_dag_ragged_agg_fanin():
+    dag = build_round_dag(RAGGED, (2, 3))
+    assert dag.counts()["steps"] == 50 * 2 * 3
+    # interval-0 edge aggregates wait for exactly their own children
+    for edge, fanout in enumerate([16, 12, 10, 7, 5]):
+        (node,) = np.where(
+            (dag.kind == AGG) & (dag.level == 1)
+            & (dag.entity == edge) & (dag.interval == 0)
+        )[0]
+        assert dag.preds[node].size == fanout
+
+
+def test_dag_validation():
+    with pytest.raises(ValueError, match="depth"):
+        build_round_dag(UNIFORM, (6, 10, 2))
+    with pytest.raises(ValueError, match=">= 1"):
+        build_round_dag(UNIFORM, (0, 10))
+    with pytest.raises(ValueError, match="sorted"):
+        build_round_dag(UNIFORM, (2, 2), cohort=np.array([3, 1]))
+    with pytest.raises(ValueError, match="in 0"):
+        build_round_dag(UNIFORM, (2, 2), cohort=np.array([0, 50]))
+    with pytest.raises(ValueError, match="non-empty"):
+        build_round_dag(UNIFORM, (2, 2), cohort=np.array([], np.int64))
+    with pytest.raises(ValueError, match="masks"):
+        build_round_dag(UNIFORM, (2, 2), masks=np.ones((3, 50)))
+
+
+def test_dag_cohort_restricts_tree():
+    cohort = np.array([0, 1, 2, 10, 11, 47])  # edges {0, 1, 4} active
+    dag = build_round_dag(UNIFORM, (3, 2), cohort=cohort)
+    assert dag.counts()["steps"] == 6 * 3 * 2
+    edge_aggs = (dag.kind == AGG) & (dag.level == 1)
+    assert set(dag.entity[edge_aggs].tolist()) == {0, 1, 4}
+    # the cloud agg waits on one backhaul hop per *active* edge
+    assert dag.preds[dag.sink].size == 3
+
+
+# ---------------------------------------------------------------------------
+# Zero-variance parity vs the analytic schedule algebra
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("workload", ["mnist", "cifar10"])
+@pytest.mark.parametrize("kappas", [(1, 1), (6, 10), (15, 4), (60, 1)])
+@pytest.mark.parametrize("tree", [UNIFORM, RAGGED], ids=["uniform", "ragged"])
+def test_parity_workload(workload, kappas, tree):
+    costs = cm.paper_workload(workload)
+    res = simulate_round(build_round_dag(tree, kappas), from_workload(costs, 2))
+    k1, k2 = kappas
+    want_t = cm.cloud_interval_time(costs, k1, k2)
+    want_e = cm.cloud_interval_energy(costs, k1, k2)
+    np.testing.assert_allclose(res.round_time[0], want_t, rtol=1e-12)
+    np.testing.assert_allclose(res.client_energy[0], want_e, rtol=1e-12)
+
+
+def test_parity_compressed_transport():
+    costs = cm.paper_workload("mnist")
+    bits = (32.0, 8.125)  # identity edge hop, int8:256 cloud hop
+    res = simulate_round(
+        build_round_dag(UNIFORM, (6, 10)),
+        from_workload(costs, 2, bits_per_param=bits),
+    )
+    eff = costs.with_bits(*bits)
+    np.testing.assert_allclose(
+        res.round_time[0], cm.cloud_interval_time(eff, 6, 10), rtol=1e-12
+    )
+    np.testing.assert_allclose(
+        res.client_energy[0], cm.cloud_interval_energy(eff, 6, 10), rtol=1e-12
+    )
+
+
+def test_parity_cluster():
+    cc = cm.ClusterCosts(t_step=1e-3, t_edge_agg=2e-4, t_cloud_agg=2e-3)
+    res = simulate_round(build_round_dag(UNIFORM, (6, 10)), from_cluster(cc, 2))
+    np.testing.assert_allclose(res.round_time[0], cc.interval_time(6, 10), rtol=1e-12)
+    assert res.client_energy.max() == 0.0  # no device-energy notion on the cluster
+
+
+def test_parity_depth3_closed_form():
+    """Depth-3 critical path: kappa1*R steps + R level-1 hops + kappa3
+    level-2 hops + one level-3 hop (all clients identical)."""
+    tree = HierarchySpec.from_fanouts([[4, 4, 4, 4], [2, 2], [2]])
+    costs = cm.paper_workload("mnist")
+    sim_costs = from_workload(costs, 3)
+    k1, k2, k3 = 2, 3, 2
+    res = simulate_round(build_round_dag(tree, (k1, k2, k3)), sim_costs)
+    R = k2 * k3
+    want = (
+        k1 * R * costs.t_comp
+        + R * sim_costs.link_t[0]
+        + k3 * sim_costs.link_t[1]
+        + sim_costs.link_t[2]
+    )
+    np.testing.assert_allclose(res.round_time[0], want, rtol=1e-12)
+    np.testing.assert_allclose(
+        res.client_energy[0], k1 * R * costs.e_comp + R * sim_costs.e_uplink, rtol=1e-12
+    )
+
+
+def test_parity_simulate_spec_transport():
+    """The spec path threads the transport's bit widths into calibration."""
+    from repro.fed.api import CostSpec, ExperimentSpec, ScheduleSpec, TopologySpec, TransportSpec
+
+    spec = ExperimentSpec(
+        name="parity_int8",
+        topology=TopologySpec(num_edges=5, clients_per_edge=10),
+        schedule=ScheduleSpec(kappas=(6, 10)),
+        transport=TransportSpec(levels="identity/int8:256"),
+        cost=CostSpec(workload="mnist"),
+    )
+    bits = spec.transport.build(2).bits_vector()
+    eff = cm.paper_workload("mnist").with_bits(*bits)
+    res = simulate_spec(spec)
+    np.testing.assert_allclose(
+        res.round_time[0], cm.cloud_interval_time(eff, 6, 10), rtol=1e-12
+    )
+
+
+# ---------------------------------------------------------------------------
+# Masks: stragglers keep computing, dead clients vanish
+# ---------------------------------------------------------------------------
+
+def _small_masked(masks=None, alive=None):
+    tree = HierarchySpec.uniform(2, 3)
+    costs = cm.paper_workload("mnist")
+    dag = build_round_dag(tree, (2, 2), masks=masks, alive=alive)
+    return costs, dag, simulate_round(dag, from_workload(costs, 2))
+
+
+def test_straggler_mask_semantics():
+    masks = np.ones((2, 6))
+    masks[0, 0] = 0  # slot 0 misses interval 0's deadline
+    costs, dag, res = _small_masked(masks=masks)
+    # it still computes (and pays energy for) its interval-0 steps, but
+    # skips the upload: one e_comm less than a full participant
+    full = 4 * costs.e_comp + 2 * costs.e_comm_edge
+    np.testing.assert_allclose(res.client_energy[0, 1:], full, rtol=1e-12)
+    np.testing.assert_allclose(
+        res.client_energy[0, 0], full - costs.e_comm_edge, rtol=1e-12
+    )
+    assert not np.any((dag.kind == HOP) & (dag.level == 1)
+                      & (dag.entity == 0) & (dag.interval == 0))
+    # its interval-1 chain continues from its own last step, not the agg
+    steps0 = np.where((dag.kind == STEP) & (dag.entity == 0))[0]
+    (pred,) = dag.preds[steps0[2]]
+    assert dag.kind[pred] == STEP and pred == steps0[1]
+    # a participant's interval-1 chain is gated by the broadcast aggregate
+    steps1 = np.where((dag.kind == STEP) & (dag.entity == 1))[0]
+    (pred,) = dag.preds[steps1[2]]
+    assert dag.kind[pred] == AGG
+    # the edge-0 aggregate waits only for the two on-time members
+    (agg0,) = np.where((dag.kind == AGG) & (dag.level == 1)
+                       & (dag.entity == 0) & (dag.interval == 0))[0]
+    assert dag.preds[agg0].size == 2
+    # and the masked slot never delays the round
+    np.testing.assert_allclose(
+        res.round_time[0], cm.cloud_interval_time(costs, 2, 2), rtol=1e-12
+    )
+
+
+def test_failure_mask_semantics():
+    alive = np.ones((2, 6))
+    alive[0, 0] = 0  # slot 0 dead for interval 0
+    costs, dag, res = _small_masked(alive=alive)
+    steps0 = np.where((dag.kind == STEP) & (dag.entity == 0))[0]
+    assert steps0.size == 2  # interval 1 only — no compute while dead
+    assert dag.preds[steps0[0]].size == 0  # rejoins from a fresh chain
+    np.testing.assert_allclose(
+        res.client_energy[0, 0], 2 * costs.e_comp + costs.e_comm_edge, rtol=1e-12
+    )
+
+
+# ---------------------------------------------------------------------------
+# Replay: sweep == event queue, bit-identical determinism
+# ---------------------------------------------------------------------------
+
+def _jittery_net(tree, seed=7):
+    return NetworkSpec(
+        client_speed="lognormal:0.4",
+        edge_backhaul="mixture:0.5@1,0.5@4",
+        compute_jitter="lognormal:0.2",
+        link_jitter="lognormal:0.3",
+        backhaul_jitter="lognormal:0.25",
+        seed=seed,
+    ).build(tree)
+
+
+def test_replay_once_matches_sweep():
+    tree = HierarchySpec.uniform(3, 4)
+    dag = build_round_dag(tree, (2, 3))
+    res = simulate_round(
+        dag, from_workload(cm.paper_workload("mnist"), 2), _jittery_net(tree), trials=5
+    )
+    for t in range(5):
+        np.testing.assert_array_equal(replay_once(dag, res.durations[t]), res.finish[t])
+
+
+def test_replay_bit_identical_across_builds():
+    def run():
+        tree = HierarchySpec.uniform(3, 4)
+        dag = build_round_dag(tree, (2, 3))
+        return simulate_round(
+            dag, from_workload(cm.paper_workload("mnist"), 2),
+            _jittery_net(tree), trials=8,
+        )
+
+    a, b = run(), run()
+    np.testing.assert_array_equal(a.finish, b.finish)
+    np.testing.assert_array_equal(a.energy, b.energy)
+
+
+def test_jitter_widens_the_tail():
+    tree = HierarchySpec.uniform(3, 4)
+    dag = build_round_dag(tree, (2, 3))
+    res = simulate_round(
+        dag, from_workload(cm.paper_workload("mnist"), 2), _jittery_net(tree), trials=64
+    )
+    p = res.percentiles()
+    analytic = cm.cloud_interval_time(cm.paper_workload("mnist"), 2, 3)
+    assert p["p99_s"] > p["p50_s"] > 0
+    assert p["p99_s"] > analytic  # max over jittered clients beats the mean point
+    cdf = res.cdf(9)
+    assert cdf["round_time_s"] == sorted(cdf["round_time_s"])
+    tl = res.timeline(0)
+    assert len(tl) == dag.num_nodes and tl[-1]["kind"] == "agg"
+
+
+# ---------------------------------------------------------------------------
+# Distributions + NetworkSpec
+# ---------------------------------------------------------------------------
+
+def test_parse_distribution_grammar():
+    assert isinstance(parse_distribution("det"), DeterministicDist)
+    assert parse_distribution("det:2.5").sample(3).tolist() == [2.5] * 3
+    d = parse_distribution("lognormal:0.3:2.0")
+    assert isinstance(d, LogNormalDist) and d.median == 2.0
+    m = parse_distribution("mixture:0.9@1,0.1@8")
+    assert isinstance(m, MixtureDist)
+    np.testing.assert_allclose(m.mean(), 0.9 * 1 + 0.1 * 8)
+    for bad in ("gamma:1", "lognormal", "lognormal:-0.5", "mixture:0.9@1,0.4@8",
+                "mixture:1.0", "det:-1"):
+        with pytest.raises(ValueError):
+            parse_distribution(bad)
+
+
+def test_distribution_state_roundtrip_json():
+    for make in (lambda: LogNormalDist(0.4, seed=3),
+                 lambda: MixtureDist([0.7, 0.3], [1.0, 5.0], seed=3)):
+        a = make()
+        a.sample(17)
+        state = json.loads(json.dumps(a.state_dict()))  # JSON-safe by contract
+        want = [a.sample(5) for _ in range(3)]
+        b = make()
+        b.load_state_dict(state)
+        got = [b.sample(5) for _ in range(3)]
+        np.testing.assert_array_equal(np.stack(want), np.stack(got))
+    with pytest.raises(ValueError):
+        LogNormalDist(0.3).load_state_dict({"kind": "mixture"})
+
+
+def test_network_model_state_roundtrip():
+    tree = HierarchySpec.uniform(3, 4)
+    net = _jittery_net(tree)
+    draw_jitter_tables(net, tree, (2, 3), trials=2)  # advance the streams
+    state = net.state_dict()
+    want = draw_jitter_tables(net, tree, (2, 3), trials=2)
+    net2 = _jittery_net(tree)
+    net2.load_state_dict(state)
+    got = draw_jitter_tables(net2, tree, (2, 3), trials=2)
+    np.testing.assert_array_equal(want.compute, got.compute)
+    np.testing.assert_array_equal(want.backhaul[2], got.backhaul[2])
+
+
+def test_network_spec_flags_and_api_roundtrip():
+    from repro.fed.api import ExperimentSpec
+
+    assert not NetworkSpec().is_active
+    assert NetworkSpec(link_jitter="lognormal:0.2").is_active
+    assert NetworkSpec(seed=9) == NetworkSpec(seed=9)
+    with pytest.raises(ValueError):
+        NetworkSpec(jitter_granularity="hourly")
+    with pytest.raises(ValueError):
+        NetworkSpec(client_speed="gamma:2")
+    spec = ExperimentSpec(
+        name="rt", network=NetworkSpec(edge_backhaul="mixture:0.9@1,0.1@8", seed=4)
+    )
+    again = ExperimentSpec.from_dict(spec.to_dict())
+    assert again.network == spec.network
+    over = spec.with_overrides(
+        ["network.contention=true", "network.client_speed=lognormal:0.5"]
+    )
+    assert over.network.contention and over.network.client_speed == "lognormal:0.5"
+
+
+def test_calibrate_validation_and_roofline():
+    import types
+
+    costs = cm.paper_workload("mnist")
+    with pytest.raises(ValueError):
+        from_workload(costs, 0)
+    with pytest.raises(ValueError):
+        from_workload(costs, 2, bits_per_param=(8.0,))
+    with pytest.raises(ValueError):
+        from_workload(costs, 2, bits_per_param=(8.0, -1.0))
+    with pytest.raises(ValueError):
+        SimCosts(t_step=1.0, e_step=0.0, link_t=(1.0,), agg_t=(0.0, 0.0))
+    term = lambda s: types.SimpleNamespace(bound_s=s, collective_s=s)
+    sc = from_roofline(term(1e-3), term(2e-4), term(2e-3), 2)
+    assert sc.t_step == 1e-3 and sc.agg_t == (2e-4, 2e-3) and sc.link_t == (0.0, 0.0)
+
+
+def test_simulate_spec_scenarios():
+    from repro.fed import scenarios
+
+    for name in ("congested_backhaul", "hetero_clients_assoc", "straggler_tail"):
+        res = simulate_spec(scenarios.get(name), trials=3)
+        assert res.round_time.shape == (3,)
+        assert np.all(np.isfinite(res.round_time)) and np.all(res.round_time > 0)
+        assert res.summary()["round_time"]["p99_s"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Straggler calibration: one distribution for masks and replay
+# ---------------------------------------------------------------------------
+
+def test_straggler_network_exact_stream():
+    """Replayed per-interval compute equals interval_latency draws from an
+    identically seeded model — same slowness, same RNG stream."""
+    tree = HierarchySpec.uniform(2, 8)
+    k1, k2 = 4, 3
+    model = StragglerModel(16, mean_step_s=0.5, sigma=0.4, seed=7)
+    twin = StragglerModel(16, mean_step_s=0.5, sigma=0.4, seed=7)
+    net = straggler_network(model, tree)
+    costs = SimCosts(t_step=0.5, e_step=0.0, link_t=(0.0, 0.0), agg_t=(0.0, 0.0))
+    dag = build_round_dag(tree, (k1, k2))
+    res = simulate_round(dag, costs, net, trials=1)
+    steps = np.where(dag.kind == STEP)[0]
+    got = np.zeros((k2, 16))
+    np.add.at(
+        got,
+        (dag.interval[steps].astype(int), dag.entity[steps].astype(int)),
+        res.durations[0, steps],
+    )
+    want = np.stack([twin.interval_latency(k1) for _ in range(k2)])
+    np.testing.assert_allclose(got, want, rtol=1e-12)
+
+
+def test_straggler_network_validates_population():
+    with pytest.raises(ValueError, match="clients"):
+        straggler_network(StragglerModel(8, seed=0), HierarchySpec.uniform(2, 8))
+
+
+def test_straggler_masks_shapes():
+    model = StragglerModel(50, mean_step_s=1.0, sigma=0.6, seed=1)
+    m = straggler_masks(model, kappa1=4, num_intervals=3)
+    assert m.shape == (3, 50) and m.dtype == bool
+    cohort = np.array([0, 5, 9, 31])
+    mc = straggler_masks(model, 4, 2, cohort=cohort)
+    assert mc.shape == (2, 4)
+    # masks plug straight into the DAG builder
+    build_round_dag(UNIFORM, (4, 3), masks=straggler_masks(model, 4, 3))
+
+
+# ---------------------------------------------------------------------------
+# Common random numbers + association optimization
+# ---------------------------------------------------------------------------
+
+def test_common_random_numbers_across_assignments():
+    """A client's compute durations are identical whichever edge it sits
+    on — tables are canonically keyed, so candidates differ only where the
+    assignment matters."""
+    tree = HierarchySpec.uniform(2, 3)
+    costs = from_workload(cm.paper_workload("mnist"), 2)
+    net = NetworkSpec(client_speed="lognormal:0.4", compute_jitter="lognormal:0.2",
+                      seed=3).build(tree)
+    tables = draw_jitter_tables(net, tree, (2, 2), trials=4)
+    dag0 = build_round_dag(tree, (2, 2))
+    d0 = assemble_durations(dag0, costs, net, tables)
+    # swap clients 0 and 3 across the two edges
+    spec2, order = assignment_to_spec(np.array([1, 0, 0, 0, 1, 1]), tree)
+    dag2 = build_round_dag(spec2, (2, 2))
+    d2 = assemble_durations(dag2, costs, net, tables, client_ids=order)
+    for c in range(6):
+        idx0 = np.where((dag0.kind == STEP) & (dag0.entity == c))[0]
+        slots = order[dag2.entity[np.where(dag2.kind == STEP)[0]]]
+        idx2 = np.where(dag2.kind == STEP)[0][slots == c]
+        np.testing.assert_array_equal(d0[:, idx0], d2[:, idx2])
+    # purity: re-assembly against the same tables is bit-identical
+    np.testing.assert_array_equal(d0, assemble_durations(dag0, costs, net, tables))
+
+
+def test_assignment_to_spec_roundtrip():
+    incumbent = np.asarray(UNIFORM.segments(1))
+    spec, order = assignment_to_spec(incumbent, UNIFORM)
+    np.testing.assert_array_equal(order, np.arange(50))
+    assert spec.parents == UNIFORM.parents
+    with pytest.raises(ValueError, match="at least one"):
+        assignment_to_spec(np.zeros(50, np.int64), UNIFORM)
+    with pytest.raises(ValueError, match="edge ids"):
+        assignment_to_spec(np.full(50, 7), UNIFORM)
+
+
+def test_association_improves_heterogeneous_tail():
+    tree = HierarchySpec.uniform(4, 6)
+    costs = from_workload(cm.paper_workload("mnist"), 2)
+    net = NetworkSpec(
+        client_speed="lognormal:0.5",
+        edge_uplink="mixture:0.5@1,0.5@5",
+        link_jitter="lognormal:0.1",
+        contention=True,
+        seed=1,
+    ).build(tree)
+    res = optimize_association(
+        tree, costs, net, (6, 2), trials=16, top_k=4, max_rounds=4
+    )
+    assert res.value_after <= res.value_before  # never worse than incumbent
+    assert res.improvement > 0  # and strictly better on this skewed setup
+    # a valid re-sorted tree: same shape, every edge kept >= 1 client
+    load = np.bincount(res.assignment, minlength=4)
+    assert load.sum() == 24 and load.min() >= 1 and load.max() <= 6
+    # the permutation is consistent with the returned spec
+    np.testing.assert_array_equal(
+        np.asarray(res.spec.segments(1)), res.assignment[res.client_order]
+    )
+    d = res.to_dict()
+    assert d["evals"] == res.evals and d["num_moves"] == len(res.moves)
+
+
+def test_association_energy_objective_and_validation():
+    tree = HierarchySpec.uniform(2, 3)
+    costs = from_workload(cm.paper_workload("mnist"), 2)
+    net = NetworkSpec(client_speed="lognormal:0.3", seed=2).build(tree)
+    res = optimize_association(tree, costs, net, (2, 2), objective="energy",
+                               trials=4, top_k=2, max_rounds=2)
+    assert np.isfinite(res.value_after) and res.value_after <= res.value_before
+    with pytest.raises(ValueError, match="objective"):
+        optimize_association(tree, costs, net, (2, 2), objective="latency")
+    with pytest.raises(ValueError, match="depth-2"):
+        optimize_association(
+            HierarchySpec.from_fanouts([[2, 2], [1, 1], [2]]),
+            from_workload(cm.paper_workload("mnist"), 3), net, (2, 2, 1),
+        )
+    with pytest.raises(ValueError, match="capacity"):
+        optimize_association(tree, costs, net, (2, 2), capacity=np.array([2, 2]))

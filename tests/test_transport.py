@@ -276,6 +276,42 @@ def test_collectives_bits_scaling():
     assert edge == edge0 and cloud == cloud0 * 0.25
 
 
+def test_collectives_mixed_bits_ragged():
+    """Mixed per-level bit widths on a ragged tree: each hop scales by its
+    own bits/32 and the bottleneck is the largest group at that level."""
+    spec = parse_fanouts("16,12,10,7,5/5")
+    base = collectives.hierarchy_traffic_per_step(1e6, spec, (6, 10))
+    assert base[0] == pytest.approx(collectives.ring_allreduce_bytes(1e6, 16) / 6)
+    assert base[1] == pytest.approx(collectives.ring_allreduce_bytes(1e6, 5) / 60)
+    mixed = collectives.hierarchy_traffic_per_step(
+        1e6, spec, (6, 10), bits_per_param=(16.0, 8.0)
+    )
+    np.testing.assert_allclose(mixed[0], base[0] * 0.5)
+    np.testing.assert_allclose(mixed[1], base[1] * 0.25)
+
+
+def test_collectives_mixed_bits_depth3_ragged():
+    spec = parse_fanouts("4,3,2,5/2,2/2")
+    kv = (2, 3, 4)
+    base = collectives.hierarchy_traffic_per_step(1e6, spec, kv)
+    # bottleneck groups: a 5-client edge, 2 edges per region, 2 regions
+    assert base[0] == pytest.approx(collectives.ring_allreduce_bytes(1e6, 5) / 2)
+    assert base[1] == pytest.approx(collectives.ring_allreduce_bytes(1e6, 2) / 6)
+    assert base[2] == pytest.approx(collectives.ring_allreduce_bytes(1e6, 2) / 24)
+    mixed = collectives.hierarchy_traffic_per_step(
+        1e6, spec, kv, bits_per_param=(32.0, 16.0, 8.0)
+    )
+    np.testing.assert_allclose(mixed[0], base[0])
+    np.testing.assert_allclose(mixed[1], base[1] * 0.5)
+    np.testing.assert_allclose(mixed[2], base[2] * 0.25)
+    with pytest.raises(ValueError):  # one entry per level, strictly
+        collectives.hierarchy_traffic_per_step(1e6, spec, kv, bits_per_param=(16.0, 8.0))
+    with pytest.raises(ValueError):  # positive widths only
+        collectives.hierarchy_traffic_per_step(
+            1e6, spec, kv, bits_per_param=(32.0, 0.0, 8.0)
+        )
+
+
 def test_workload_costs_with_bits():
     costs = cm.paper_workload("mnist")
     comp = costs.with_bits(32.0, 8.0)
