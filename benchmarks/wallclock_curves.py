@@ -1,0 +1,169 @@
+"""Wall-clock-vs-accuracy curves: synchronous barrier vs deadline vs
+FedBuff-buffered cloud rounds under a straggler tail (``docs/robustness.md``).
+
+Round-count convergence curves hide exactly what the semi-synchronous
+engine buys: a deadline round is *cheaper in seconds* because the cloud
+stops waiting for the slowest edge. This bench prices every variant on the
+same event clock — per-edge cadences derived from the same
+``StragglerModel`` slowness tail — and reports accuracy against simulated
+wall-clock seconds:
+
+* ``sync``      the full barrier (quorum=1.0) through the deadline engine,
+                which is bit-exact with the synchronous superround engine
+                (the parity contract) but carries the event clock, so the
+                baseline's seconds are honest
+* ``deadline``  60% quorum + staleness decay, with mid-round edge dropout
+                injected (the chaos gate: graceful degradation, not a crash)
+* ``buffered``  FedBuff-style: the first K=3 edge arrivals fold per round
+
+Gates (``--smoke``, the CI chaos gate):
+
+* every variant completes all rounds under fault injection,
+* the deadline engine reaches the shared accuracy target in strictly less
+  simulated wall-clock time than the synchronous barrier,
+* final deadline/buffered accuracy sits within ``ACC_FLOOR`` of the
+  synchronous baseline (skip-and-reweight degrades gracefully).
+
+Results merge into ``BENCH_throughput.json`` under ``"semisync"``.
+
+    PYTHONPATH=src python -m benchmarks.wallclock_curves --smoke
+    PYTHONPATH=src python -m benchmarks.wallclock_curves --json
+"""
+from __future__ import annotations
+
+import argparse
+
+ACC_FLOOR = 0.10  # max accuracy giveback vs the synchronous baseline
+TARGET_FRACTION = 0.90  # shared target = this fraction of the weaker final acc
+
+
+def _base_overrides(rounds: int) -> list:
+    # the straggler_tail problem on a deadline-friendly cadence: kappas=(4,5)
+    # so eval can land at every cloud boundary (5 rounds) for curve resolution
+    return [
+        "schedule.kappas=4,5",
+        "data.class_sep=2.0",
+        f"run.num_rounds={rounds}",
+        "run.eval_every=5",
+        "failures.straggler_sigma=0.4",
+        "failures.straggler_mean_s=1.0",
+        "failures.seed=5",
+    ]
+
+
+VARIANTS = {
+    "sync": ["deadline.enabled=true", "deadline.quorum=1.0"],
+    "deadline": [
+        "deadline.enabled=true", "deadline.quorum=0.6",
+        "deadline.staleness=poly:0.5", "deadline.max_staleness=3",
+        "deadline.edge_drop_rate=0.1", "deadline.retry_limit=1",
+        "deadline.seed=5",
+    ],
+    "buffered": [
+        "deadline.enabled=true", "deadline.buffer_size=3",
+        "deadline.staleness=poly:0.5", "deadline.max_staleness=3",
+        "deadline.seed=5",
+    ],
+}
+
+
+def _run_variant(name: str, rounds: int) -> dict:
+    from repro.fed.api import ExperimentSpec
+
+    spec = ExperimentSpec.parse(_base_overrides(rounds) + VARIANTS[name])
+    runner, _ = spec.run_experiment()
+    curve = [
+        {"round": h.round, "wall_s": h.wall_clock_s, "accuracy": h.accuracy}
+        for h in runner.history
+        if h.accuracy is not None
+    ]
+    return {
+        "overrides": VARIANTS[name],
+        "rounds": len(runner.history),
+        "final_accuracy": runner.history[-1].accuracy,
+        "final_wall_s": runner.history[-1].wall_clock_s,
+        "curve": curve,
+    }
+
+
+def _time_to(curve: list, alpha: float):
+    for p in curve:
+        if p["accuracy"] is not None and p["accuracy"] >= alpha:
+            return p["wall_s"]
+    return None
+
+
+def wallclock_section(rounds: int) -> dict:
+    results = {name: _run_variant(name, rounds) for name in VARIANTS}
+    # shared target: reachable by both sync and deadline, so time-to-target
+    # compares the engines rather than who converged further
+    target = TARGET_FRACTION * min(
+        results["sync"]["final_accuracy"], results["deadline"]["final_accuracy"]
+    )
+    for name, res in results.items():
+        res["time_to_target_s"] = _time_to(res["curve"], target)
+    return {"target_accuracy": target, "variants": results}
+
+
+def check_gates(section: dict) -> list:
+    failures = []
+    res = section["variants"]
+    for name, r in res.items():
+        if r["rounds"] == 0 or r["final_accuracy"] is None:
+            failures.append(f"{name}: run did not complete")
+    sync, dl = res["sync"], res["deadline"]
+    t_sync, t_dl = sync["time_to_target_s"], dl["time_to_target_s"]
+    if t_dl is None:
+        failures.append("deadline: never reached the shared target accuracy")
+    elif t_sync is not None and not t_dl < t_sync:
+        failures.append(
+            f"deadline time-to-target {t_dl:.2f}s not below synchronous {t_sync:.2f}s"
+        )
+    for name in ("deadline", "buffered"):
+        gap = sync["final_accuracy"] - res[name]["final_accuracy"]
+        if gap > ACC_FLOOR:
+            failures.append(
+                f"{name}: final accuracy {res[name]['final_accuracy']:.3f} is "
+                f"{gap:.3f} below the synchronous baseline (floor {ACC_FLOOR})"
+            )
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced rounds + hard gates (the CI chaos gate)")
+    ap.add_argument("--rounds", type=int, default=None,
+                    help="override the round count (default 60, smoke 20)")
+    ap.add_argument("--json", nargs="?", const="BENCH_throughput.json", default=None,
+                    help="merge results into a bench JSON "
+                    "(default path: BENCH_throughput.json)")
+    args = ap.parse_args()
+    rounds = args.rounds or (20 if args.smoke else 60)
+
+    section = wallclock_section(rounds)
+    print(f"target accuracy: {section['target_accuracy']:.3f}")
+    for name, r in section["variants"].items():
+        t = r["time_to_target_s"]
+        print(
+            f"  {name:9s} final_acc={r['final_accuracy']:.3f} "
+            f"wall={r['final_wall_s']:8.2f}s "
+            f"time_to_target={'never' if t is None else f'{t:8.2f}s'}"
+        )
+
+    if args.json:
+        from benchmarks.common import merge_write_json
+
+        merge_write_json(args.json, {"semisync": section})
+        print(f"wrote semisync section -> {args.json}")
+
+    if args.smoke:
+        failures = check_gates(section)
+        if failures:
+            raise SystemExit("chaos gate FAILED:\n  " + "\n  ".join(failures))
+        print("chaos gate OK: completes under dropout, deadline beats the "
+              "barrier to target, accuracy within the floor")
+
+
+if __name__ == "__main__":
+    main()

@@ -131,7 +131,6 @@ class HierFAVGConfig:
     kappa2: int
     sync_opt_state: bool = False  # also average optimizer state at aggregations
     delta_cloud: bool = False  # cloud agg in delta-vs-anchor form (compressible)
-    async_cloud: bool = False  # 1-interval-stale cloud agg (overlaps DCN; beyond paper)
     kappas: Optional[Tuple[int, ...]] = None  # per-level κ vector (None -> (κ₁, κ₂))
     transport: Optional[Any] = None  # fed.transport.TransportSpec: one LinkCodec per level
     aggregators: Optional[Any] = None  # core.aggregation.AggregatorSpec: one per level
@@ -158,11 +157,6 @@ class HierFAVGConfig:
                     f"has {n_levels} (kappas={self.kappas or (self.kappa1, self.kappa2)})"
                 )
             if not self.aggregators.is_trivial:
-                if self.async_cloud:
-                    raise ValueError(
-                        "async_cloud hardcodes the weighted mean (its stale-correction "
-                        "algebra is linear); drop the non-default aggregators"
-                    )
                 if self.delta_cloud and not self.aggregators.aggregator(n_levels).is_default:
                     raise ValueError(
                         "delta_cloud requires the default weighted_mean at the top "
@@ -180,10 +174,10 @@ class HierFAVGConfig:
                     f"transport has {self.transport.depth} levels but the schedule has "
                     f"{n_levels} (kappas={self.kappas or (self.kappa1, self.kappa2)})"
                 )
-            if not self.transport.is_trivial and (self.delta_cloud or self.async_cloud):
+            if not self.transport.is_trivial and self.delta_cloud:
                 raise ValueError(
-                    "a non-identity transport subsumes delta_cloud and is incompatible "
-                    "with async_cloud (both repurpose the anchor slot); drop those flags"
+                    "a non-identity transport subsumes delta_cloud (both repurpose "
+                    "the anchor slot); drop the flag"
                 )
         if self.kappas is not None:
             kv = tuple(int(k) for k in self.kappas)
@@ -206,11 +200,6 @@ class HierFAVGConfig:
                     f"{type(self.participation).__name__}"
                 )
             if self.participation.is_active:
-                if self.async_cloud:
-                    raise ValueError(
-                        "sampled participation is incompatible with async_cloud (the "
-                        "stale-correction tree indexes the full population)"
-                    )
                 if self.aggregators_active:
                     raise ValueError(
                         "sampled participation requires the default weighted mean at "
@@ -319,12 +308,7 @@ def init_state(
             lambda p: p.astype(dt) if jnp.issubdtype(p.dtype, jnp.floating) else p, stacked
         )
     opt_state = optimizer.init(stacked)
-    if config.async_cloud:
-        # stale cross-edge correction tree; first boundary applies zero
-        anchor = jax.tree_util.tree_map(
-            lambda p: jnp.zeros(p.shape, jnp.float32), stacked
-        )
-    elif config.delta_cloud or config.transport_active:
+    if config.delta_cloud or config.transport_active:
         # last broadcast each client received: deltas w − anchor are what a
         # compressed uplink carries
         anchor = jax.tree_util.tree_map(jnp.copy, stacked)
@@ -518,11 +502,6 @@ def sharding_incompatibility(
     (otherwise the auto-planned one is checked).
     """
     spec = as_hierarchy(topology)
-    if config.async_cloud:
-        return (
-            "async_cloud's stale-correction algebra snapshots the whole "
-            "client axis on one device"
-        )
     if config.delta_cloud and config.sync_opt_state:
         return "delta_cloud + sync_opt_state do not compose (the opt tree has no anchor)"
     if placement is None:
@@ -880,82 +859,6 @@ def build_train_step(
     return train_step
 
 
-def build_hier_round_async(
-    loss_fn: LossFn,
-    optimizer: GradientTransformation,
-    topology: Topology,
-    config: HierFAVGConfig,
-    weights: jnp.ndarray,
-    *,
-    grad_accum: int = 1,
-):
-    """Overlapped (1-interval-stale) cloud aggregation [beyond paper].
-
-    At a cloud boundary the edge aggregation applies synchronously (cheap
-    ICI) while the cross-edge correction applied is the one computed from
-    the PREVIOUS cloud boundary's snapshot:
-
-        w_i(B_q) <- EdgeMean_l(w(B_q)) + [CloudMean(w(B_{q-1}))
-                                          - EdgeMean_l(w(B_{q-1}))]
-
-    so the expensive DCN all-reduce of interval q overlaps interval q+1's
-    local compute instead of stalling it. The staleness cost is bounded by
-    the same Edge-Cloud divergence Δ machinery as raising κ₂ by one (the
-    correction term vanishes when edge data is IID — guideline 2), and the
-    first boundary applies a zero correction (pure edge sync).
-
-    State: ``anchor`` holds the per-client stale correction
-    CloudMean − EdgeMean of the last snapshot (init_state must be built
-    with ``delta_cloud=True`` so the anchor slot exists).
-    """
-    spec = as_hierarchy(topology)
-    _check_levels(spec, config)
-    if spec.depth != 2:
-        # the stale-correction algebra is inherently two-level (edge mean +
-        # stale cross-edge term); mid-tier syncs would be silently skipped
-        raise ValueError(
-            f"build_hier_round_async supports two-level hierarchies only, got depth {spec.depth}"
-        )
-    local_step = build_local_step(loss_fn, optimizer, grad_accum=grad_accum, precision=config.precision)
-    edge = lambda t, m: aggregation.hierarchical_segment_mean(t, weights, spec, 1, m)
-    cloud = lambda t, m: aggregation.hierarchical_segment_mean(t, weights, spec, None, m)
-
-    def hier_round(state: FedState, batches: PyTree, round_index: jnp.ndarray, mask=None):
-        def body(s, b):
-            s, m = local_step(s, b)
-            return s, (m["loss"], m["grad_norm"])
-
-        state, (losses, gnorms) = jax.lax.scan(body, state, batches)
-        is_cloud = ((round_index + 1) % config.kappa2_effective) == 0
-
-        def cloud_boundary(s: FedState) -> FedState:
-            edge_now = edge(s.params, mask)
-            # apply the STALE correction computed at the previous boundary
-            params = jax.tree_util.tree_map(
-                lambda e, c: (e.astype(jnp.float32) + c.astype(jnp.float32)).astype(e.dtype),
-                edge_now,
-                s.anchor,
-            )
-            # snapshot correction for the NEXT boundary (the DCN all-reduce
-            # producing cloud_now has no consumer this interval — XLA is
-            # free to overlap it with the next interval's compute)
-            cloud_now = cloud(s.params, mask)
-            new_anchor = jax.tree_util.tree_map(
-                lambda c, e: (c.astype(jnp.float32) - e.astype(jnp.float32)),
-                cloud_now,
-                edge_now,
-            )
-            return s._replace(params=params, anchor=new_anchor)
-
-        def edge_boundary(s: FedState) -> FedState:
-            return s._replace(params=edge(s.params, mask))
-
-        state = jax.lax.cond(is_cloud, cloud_boundary, edge_boundary, state)
-        return state, {"loss": jnp.mean(losses), "grad_norm": jnp.mean(gnorms)}
-
-    return hier_round
-
-
 def build_hier_round(
     loss_fn: LossFn,
     optimizer: GradientTransformation,
@@ -1082,6 +985,149 @@ def build_super_round(
     return super_round
 
 
+def deadline_incompatibility(config: HierFAVGConfig, topology: Topology) -> Optional[str]:
+    """Why this schedule cannot run under the semi-synchronous deadline
+    engine (``build_deadline_super_round``) — None when it can.
+
+    Mirrors ``sharding_incompatibility``: the single predicate both the
+    builder (raises) and the runner's engine dispatch (reports) consult.
+    The gated cloud sync needs the plain weighted mean at the top level —
+    the staleness gate is a per-client weight multiplier, which is only a
+    sound reweighting for a linear aggregator — and a broadcast every edge
+    actually receives, which anchor-based transports and averaged optimizer
+    state do not yet model for partially-received rounds.
+    """
+    spec = as_hierarchy(topology)
+    if config.transport_active:
+        return (
+            "compressed transports re-sync every client's anchor at each "
+            "boundary; a late edge that missed the broadcast would desync "
+            "its delta reference"
+        )
+    if config.delta_cloud:
+        return "delta_cloud's anchor rebroadcast assumes every edge receives each round"
+    if config.sync_opt_state:
+        return (
+            "optimizer-state averaging has no per-edge keep path for late "
+            "subtrees yet"
+        )
+    if config.aggregators_active and not config.aggregators.aggregator(spec.depth).is_default:
+        return (
+            "the staleness gate reweights client columns, which is only a "
+            "sound transformation of the default weighted mean at the top level"
+        )
+    if config.participation_active:
+        return "sampled participation runs through the cohort engine"
+    return None
+
+
+def build_deadline_super_round(
+    loss_fn: LossFn,
+    optimizer: GradientTransformation,
+    topology: Topology,
+    config: HierFAVGConfig,
+    weights: jnp.ndarray,
+    *,
+    grad_accum: int = 1,
+):
+    """One *semi-synchronous* cloud interval: ``build_super_round`` with the
+    top-level sync gated by a per-client cloud-arrival weight vector.
+
+        deadline_round(state, batches, gate, masks=None) -> (state, metrics)
+
+    ``gate`` is (N,) float32: each client's edge-level arrival × staleness
+    multiplier for THIS interval's cloud aggregation (constant within an
+    edge; produced by ``fed.deadline.RoundPlan.client_gate``). Semantics at
+    the interval's final round:
+
+    * sub-top stages run exactly as the synchronous staged mean — every
+      edge performs its own edge sync with the survival mask, late edges
+      included (their clients hold the fresh edge model while the upload
+      is in flight);
+    * the top stage aggregates with ``mask * gate``: folded edges
+      contribute at their staleness-decayed weight, late/dropped edges at
+      weight 0;
+    * clients whose gate is 0 did not receive the broadcast — they keep
+      the edge-synced model instead of the new cloud model (the carry that
+      turns "late" into "stale next round" rather than "dropped").
+
+    Sub-top rounds of the interval are byte-identical to
+    ``build_super_round``'s (same ``build_level_sync`` branches). With an
+    all-ones gate the top stage performs the identical op sequence as the
+    synchronous staged mean plus an all-true select; the engine still
+    dispatches the stock ``build_super_round`` executable for such trivial
+    rounds, so the bit-exact parity contract never rides on XLA emitting
+    identical code for two different graphs.
+    """
+    spec = as_hierarchy(topology)
+    depth = _check_levels(spec, config)
+    reason = deadline_incompatibility(config, topology)
+    if reason is not None:
+        raise ValueError(f"schedule cannot run the deadline engine: {reason}")
+    local_step = build_local_step(loss_fn, optimizer, grad_accum=grad_accum, precision=config.precision)
+    # sub-top syncs are the stock branches; the top branch is rebuilt below
+    level_syncs = [build_level_sync(spec, config, weights, l) for l in range(1, depth)]
+    deepest_per_round = jnp.asarray(super_round_schedule(config), jnp.int32)
+
+    def gated_top_sync(state: FedState, mask_r, gate) -> FedState:
+        # staged composition, mirroring hierarchical_segment_mean(..., depth):
+        # sub-top stages with the survival mask alone (every edge syncs),
+        # the top stage with mask * gate (only folded edges contribute)
+        mid = state.params
+        for lvl in range(1, depth):
+            mid = aggregation.segment_weighted_mean(
+                mid, weights, spec.segments(lvl), spec.num_nodes(lvl), mask_r
+            )
+        top_mask = gate if mask_r is None else mask_r * gate
+        top = aggregation.segment_weighted_mean(
+            mid, weights, spec.segments(depth), spec.num_nodes(depth), top_mask
+        )
+        received = gate > 0  # (N,) this client's edge got the broadcast
+
+        def select(new, old):
+            r = received.reshape((-1,) + (1,) * (new.ndim - 1))
+            return jnp.where(r, new, old)
+
+        params = jax.tree_util.tree_map(select, top, mid)
+        return state._replace(params=params)
+
+    def deadline_round(
+        state: FedState,
+        batches: PyTree,
+        gate: jnp.ndarray,
+        masks: Optional[jnp.ndarray] = None,
+    ):
+        def round_body(s, xs):
+            if masks is None:
+                deepest, batch_r = xs
+                mask_r = None
+            else:
+                deepest, batch_r, mask_r = xs
+
+            def step_body(ss, b):
+                ss, m = local_step(ss, b)
+                return ss, (m["loss"], m["grad_norm"])
+
+            s, (losses, gnorms) = jax.lax.scan(step_body, s, batch_r)
+            branches = [
+                (lambda sync: lambda st: sync(st, mask_r))(sync) for sync in level_syncs
+            ] + [lambda st: gated_top_sync(st, mask_r, gate)]
+            s = jax.lax.switch(deepest - 1, branches, s)
+            metrics = {
+                "loss": jnp.mean(losses),
+                "grad_norm": jnp.mean(gnorms),
+                "step": s.step,
+            }
+            return s, metrics
+
+        xs = (deepest_per_round, batches)
+        if masks is not None:
+            xs = xs + (masks,)
+        return jax.lax.scan(round_body, state, xs)
+
+    return deadline_round
+
+
 # ---------------------------------------------------------------------------
 # Client-blocked megakernel lowering
 # ---------------------------------------------------------------------------
@@ -1105,8 +1151,6 @@ def megakernel_incompatibility(
             f"the megakernel lowering is two-level uniform "
             f"(clients/edges/cloud) only, got {spec.describe()}"
         )
-    if config.async_cloud:
-        return "async_cloud's stale-correction algebra is not block-separable"
     if config.delta_cloud:
         return "delta_cloud's anchor bookkeeping keeps the scan-fused path"
     if config.transport_active:
@@ -1329,8 +1373,6 @@ def cohort_incompatibility(
     builder (raises) and the runner's dispatch (reports) consult.
     """
     spec = as_hierarchy(topology)
-    if config.async_cloud:
-        return "async_cloud's stale-correction tree indexes the full population"
     if config.aggregators_active:
         return "a robust statistic over a sampled cohort is not the population statistic"
     if not 1 <= int(cohort_size) <= spec.num_clients:

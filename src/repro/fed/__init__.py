@@ -1,8 +1,15 @@
-from repro.fed import client_store, engine, failures, participation, runner, topology, transport
+from repro.fed import client_store, deadline, engine, failures, participation, runner, topology, transport
 from repro.fed import api, scenarios
 from repro.fed.api import ExperimentSpec
 from repro.fed.client_store import ClientStateStore
-from repro.fed.engine import CohortEngine, SuperRoundEngine
+from repro.fed.deadline import (
+    EdgeCadenceModel,
+    RoundPlan,
+    SemiSyncScheduler,
+    StalenessPolicy,
+    parse_staleness,
+)
+from repro.fed.engine import CohortEngine, DeadlineEngine, SuperRoundEngine
 from repro.fed.participation import ParticipationSpec
 from repro.fed.transport import (
     IdentityCodec,
@@ -13,9 +20,11 @@ from repro.fed.transport import (
 )
 from repro.fed.failures import (
     FailureSimulator,
+    MaskComposition,
     StragglerModel,
     SubtreeOutageSimulator,
     combine_masks,
+    compose_masks,
 )
 from repro.fed.runner import FederatedRunner, RunnerConfig
 from repro.fed.topology import (
@@ -32,8 +41,15 @@ __all__ = [
     "ExperimentSpec",
     "client_store",
     "ClientStateStore",
+    "deadline",
+    "EdgeCadenceModel",
+    "RoundPlan",
+    "SemiSyncScheduler",
+    "StalenessPolicy",
+    "parse_staleness",
     "engine",
     "CohortEngine",
+    "DeadlineEngine",
     "SuperRoundEngine",
     "participation",
     "ParticipationSpec",
@@ -47,9 +63,11 @@ __all__ = [
     "int8_ef",
     "parse_codec",
     "FailureSimulator",
+    "MaskComposition",
     "StragglerModel",
     "SubtreeOutageSimulator",
     "combine_masks",
+    "compose_masks",
     "FederatedRunner",
     "RunnerConfig",
     "MeshFedPlan",

@@ -25,6 +25,7 @@ benchmark stand-in):
     transport    per-level link codecs (``fed.transport`` grammar)
     aggregators  per-level aggregation statistic (``core.aggregation``)
     failures     failure / straggler injection
+    deadline     semi-synchronous cloud rounds (quorum/deadline/staleness)
     cost         the paper's T/E cost model workload
     network      per-entity cost distributions for the replay simulator
                  (``repro.sim``; inert for training)
@@ -118,12 +119,18 @@ class TopologySpec:
 class ScheduleSpec:
     """The κ-vector: ``kappas[0]`` local steps per edge aggregation,
     ``kappas[l]`` level-l intervals per level-(l+1) aggregation. Length must
-    match the topology depth."""
+    match the topology depth.
+
+    ``async_cloud`` is deprecated: the staleness-1 asynchronous lowering it
+    named was retired in favour of the semi-synchronous deadline engine.
+    Setting it maps onto a ``DeadlineSpec`` (half-quorum, poly:1 staleness
+    decay) with a ``DeprecationWarning`` — configure ``deadline.*``
+    directly instead."""
 
     kappas: Tuple[int, ...] = (6, 10)
     sync_opt_state: bool = False
     delta_cloud: bool = False
-    async_cloud: bool = False
+    async_cloud: bool = False  # deprecated: use the deadline section
 
 
 @dataclasses.dataclass(frozen=True)
@@ -259,6 +266,85 @@ class FailureSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class DeadlineSpec:
+    """Semi-synchronous cloud rounds (``fed.deadline``): edges run their
+    cloud intervals at their own cadence; the cloud closes a round at a
+    deadline/quorum and folds whatever arrived, staleness-decayed. Late
+    edges carry their upload into the next round instead of being dropped.
+
+    ``quorum=1.0`` with ``timeout_s=0`` is the full barrier — under uniform
+    cadences that reproduces the synchronous engine bit-exactly (the parity
+    contract). ``buffer_size=K`` (FedBuff-style) overrides the fractional
+    quorum with an absolute arrival count. ``staleness`` is the
+    ``fed.deadline.parse_staleness`` grammar: ``constant | poly:A | exp:A``.
+
+    Edge cadences: ``mean_interval_s`` pins the base edge-interval seconds
+    directly; when 0 they derive from the straggler model (per-edge max
+    client slowness x κ₁ x mean step time) if one is configured, else from
+    the cost model's ``κ₁·t_comp + t_comm_edge``, else 1s x κ₁.
+    ``edge_speed``/``edge_jitter`` are ``sim.distributions`` grammars for
+    the per-edge slowness draw and the per-round multiplicative jitter."""
+
+    enabled: bool = False
+    timeout_s: float = 0.0  # 0 = no deadline (pure quorum/barrier)
+    quorum: float = 1.0  # fraction of live edges that closes the round
+    buffer_size: int = 0  # absolute arrival count (FedBuff K); 0 = use quorum
+    max_staleness: int = 2  # force-wait bound on an edge's missed rounds
+    staleness: str = "constant"  # constant | poly:A | exp:A
+    edge_drop_rate: float = 0.0  # P(mid-round dropout of an arrived upload)
+    retry_limit: int = 1  # bounded re-upload attempts for dropped edges
+    edge_speed: str = "det"  # per-edge slowness distribution (drawn once)
+    edge_jitter: str = "det"  # per-round interval jitter distribution
+    mean_interval_s: float = 0.0  # 0 = derive from stragglers/costs
+    seed: int = 0
+
+    def build_scheduler(self, *, topology, kappa1: int, kappa2: int,
+                        stragglers=None, costs=None):
+        """The configured ``SemiSyncScheduler`` over this spec's cadence
+        model (None when disabled)."""
+        if not self.enabled:
+            return None
+        from repro.core.hierarchy import as_hierarchy
+        from repro.fed.deadline import EdgeCadenceModel, SemiSyncScheduler
+
+        spec = as_hierarchy(topology)
+        num_edges = spec.num_nodes(spec.depth - 1) if spec.depth >= 2 else 1
+        if stragglers is not None and self.mean_interval_s <= 0:
+            segments = (
+                np.asarray(spec.segments(spec.depth - 1))
+                if spec.depth >= 2
+                else np.zeros(spec.num_clients, np.int64)
+            )
+            cadence = EdgeCadenceModel.from_stragglers(
+                stragglers, segments, num_edges, kappa1,
+                jitter=self.edge_jitter, seed=self.seed,
+            )
+        else:
+            if self.mean_interval_s > 0:
+                base = self.mean_interval_s
+            elif costs is not None:
+                base = kappa1 * costs.t_comp + costs.t_comm_edge
+            else:
+                base = float(kappa1)
+            cadence = EdgeCadenceModel(
+                num_edges, base, speed=self.edge_speed,
+                jitter=self.edge_jitter, seed=self.seed,
+            )
+        return SemiSyncScheduler(
+            cadence,
+            intervals_per_round=kappa2,
+            quorum=self.quorum,
+            timeout_s=self.timeout_s,
+            buffer_size=self.buffer_size,
+            max_staleness=self.max_staleness,
+            staleness=self.staleness,
+            edge_drop_rate=self.edge_drop_rate,
+            retry_limit=self.retry_limit,
+            seed=self.seed,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
 class CostSpec:
     """The paper's T/E accounting (``core.cost_model``). ``workload="none"``
     disables it; ``cloud_latency_mult`` overrides the Table I 10x cloud hop
@@ -312,6 +398,7 @@ class ExperimentSpec:
     aggregators: AggregatorSpec = dataclasses.field(default_factory=AggregatorSpec)
     participation: ParticipationSpec = dataclasses.field(default_factory=ParticipationSpec)
     failures: FailureSpec = dataclasses.field(default_factory=FailureSpec)
+    deadline: DeadlineSpec = dataclasses.field(default_factory=DeadlineSpec)
     cost: CostSpec = dataclasses.field(default_factory=CostSpec)
     network: NetworkSpec = dataclasses.field(default_factory=NetworkSpec)
     run: RunSpec = dataclasses.field(default_factory=RunSpec)
@@ -398,7 +485,6 @@ class ExperimentSpec:
             self.schedule.kappas,
             sync_opt_state=self.schedule.sync_opt_state,
             delta_cloud=self.schedule.delta_cloud,
-            async_cloud=self.schedule.async_cloud,
             transport=self.transport.build(depth),
             aggregators=self.aggregators.build(depth),
             participation=self.participation if self.participation.is_active else None,
@@ -421,6 +507,33 @@ class ExperimentSpec:
         bundle = _model_bundle(self)
         batcher, eval_fn = _build_data(self, topo, bundle)
         failures, stragglers = self.failures.build(tree.num_clients)
+        costs = self.cost.build()
+        deadline_spec = self.deadline
+        if self.schedule.async_cloud and not deadline_spec.enabled:
+            import warnings
+
+            warnings.warn(
+                "schedule.async_cloud is deprecated: the staleness-1 async "
+                "lowering was retired. Routing to the semi-synchronous "
+                "deadline engine (quorum=0.5, poly:1 staleness decay) — the "
+                "cloud folds whatever arrived and late edges carry their "
+                "upload forward, matching the old semantics in kind, not "
+                "bit-for-bit. Under uniform edge cadences every edge arrives "
+                "together, so this reduces to the synchronous engine "
+                "exactly. Configure the deadline.* section directly instead.",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            deadline_spec = dataclasses.replace(
+                deadline_spec, enabled=True, quorum=0.5, staleness="poly:1.0"
+            )
+        deadline = deadline_spec.build_scheduler(
+            topology=topo,
+            kappa1=hier.kappa1,
+            kappa2=hier.kappa2_effective,
+            stragglers=stragglers,
+            costs=costs,
+        )
         checkpointer = None
         if self.run.checkpoint_dir:
             from repro.checkpoint import CheckpointManager
@@ -441,9 +554,10 @@ class ExperimentSpec:
                 engine=self.run.engine,
             ),
             eval_fn=eval_fn,
-            costs=self.cost.build(),
+            costs=costs,
             failures=failures,
             stragglers=stragglers,
+            deadline=deadline,
             checkpointer=checkpointer,
             mesh=self.topology.build_mesh(),
         )
@@ -490,6 +604,13 @@ class ExperimentSpec:
             extras.append(f"precision={tag}")
         if self.failures.p_fail > 0:
             extras.append(f"p_fail={self.failures.p_fail:g}")
+        if self.deadline.enabled:
+            gate = (
+                f"buffer={self.deadline.buffer_size}"
+                if self.deadline.buffer_size
+                else f"quorum={self.deadline.quorum:g}"
+            )
+            extras.append(f"deadline[{gate},{self.deadline.staleness}]")
         tail = (" " + " ".join(extras)) if extras else ""
         return (
             f"{self.name}: {topo} kappas={','.join(map(str, self.schedule.kappas))} "
@@ -783,6 +904,7 @@ __all__ = [
     "AggregatorSpec",
     "CostSpec",
     "DataSpec",
+    "DeadlineSpec",
     "ExperimentSpec",
     "FailureSpec",
     "ModelSpec",

@@ -233,8 +233,37 @@ class SuperRoundEngine:
                     gnorm = float(np.mean(np.sqrt(np.sum(gsq, axis=1))))
                 r._record_round(
                     round_base + j, step, loss, gnorm, alive[j], wire_per_step,
+                    wall_clock_s=self._wall_clock_for(round_base + j),
                 )
         self._pending.clear()
+
+    # -- engine-variant hooks (overridden by DeadlineEngine) ----------------
+    def _dispatch_interval(
+        self, state: FedState, block: PyTree, mask_stack: Optional[np.ndarray], round_base: int
+    ) -> Tuple[FedState, dict]:
+        """Run one cloud interval on device. The stock engine is purely
+        synchronous: upload the mask stack (mesh-permuted when sharded) and
+        dispatch the fused superround executable."""
+        mask_dev = None if mask_stack is None else self._mask_to_device(mask_stack)
+        return self._super(state, block, mask_dev)
+
+    def _eval_mask(self, last_mask: Optional[np.ndarray]) -> Optional[np.ndarray]:
+        """Mask defining the published cloud model for the boundary eval."""
+        return last_mask
+
+    def _wall_clock_for(self, round_index: int) -> float:
+        """Simulated wall-clock seconds at a round's close (0.0 for the
+        synchronous engine, which has no event clock)."""
+        return 0.0
+
+    def _checkpoint_meta(self, end_round: int, batcher_snapshot: dict) -> dict:
+        r = self.runner
+        meta = {"round": end_round, "batcher": batcher_snapshot}
+        if r.failures is not None:
+            meta["failures"] = r.failures.state_dict()
+        if r.stragglers is not None:
+            meta["stragglers"] = r.stragglers.state_dict()
+        return meta
 
     # ------------------------------------------------------------------
     def run_intervals(
@@ -284,8 +313,7 @@ class SuperRoundEngine:
                 mask_stack, alive, last_mask = (
                     static_masks if no_failures else self._masks_for_interval()
                 )
-                mask_dev = None if mask_stack is None else self._mask_to_device(mask_stack)
-                state, metrics = self._super(state, block, mask_dev)
+                state, metrics = self._dispatch_interval(state, block, mask_stack, round_base)
                 self._pending.append((round_base, alive, metrics))
 
                 end_round = round_base + self.k2  # rounds completed so far
@@ -303,18 +331,15 @@ class SuperRoundEngine:
                     self._flush(wire_per_step)
                 acc = None
                 if do_eval:
-                    mask_last = None if last_mask is None else jnp.asarray(last_mask)
+                    mask_eval = self._eval_mask(last_mask)
+                    mask_last = None if mask_eval is None else jnp.asarray(mask_eval)
                     cloud0 = r.eval_model(self._canonical_params(state), mask_last)
                     acc = float(r.eval_fn(cloud0))
                     r.history[-1].accuracy = acc
                 if do_ckpt:
                     # the live batcher has prefetched ahead; the snapshot is
                     # the cursor state as of THIS block's cloud boundary
-                    meta = {"round": end_round, "batcher": batcher_snapshot}
-                    if r.failures is not None:
-                        meta["failures"] = r.failures.state_dict()
-                    if r.stragglers is not None:
-                        meta["stragglers"] = r.stragglers.state_dict()
+                    meta = self._checkpoint_meta(end_round, batcher_snapshot)
                     save_state = state if self.mesh is None else self._unshard_state(state)
                     r.checkpointer.save(r.history[-1].step, save_state, meta)
                 if acc is not None and r.cfg.target_accuracy and acc >= r.cfg.target_accuracy:
@@ -326,6 +351,131 @@ class SuperRoundEngine:
         if self.mesh is not None:
             state = self._unshard_state(state)
         return state, stopped
+
+
+class DeadlineEngine(SuperRoundEngine):
+    """Semi-synchronous cloud rounds: the superround engine driven by a
+    ``fed.deadline.SemiSyncScheduler`` event queue.
+
+    Per cloud interval the scheduler advances every edge's upload clock and
+    closes the round at the configured deadline/quorum, returning a
+    ``RoundPlan``. A *trivial* plan (every edge folded on time at weight 1
+    — always the case under uniform cadences with the full-quorum barrier)
+    dispatches the stock ``build_super_round`` executable, so the parity
+    contract with the synchronous engine is bit-exact *by construction*:
+    same jitted function, same inputs. Non-trivial plans dispatch the gated
+    ``build_deadline_super_round`` executable: folded edges contribute at
+    staleness-decayed weight and receive the broadcast; late edges keep
+    their edge-synced model and carry the upload into the next round.
+
+    The ``dead`` channel of the runner's mask composition (outages — see
+    ``fed.failures.compose_masks``) feeds the scheduler so a dead edge is
+    skip-and-reweighted instead of force-waited: only *late* edges, whose
+    upload is actually coming, can hold the cloud past its deadline.
+
+    Wall-clock accounting: each round record gets ``wall_clock_s`` from the
+    event clock (rounds inside an interval interpolate linearly to the
+    interval's close — the cloud only observes time at its own boundaries).
+    Boundary evals aggregate over folded edges only: that is the model the
+    cloud actually published. Checkpoints add the scheduler's full event
+    state (clock, per-edge finish times, staleness, retry credits, RNG)
+    under ``meta["deadline"]`` so interrupted semi-synchronous runs resume
+    on the identical event sequence.
+
+    Single-device only for now: the gated top sync wants the whole client
+    axis for its per-edge select (the runner's eligibility check reports
+    this, mirroring the mesh/cohort predicates).
+    """
+
+    def __init__(self, runner, *, donate: bool = True, prefetch: bool = True):
+        if runner.mesh is not None:
+            raise ValueError(
+                "the deadline engine is single-device (the gated cloud sync "
+                "selects per-edge over the whole client axis); drop the mesh"
+            )
+        if getattr(runner.cfg, "engine", "") == "megakernel":
+            raise ValueError("the deadline engine and the megakernel lowering do not compose")
+        super().__init__(runner, donate=donate, prefetch=prefetch)
+        from repro.core.hierfavg import build_deadline_super_round
+
+        self.scheduler = runner.deadline
+        if self.scheduler is None:
+            raise ValueError("DeadlineEngine needs runner.deadline (a SemiSyncScheduler)")
+        spec = as_hierarchy(runner.topology)
+        # the unit that talks to the cloud: the top-minus-one tier (edges on
+        # two-level trees, regions on deeper ones; the whole client set when
+        # clients report straight to the cloud)
+        if spec.depth >= 2:
+            self._gate_segments = np.asarray(spec.segments(spec.depth - 1))
+            num_units = spec.num_nodes(spec.depth - 1)
+        else:
+            self._gate_segments = np.zeros(spec.num_clients, np.int64)
+            num_units = 1
+        if self.scheduler.num_edges != num_units:
+            raise ValueError(
+                f"scheduler models {self.scheduler.num_edges} edge(s) but the "
+                f"tree has {num_units} cloud-facing unit(s)"
+            )
+        fn = build_deadline_super_round(
+            runner.loss_fn,
+            runner.optimizer,
+            runner.topology,
+            runner.hier_config,
+            runner.weights,
+            grad_accum=runner.grad_accum,
+        )
+        self._gated = jax.jit(fn, donate_argnums=(0,) if donate else ())
+        self._wall: dict = {}  # round index -> event-clock seconds at close
+        self._last_plan = None
+
+    # ------------------------------------------------------------------
+    def _dead_units(self, mask_stack: Optional[np.ndarray]) -> Optional[np.ndarray]:
+        """(E,) bool: units with zero surviving clients at the interval's
+        cloud boundary, from the outage channel when the runner tracked one
+        (late stragglers must NOT count — their upload is still coming)."""
+        r = self.runner
+        parts = getattr(r, "_last_mask_parts", None)
+        dead_clients = None
+        if parts is not None and parts.dead is not None:
+            dead_clients = parts.dead  # 1 = outage, straggler channel excluded
+        elif mask_stack is not None and r.stragglers is None:
+            dead_clients = (mask_stack[-1] == 0).astype(np.float32)
+        if dead_clients is None:
+            return None
+        e = self.scheduler.num_edges
+        alive_per_unit = np.zeros(e, np.float64)
+        np.add.at(alive_per_unit, self._gate_segments, 1.0 - dead_clients)
+        return alive_per_unit == 0
+
+    def _dispatch_interval(self, state, block, mask_stack, round_base):
+        plan = self.scheduler.next_round(dead=self._dead_units(mask_stack))
+        self._last_plan = plan
+        start, close = plan.start, plan.close
+        for j in range(self.k2):
+            # the cloud observes time at its boundaries; interior edge
+            # intervals interpolate linearly for plotting/bench purposes
+            self._wall[round_base + j] = start + (close - start) * (j + 1) / self.k2
+        if plan.is_trivial:
+            # stock executable, stock inputs: bit-exact vs SuperRoundEngine
+            return super()._dispatch_interval(state, block, mask_stack, round_base)
+        gate = jnp.asarray(plan.client_gate(self._gate_segments))
+        mask_dev = None if mask_stack is None else jnp.asarray(mask_stack)
+        return self._gated(state, block, gate, mask_dev)
+
+    def _eval_mask(self, last_mask):
+        plan = self._last_plan
+        if plan is None or plan.is_trivial:
+            return last_mask
+        folded = plan.folded[self._gate_segments].astype(np.float32)
+        return folded if last_mask is None else last_mask * folded
+
+    def _wall_clock_for(self, round_index: int) -> float:
+        return float(self._wall.get(round_index, 0.0))
+
+    def _checkpoint_meta(self, end_round: int, batcher_snapshot: dict) -> dict:
+        meta = super()._checkpoint_meta(end_round, batcher_snapshot)
+        meta["deadline"] = self.scheduler.state_dict()
+        return meta
 
 
 class CohortEngine:

@@ -28,7 +28,7 @@ ordinary (N,) float arrays so the jitted step never recompiles.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -154,3 +154,55 @@ def combine_masks(*masks: Optional[np.ndarray]) -> Optional[np.ndarray]:
             continue
         out = m if out is None else out * m
     return out
+
+
+class MaskComposition(NamedTuple):
+    """Survival masks split by *why* a client is missing a boundary.
+
+    ``effective`` is the plain product of every mask (what the aggregation
+    operators consume — identical to ``combine_masks`` over all inputs).
+    ``late`` flags clients whose compute finished but whose upload missed
+    the boundary (straggler deadline): their model is fresh and the upload
+    can be deferred to the next boundary. ``dead`` flags clients with no
+    contribution at all (outage): nothing exists to defer. A client that is
+    both dead and slow counts as dead — there is no upload to be late with.
+    All three are None when no mask of that kind was supplied.
+    """
+
+    effective: Optional[np.ndarray]
+    late: Optional[np.ndarray]
+    dead: Optional[np.ndarray]
+
+    @property
+    def late_count(self) -> int:
+        return 0 if self.late is None else int(np.sum(self.late > 0))
+
+    @property
+    def dead_count(self) -> int:
+        return 0 if self.dead is None else int(np.sum(self.dead > 0))
+
+
+def compose_masks(
+    dead: Sequence[Optional[np.ndarray]] = (),
+    late: Sequence[Optional[np.ndarray]] = (),
+) -> MaskComposition:
+    """Compose outage masks (``dead``: 0 = no contribution) with straggler
+    masks (``late``: 0 = compute done, upload deferred) without losing the
+    distinction ``combine_masks`` erases.
+
+    Returns a :class:`MaskComposition` whose ``effective`` channel equals
+    ``combine_masks(*dead, *late)`` bit for bit — existing aggregation
+    semantics are unchanged — plus indicator channels: ``late[i] = 1`` iff
+    client i survived every outage mask but was zeroed by a straggler mask,
+    ``dead[i] = 1`` iff client i was zeroed by an outage mask.
+    """
+    dead_m = combine_masks(*dead)
+    late_m = combine_masks(*late)
+    effective = combine_masks(dead_m, late_m)
+    dead_ind = None if dead_m is None else (dead_m == 0).astype(np.float32)
+    late_ind = None
+    if late_m is not None:
+        late_ind = (late_m == 0).astype(np.float32)
+        if dead_m is not None:
+            late_ind = late_ind * (dead_m != 0)  # dead wins: nothing to defer
+    return MaskComposition(effective=effective, late=late_ind, dead=dead_ind)

@@ -51,7 +51,7 @@ from repro.core.hierfavg import (
     init_state,
 )
 from repro.dist import collectives
-from repro.fed.failures import FailureSimulator, StragglerModel, combine_masks
+from repro.fed.failures import FailureSimulator, StragglerModel, compose_masks
 
 PyTree = Any
 
@@ -96,6 +96,9 @@ class RoundRecord:
     accuracy: Optional[float] = None
     wire_mb: float = 0.0  # cumulative uplink MB/client on the compressed wire
     grad_norm: Optional[float] = None  # mean stacked-gradient norm over the round
+    # event-clock seconds at the round's close under the deadline engine
+    # (0.0 for the synchronous drivers, which have no event clock)
+    wall_clock_s: float = 0.0
 
 
 class FederatedRunner:
@@ -113,6 +116,7 @@ class FederatedRunner:
         costs: Optional[cm.WorkloadCosts] = None,
         failures: Optional[FailureSimulator] = None,
         stragglers: Optional[StragglerModel] = None,
+        deadline=None,  # fed.deadline.SemiSyncScheduler (semi-synchronous cloud)
         checkpointer=None,  # checkpoint.manager.CheckpointManager
         grad_accum: int = 1,
         mesh=None,
@@ -137,6 +141,11 @@ class FederatedRunner:
             )
         self.failures = failures
         self.stragglers = stragglers
+        self.deadline = deadline
+        # the most recent mask composition's channels (dead vs late) — the
+        # deadline engine reads the dead channel to skip-and-reweight outaged
+        # edges without force-waiting on them
+        self._last_mask_parts = None
         self.checkpointer = checkpointer
         self.grad_accum = grad_accum
         self.mesh = mesh if mesh is not None else runner_config.mesh
@@ -218,6 +227,10 @@ class FederatedRunner:
                 self.failures.load_state_dict(meta["failures"])
             if self.stragglers is not None and "stragglers" in meta:
                 self.stragglers.load_state_dict(meta["stragglers"])
+            if self.deadline is not None and "deadline" in meta:
+                # the scheduler's event queue + staleness state resume the
+                # identical event sequence an uninterrupted run would produce
+                self.deadline.load_state_dict(meta["deadline"])
             return state, int(meta.get("round", 0))
         return state, 0
 
@@ -243,15 +256,23 @@ class FederatedRunner:
 
     # ------------------------------------------------------------------
     def _mask_for_round(self) -> Optional[np.ndarray]:
-        masks = []
+        """Per-round survival mask; the combined mask is bit-identical to the
+        historical ``combine_masks`` of every model, but the composition keeps
+        the *dead* (outage: no contribution) and *late* (deadline miss: the
+        compute happened, the upload is deferred) channels apart on
+        ``_last_mask_parts`` for the deadline engine."""
+        dead = []
+        late = []
         if self.failures is not None:
-            masks.append(self.failures.step())
+            dead.append(self.failures.step())
         if self.stragglers is not None:
             m, _ = self.stragglers.survivors(
                 self.hier_config.kappa1, None
             )
-            masks.append(m)
-        return combine_masks(*masks)
+            late.append(m)
+        parts = compose_masks(dead=dead, late=late)
+        self._last_mask_parts = parts
+        return parts.effective
 
     def eval_model(self, params: PyTree, mask: Optional[jnp.ndarray]) -> PyTree:
         """The single cloud model the eval/serving path should score: the
@@ -296,6 +317,7 @@ class FederatedRunner:
         mask_alive: int,
         wire_per_step: float,
         accuracy: Optional[float] = None,
+        wall_clock_s: float = 0.0,
     ) -> RoundRecord:
         """Assemble and append one round's ``RoundRecord`` — the single
         site both drivers (per-round loop and superround engine) share, so
@@ -317,6 +339,7 @@ class FederatedRunner:
             accuracy=accuracy,
             wire_mb=step * wire_per_step / 1e6,
             grad_norm=grad_norm,
+            wall_clock_s=wall_clock_s,
         )
         self.history.append(record)
         return record
@@ -474,6 +497,60 @@ class FederatedRunner:
                 return f"{name}={every} is finer than a cloud interval (kappa2_eff={k2})"
         return None
 
+    def _deadline_reason(self, start_round: int) -> Optional[str]:
+        """None if the run can go through the semi-synchronous deadline
+        engine, else why not. Like sampled participation there is no
+        per-round fallback — a scheduler was configured, so silently running
+        synchronous would change the experiment — every constraint is a hard
+        error with a named reason."""
+        from repro.core.hierfavg import deadline_incompatibility
+
+        if self.participation is not None:
+            return "sampled participation runs through the cohort engine"
+        reason = deadline_incompatibility(self.hier_config, self.topology)
+        if reason is not None:
+            return reason
+        if self.cfg.engine == "per_round":
+            return "engine='per_round' has no deadline lowering"
+        if self.cfg.engine == "megakernel":
+            return "the deadline engine and the megakernel lowering do not compose"
+        if self.mesh is not None:
+            return (
+                "the deadline engine is single-device (the gated cloud sync "
+                "selects per-edge over the whole client axis); drop the mesh"
+            )
+        if self._state_shardings is not None:
+            return "an explicit state_shardings pytree pins the legacy per-round mesh path"
+        k2 = self.hier_config.kappa2_effective
+        if start_round % k2:
+            return f"start_round {start_round} is not a cloud boundary (kappa2_eff={k2})"
+        if (self.cfg.num_rounds - start_round) % k2:
+            return f"num_rounds {self.cfg.num_rounds} is not a whole number of cloud intervals"
+        for name, every in (
+            ("eval_every", self.cfg.eval_every),
+            ("checkpoint_every", self.cfg.checkpoint_every),
+        ):
+            if every and every % k2 != 0:
+                return f"{name}={every} is finer than a cloud interval (kappa2_eff={k2})"
+        return None
+
+    def _run_deadline(self, state: FedState, start_round: int) -> FedState:
+        reason = self._deadline_reason(start_round)
+        if reason is not None:
+            raise ValueError(f"the deadline engine cannot run: {reason}")
+        k2 = self.hier_config.kappa2_effective
+        intervals = (self.cfg.num_rounds - start_round) // k2
+        if intervals <= 0:
+            return state
+        if self._engine is None:
+            from repro.fed.engine import DeadlineEngine
+
+            self._engine = DeadlineEngine(self)
+        state, _ = self._engine.run_intervals(
+            state, start_round=start_round, num_intervals=intervals
+        )
+        return state
+
     def _run_cohort(self, state: FedState, start_round: int) -> FedState:
         reason = self._cohort_reason(start_round)
         if reason is not None:
@@ -495,6 +572,8 @@ class FederatedRunner:
         mode = self.cfg.engine  # validated by RunnerConfig.__post_init__
         if self.participation is not None:
             return self._run_cohort(state, start_round)
+        if self.deadline is not None:
+            return self._run_deadline(state, start_round)
         k2 = self.hier_config.kappa2_effective
         if mode != "per_round":
             eligible = self._superround_eligible(start_round)

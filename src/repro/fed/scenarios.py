@@ -19,6 +19,7 @@ from repro.fed.api import (
     AggregatorSpec,
     CostSpec,
     DataSpec,
+    DeadlineSpec,
     ExperimentSpec,
     FailureSpec,
     ModelSpec,
@@ -301,6 +302,56 @@ def _straggler_tail() -> ExperimentSpec:
         failures=FailureSpec(straggler_sigma=0.4, straggler_mean_s=1.0, seed=5),
         network=NetworkSpec(
             compute_jitter="lognormal:0.4", jitter_granularity="interval", seed=5
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Semi-synchronous deadline scenarios (fed.deadline; docs/robustness.md)
+# ---------------------------------------------------------------------------
+
+@register(
+    "deadline_straggler",
+    "semi-sync: 60% quorum over the straggler tail's edge cadences with "
+    "mid-round edge dropout — late edges carry, dead edges are reweighted",
+)
+def _deadline_straggler() -> ExperimentSpec:
+    return _bench(
+        "deadline_straggler", kappas=(6, 10), partition="edge_iid", rounds=40,
+        failures=FailureSpec(straggler_sigma=0.4, straggler_mean_s=1.0, seed=5),
+        deadline=DeadlineSpec(
+            enabled=True, quorum=0.6, max_staleness=3,
+            staleness="poly:0.5", edge_drop_rate=0.05, retry_limit=1, seed=5,
+        ),
+    )
+
+
+@register(
+    "fedbuff_k4",
+    "semi-sync: FedBuff-style buffered aggregation — the cloud folds the "
+    "first K=4 edge arrivals per round under heterogeneous edge speeds",
+)
+def _fedbuff_k4() -> ExperimentSpec:
+    return _bench(
+        "fedbuff_k4", kappas=(6, 10), partition="edge_iid", rounds=40,
+        deadline=DeadlineSpec(
+            enabled=True, buffer_size=4, max_staleness=3,
+            staleness="poly:0.5", edge_speed="lognormal:0.5", seed=7,
+        ),
+    )
+
+
+@register(
+    "stale_decay",
+    "semi-sync: 80% quorum with exponential staleness decay exp:0.7 — "
+    "stragglers' carried updates fold at geometrically shrinking weight",
+)
+def _stale_decay() -> ExperimentSpec:
+    return _bench(
+        "stale_decay", kappas=(6, 10), partition="edge_iid", rounds=40,
+        deadline=DeadlineSpec(
+            enabled=True, quorum=0.8, max_staleness=4,
+            staleness="exp:0.7", edge_speed="lognormal:0.4", seed=9,
         ),
     )
 

@@ -122,9 +122,6 @@ def test_config_validates_aggregator_depth_and_flags():
     with pytest.raises(ValueError, match="delta_cloud"):
         HierFAVGConfig(kappa1=2, kappa2=2, delta_cloud=True,
                        aggregators=AggregatorSpec.parse("weighted_mean/median"))
-    with pytest.raises(ValueError, match="async_cloud"):
-        HierFAVGConfig(kappa1=2, kappa2=2, async_cloud=True,
-                       aggregators=AggregatorSpec.parse("median/weighted_mean"))
     # robust edge + delta top is fine; trivial spec composes with anything
     HierFAVGConfig(kappa1=2, kappa2=2, delta_cloud=True,
                    aggregators=AggregatorSpec.parse("median/weighted_mean"))

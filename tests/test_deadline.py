@@ -1,0 +1,469 @@
+"""Semi-synchronous tiered engine: deadline/quorum scheduling, staleness
+decay, fault injection, and the bit-exact parity contract with the
+synchronous superround engine (fed.deadline + fed.engine.DeadlineEngine +
+core.hierfavg.build_deadline_super_round)."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.fed.api import ExperimentSpec
+from repro.fed.deadline import (
+    EdgeCadenceModel,
+    SemiSyncScheduler,
+    StalenessPolicy,
+    parse_staleness,
+)
+from repro.fed.failures import StragglerModel
+
+
+# ---------------------------------------------------------------------------
+# Staleness policies
+# ---------------------------------------------------------------------------
+
+
+def test_staleness_grammar_and_math():
+    s = np.arange(5)
+    np.testing.assert_array_equal(parse_staleness("constant").weights(s), np.ones(5))
+    poly = parse_staleness("poly:2")
+    np.testing.assert_allclose(poly.weights(s), (1.0 + s) ** -2.0)
+    exp = parse_staleness("exp:0.5")
+    np.testing.assert_allclose(exp.weights(s), np.exp(-0.5 * s))
+    assert parse_staleness("constant").is_trivial
+    assert parse_staleness("poly:0").is_trivial
+    assert not exp.is_trivial
+    assert exp.describe() == "exp:0.5"
+
+
+def test_staleness_weight_is_exactly_one_at_zero():
+    """The parity contract rides on this: an on-time update is weighted at
+    exactly 1.0 under every policy, so a trivial plan's gate is all-ones."""
+    for text in ("constant", "poly:1.7", "exp:0.3"):
+        w = parse_staleness(text).weights(np.zeros(3))
+        assert (w == 1.0).all(), text
+
+
+def test_staleness_parse_errors():
+    for bad in ("poly", "poly:x", "exp:", "poly:-1", "linear:2", "constant:3"):
+        with pytest.raises(ValueError):
+            parse_staleness(bad)
+
+
+# ---------------------------------------------------------------------------
+# Edge cadence
+# ---------------------------------------------------------------------------
+
+
+def test_cadence_deterministic_and_resumable():
+    a = EdgeCadenceModel(4, 2.0, speed="lognormal:0.5", jitter="lognormal:0.2", seed=7)
+    b = EdgeCadenceModel(4, 2.0, speed="lognormal:0.5", jitter="lognormal:0.2", seed=7)
+    np.testing.assert_array_equal(a.slowness, b.slowness)
+    np.testing.assert_array_equal(a.interval_durations(), b.interval_durations())
+    snap = a.state_dict()
+    ahead = [a.interval_durations() for _ in range(3)]
+    b.load_state_dict(snap)
+    for d in ahead:
+        np.testing.assert_array_equal(d, b.interval_durations())
+
+
+def test_cadence_det_is_uniform():
+    c = EdgeCadenceModel(3, 1.5)
+    np.testing.assert_array_equal(c.slowness, np.ones(3))
+    np.testing.assert_array_equal(c.interval_durations(), np.full(3, 1.5))
+
+
+def test_cadence_from_stragglers_per_edge_max_and_no_rng_draw():
+    """An edge finishes when its slowest client does; deriving the cadence
+    must not consume the straggler model's RNG stream (which drives the
+    training-visible survival masks)."""
+    model = StragglerModel(6, mean_step_s=2.0, sigma=0.6, seed=3)
+    twin = StragglerModel(6, mean_step_s=2.0, sigma=0.6, seed=3)
+    segments = np.array([0, 0, 0, 1, 1, 1])
+    cad = EdgeCadenceModel.from_stragglers(model, segments, 2, kappa1=4, seed=0)
+    np.testing.assert_array_equal(
+        cad.slowness, [model.slowness[:3].max(), model.slowness[3:].max()]
+    )
+    assert cad.base_interval_s == 4 * 2.0
+    # the twin never produced a cadence: masks must still match draw-for-draw
+    np.testing.assert_array_equal(
+        model.survivors(4, None)[0], twin.survivors(4, None)[0]
+    )
+
+
+def test_cadence_from_stragglers_clientless_edge_nominal():
+    model = StragglerModel(2, sigma=0.5, seed=1)
+    cad = EdgeCadenceModel.from_stragglers(model, np.array([0, 0]), 3, kappa1=2)
+    assert cad.slowness[1] == 1.0 and cad.slowness[2] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Scheduler semantics
+# ---------------------------------------------------------------------------
+
+
+def _uniform_sched(**kw):
+    return SemiSyncScheduler(EdgeCadenceModel(4, 1.0), **kw)
+
+
+def _slow_edge_sched(slow=6.0, **kw):
+    cad = EdgeCadenceModel(4, 1.0, slowness=np.array([1.0, 1.0, 1.0, slow]))
+    return SemiSyncScheduler(cad, **kw)
+
+
+def test_barrier_plans_are_trivial():
+    sched = _uniform_sched(quorum=1.0)
+    assert sched.is_barrier
+    for r in range(5):
+        plan = sched.next_round()
+        assert plan.is_trivial
+        assert plan.folded.all() and (plan.weights == 1.0).all()
+        assert plan.close == pytest.approx(r + 1.0)  # lockstep clock
+
+
+def test_quorum_leaves_slow_edge_behind_then_folds_it_stale():
+    sched = _slow_edge_sched(quorum=0.75, staleness="poly:1", max_staleness=5)
+    p0 = sched.next_round()
+    np.testing.assert_array_equal(p0.folded, [True, True, True, False])
+    assert p0.close == pytest.approx(1.0)  # 3rd of the fast arrivals
+    assert not p0.is_trivial
+    # fast edges restart, slow edge stays in flight with its original finish
+    p1 = sched.next_round()
+    np.testing.assert_array_equal(p1.arrivals[3], 6.0)
+    # ... until its upload lands; it then folds at poly-decayed weight
+    stale_fold = None
+    for _ in range(8):
+        p = sched.next_round()
+        if p.folded[3]:
+            stale_fold = p
+            break
+    assert stale_fold is not None
+    s = stale_fold.staleness[3]
+    assert s > 0
+    assert stale_fold.weights[3] == pytest.approx((1.0 + s) ** -1.0)
+    assert (stale_fold.weights[:3] == 1.0).all()  # on-time edges undecayed
+
+
+def test_fedbuff_buffer_size_overrides_quorum():
+    cad = EdgeCadenceModel(4, 1.0, slowness=np.array([1.0, 2.0, 3.0, 4.0]))
+    sched = SemiSyncScheduler(cad, buffer_size=2, quorum=1.0, max_staleness=10)
+    plan = sched.next_round()
+    assert plan.close == pytest.approx(2.0)  # K=2nd arrival, quorum ignored
+    np.testing.assert_array_equal(plan.folded, [True, True, False, False])
+
+
+def test_timeout_caps_close_but_never_before_first_arrival():
+    cad = EdgeCadenceModel(3, 1.0, slowness=np.array([1.0, 5.0, 9.0]))
+    sched = SemiSyncScheduler(cad, quorum=1.0, timeout_s=3.0, max_staleness=10)
+    plan = sched.next_round()
+    assert plan.close == pytest.approx(3.0)  # capped below the barrier's 9.0
+    np.testing.assert_array_equal(plan.folded, [True, False, False])
+    # timeout shorter than every arrival: wait for the first upload anyway
+    tight = SemiSyncScheduler(
+        EdgeCadenceModel(2, 1.0, slowness=np.array([2.0, 4.0])),
+        quorum=1.0, timeout_s=0.5, max_staleness=10,
+    )
+    p = tight.next_round()
+    assert p.close == pytest.approx(2.0) and p.folded[0]
+
+
+def test_max_staleness_is_a_hard_bound():
+    sched = _slow_edge_sched(slow=10.0, quorum=0.5, max_staleness=2)
+    seen = []
+    for _ in range(12):
+        p = sched.next_round()
+        seen.append(int(p.staleness.max()))
+        # a live edge at the bound forces the round to wait for it
+        assert (sched.staleness <= 2).all()
+    assert max(seen) == 2  # the bound is reached, never exceeded
+
+
+def test_dropout_retries_then_abandons():
+    cad = EdgeCadenceModel(1, 1.0)
+    sched = SemiSyncScheduler(
+        cad, quorum=1.0, edge_drop_rate=0.6, retry_limit=1, seed=12,
+        max_staleness=50,
+    )
+    saw_drop = saw_retry_fold = saw_exhaust = False
+    prev = None
+    for _ in range(40):
+        plan = sched.next_round()
+        if plan.dropped[0]:
+            assert plan.weights[0] == 0.0 and not plan.folded[0]
+            saw_drop = True
+        if prev is not None and prev.dropped[0]:
+            # a retried upload is ready immediately at the new round's start
+            if plan.arrivals[0] == plan.start:
+                saw_retry_fold = saw_retry_fold or bool(plan.folded[0])
+            else:
+                # retry exhausted: the edge recomputed a fresh interval
+                assert plan.arrivals[0] > plan.start
+                saw_exhaust = True
+        prev = plan
+    assert saw_drop and saw_retry_fold and saw_exhaust
+
+
+def test_dead_edges_excluded_from_quorum_and_fold():
+    cad = EdgeCadenceModel(2, 1.0, slowness=np.array([1.0, 3.0]))
+    sched = SemiSyncScheduler(cad, quorum=1.0, max_staleness=10)
+    plan = sched.next_round(dead=np.array([False, True]))
+    np.testing.assert_array_equal(plan.dead, [False, True])
+    np.testing.assert_array_equal(plan.folded, [True, False])
+    assert plan.close == pytest.approx(1.0)  # did not wait for the dead edge
+    assert not plan.is_trivial  # the dead edge must not receive the broadcast
+
+
+def test_total_outage_closes_immediately():
+    sched = _uniform_sched()
+    plan = sched.next_round(dead=np.ones(4, bool))
+    assert plan.close == plan.start and not plan.folded.any()
+
+
+def test_scheduler_state_roundtrip_mid_stream():
+    def plans_equal(a, b):
+        for x, y in zip(a, b):
+            for fa, fb in zip(x, y):
+                np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))
+
+    def make():
+        cad = EdgeCadenceModel(
+            4, 1.0, speed="lognormal:0.5", jitter="lognormal:0.2", seed=5
+        )
+        return SemiSyncScheduler(
+            cad, quorum=0.5, staleness="exp:0.4", edge_drop_rate=0.3,
+            retry_limit=2, max_staleness=3, seed=5,
+        )
+
+    a = make()
+    for _ in range(3):
+        a.next_round()
+    snap = a.state_dict()
+    ahead = [a.next_round() for _ in range(5)]
+    b = make()
+    for _ in range(1):  # different position: load must fully overwrite
+        b.next_round()
+    b.load_state_dict(snap)
+    plans_equal(ahead, [b.next_round() for _ in range(5)])
+
+
+def test_scheduler_state_survives_json():
+    """The state rides checkpoint metadata, which is JSON on disk — the
+    manager's ndarray encoding must round-trip it exactly."""
+    from repro.checkpoint.manager import _jsonable, _unjsonable
+
+    a = _uniform_sched(quorum=0.5, edge_drop_rate=0.2, seed=9)
+    for _ in range(3):
+        a.next_round()
+    wire = json.loads(json.dumps(_jsonable(a.state_dict())))
+    b = _uniform_sched(quorum=0.5, edge_drop_rate=0.2, seed=9)
+    b.load_state_dict(_unjsonable(wire))
+    pa, pb = a.next_round(), b.next_round()
+    for fa, fb in zip(pa, pb):
+        np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))
+
+
+def test_scheduler_validation_errors():
+    cad = EdgeCadenceModel(2, 1.0)
+    for kw in (
+        {"quorum": 0.0},
+        {"quorum": 1.5},
+        {"timeout_s": -1.0},
+        {"buffer_size": 3},
+        {"max_staleness": -1},
+        {"edge_drop_rate": 1.0},
+        {"retry_limit": -1},
+        {"intervals_per_round": 0},
+    ):
+        with pytest.raises(ValueError):
+            SemiSyncScheduler(cad, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: parity contract, wall clock, resume
+# ---------------------------------------------------------------------------
+
+
+def _small_spec(*overrides):
+    return ExperimentSpec.parse(
+        [
+            "topology.num_edges=3",
+            "topology.clients_per_edge=4",
+            "schedule.kappas=2,4",
+            "data.num_samples=400",
+            "run.num_rounds=8",
+            "run.eval_every=4",
+            *overrides,
+        ]
+    )
+
+
+def _history_rows(runner, skip=()):
+    import dataclasses as dc
+
+    return [
+        tuple(getattr(h, f.name) for f in dc.fields(h) if f.name not in skip)
+        for h in runner.history
+    ]
+
+
+def _assert_params_equal(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_parity_contract_barrier_is_bit_exact():
+    """Tier-1 gate: uniform cadences + full quorum + trivial staleness
+    reproduce the synchronous superround engine bit-exactly — params and
+    history (the event clock is the one additive new column)."""
+    r_sync, s_sync = _small_spec().run_experiment()
+    r_dl, s_dl = _small_spec(
+        "deadline.enabled=true", "deadline.quorum=1.0"
+    ).run_experiment()
+    from repro.fed.engine import DeadlineEngine, SuperRoundEngine
+
+    assert type(r_sync._engine) is SuperRoundEngine
+    assert type(r_dl._engine) is DeadlineEngine
+    _assert_params_equal(s_sync.params, s_dl.params)
+    _assert_params_equal(s_sync.opt_state, s_dl.opt_state)
+    np.testing.assert_array_equal(np.asarray(s_sync.rng), np.asarray(s_dl.rng))
+    assert _history_rows(r_sync, skip=("wall_clock_s",)) == _history_rows(
+        r_dl, skip=("wall_clock_s",)
+    )
+    # the synchronous engine has no event clock; the deadline engine's is
+    # strictly increasing
+    assert all(h.wall_clock_s == 0.0 for h in r_sync.history)
+    walls = [h.wall_clock_s for h in r_dl.history]
+    assert all(b > a for a, b in zip(walls, walls[1:])) and walls[0] > 0
+
+
+def test_parity_contract_with_stragglers():
+    """Client-level straggler masks keep the stock executable as long as no
+    whole edge dies: the deadline barrier must stay bit-exact under them."""
+    ov = ("failures.straggler_sigma=0.3", "failures.straggler_mean_s=1.0")
+    r_sync, s_sync = _small_spec(*ov).run_experiment()
+    r_dl, s_dl = _small_spec(
+        *ov, "deadline.enabled=true", "deadline.quorum=1.0",
+        "deadline.edge_jitter=det",
+    ).run_experiment()
+    _assert_params_equal(s_sync.params, s_dl.params)
+    assert _history_rows(r_sync, skip=("wall_clock_s",)) == _history_rows(
+        r_dl, skip=("wall_clock_s",)
+    )
+    # with stragglers the cadence derives from the model's slowness tail
+    assert r_dl.deadline.cadence.base_interval_s == pytest.approx(2.0)
+    assert r_dl.deadline.cadence.slowness.max() > 1.0
+
+
+def test_deadline_run_quorum_heterogeneous():
+    spec = _small_spec(
+        "deadline.enabled=true", "deadline.quorum=0.67",
+        "deadline.edge_speed=lognormal:0.6", "deadline.staleness=poly:0.5",
+        "deadline.max_staleness=3",
+    )
+    runner, state = spec.run_experiment()
+    assert len(runner.history) == 8
+    walls = [h.wall_clock_s for h in runner.history]
+    assert all(b > a for a, b in zip(walls, walls[1:]))
+    assert runner.history[-1].accuracy is not None
+    for leaf in jax.tree_util.tree_leaves(state.params):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+def test_deadline_resume_parity(tmp_path):
+    """Interrupted + resumed == straight run, bit for bit: the checkpoint
+    carries the scheduler's event queue + staleness state (mirroring the
+    cohort resume-parity contract)."""
+    def overrides(ckpt_dir):
+        return (
+            "deadline.enabled=true", "deadline.quorum=0.67",
+            "deadline.edge_speed=lognormal:0.6", "deadline.staleness=poly:1",
+            "deadline.edge_drop_rate=0.2", "deadline.seed=3",
+            "run.checkpoint_every=4", f"run.checkpoint_dir={ckpt_dir}",
+        )
+
+    straight, s_straight = _small_spec(*overrides(tmp_path / "a")).run_experiment()
+
+    _small_spec(*overrides(tmp_path / "b"), "run.num_rounds=4").run_experiment()
+    resumed_spec = _small_spec(*overrides(tmp_path / "b"))
+    resumed, s_resumed = resumed_spec.run_experiment(resume=True)
+
+    _assert_params_equal(s_straight.params, s_resumed.params)
+    _assert_params_equal(s_straight.opt_state, s_resumed.opt_state)
+    np.testing.assert_array_equal(np.asarray(s_straight.rng), np.asarray(s_resumed.rng))
+    # the resumed history covers rounds 4..7; rows must match the straight
+    # run's tail field-for-field, wall clock included
+    assert _history_rows(resumed) == _history_rows(straight)[4:]
+
+
+def test_deadline_engine_rejects_bad_cadences():
+    spec = _small_spec("deadline.enabled=true", "run.eval_every=3")
+    with pytest.raises(ValueError, match="eval_every"):
+        spec.run_experiment()
+    spec = _small_spec("deadline.enabled=true", "run.engine=per_round")
+    with pytest.raises(ValueError, match="per_round"):
+        spec.run_experiment()
+    spec = _small_spec("deadline.enabled=true", "run.engine=megakernel")
+    with pytest.raises(ValueError, match="megakernel"):
+        spec.run_experiment()
+
+
+def test_deadline_rejects_transport_and_delta():
+    from repro.core.hierfavg import deadline_incompatibility
+
+    spec = _small_spec("deadline.enabled=true", "transport.levels=identity/int8:128")
+    with pytest.raises(ValueError, match="transport|delta|desync"):
+        spec.run_experiment()
+    spec2 = _small_spec("deadline.enabled=true", "schedule.delta_cloud=true")
+    with pytest.raises(ValueError):
+        spec2.run_experiment()
+    cfg = _small_spec().hier_config()
+    topo = _small_spec().topology.build()
+    assert deadline_incompatibility(cfg, topo) is None
+
+
+# ---------------------------------------------------------------------------
+# Spec plumbing: serialization, deprecation, scenarios
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_spec_roundtrips():
+    spec = _small_spec(
+        "deadline.enabled=true", "deadline.buffer_size=2",
+        "deadline.staleness=exp:0.7", "deadline.timeout_s=5.5",
+    )
+    again = ExperimentSpec.from_json(spec.to_json())
+    assert again == spec
+    assert again.deadline.buffer_size == 2
+    assert "deadline[buffer=2,exp:0.7]" in spec.describe()
+
+
+def test_async_cloud_deprecation_maps_to_deadline():
+    spec = _small_spec("schedule.async_cloud=true")
+    with pytest.warns(DeprecationWarning, match="deadline"):
+        runner = spec.build()
+    assert runner.deadline is not None
+    assert runner.deadline.quorum == pytest.approx(0.5)
+    assert runner.deadline.policy.describe() == "poly:1"
+    # an explicit deadline section wins silently over the deprecated flag
+    import warnings
+
+    spec2 = _small_spec("schedule.async_cloud=true", "deadline.enabled=true")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        runner2 = spec2.build()
+    assert runner2.deadline.quorum == pytest.approx(1.0)
+
+
+def test_deadline_scenarios_registered_and_overridable():
+    from repro.fed import scenarios
+
+    for name in ("deadline_straggler", "fedbuff_k4", "stale_decay"):
+        assert name in scenarios.names()
+        spec = scenarios.get(name, overrides=["run.num_rounds=8", "deadline.quorum=0.9"])
+        assert spec.deadline.enabled and spec.run.num_rounds == 8
+        if not spec.deadline.buffer_size:
+            assert spec.deadline.quorum == pytest.approx(0.9)
+        # --set round-trip: dict form rebuilds the identical spec
+        assert ExperimentSpec.from_dict(spec.to_dict()) == spec
+        runner = spec.build()
+        assert runner.deadline is not None

@@ -573,10 +573,13 @@ def test_cohort_runner_rejects_incompatible_setups():
         runner.run(state)
 
 
-def test_cohort_config_rejects_async_cloud_and_aggregators():
+def test_cohort_config_rejects_aggregators():
     part = ParticipationSpec(cohort_size=4)
-    with pytest.raises(ValueError, match="async"):
-        HierFAVGConfig(kappa1=2, kappa2=2, participation=part, async_cloud=True)
+    with pytest.raises(ValueError, match="weighted mean"):
+        HierFAVGConfig(
+            kappa1=2, kappa2=2, participation=part,
+            aggregators=aggregation.AggregatorSpec.parse("median/weighted_mean"),
+        )
 
 
 def test_cohort_resume_parity(tmp_path):

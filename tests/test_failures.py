@@ -116,3 +116,70 @@ def test_tune_kappas_picks_finite_best():
         w, lambda a, b: 600.0 * (1.0 + 0.1 * (a / (a * b))), [6, 15, 30, 60], [1, 2, 4, 10]
     )
     assert val > 0 and k1 in (6, 15, 30, 60)
+
+
+# ---------------------------------------------------------------------------
+# compose_masks: the dead-vs-late channel split (fed.deadline consumers)
+# ---------------------------------------------------------------------------
+
+
+def test_compose_masks_effective_matches_combine():
+    """The combined channel is bit-identical to the historical
+    ``combine_masks`` of every model — the runner's survival mask does not
+    change when the composition is taken apart."""
+    from repro.fed.failures import compose_masks
+
+    rng = np.random.default_rng(0)
+    dead = (rng.random(16) > 0.3).astype(np.float32)
+    late = (rng.random(16) > 0.4).astype(np.float32)
+    parts = compose_masks(dead=[dead], late=[late])
+    np.testing.assert_array_equal(parts.effective, combine_masks(dead, late))
+
+
+def test_compose_masks_channels_disjoint_dead_wins():
+    """A client that is both dead and past the deadline counts as dead —
+    there is no deferred upload to carry when the compute never happened."""
+    from repro.fed.failures import compose_masks
+
+    dead = np.array([1, 0, 1, 0], np.float32)  # clients 1, 3 dead
+    late = np.array([1, 0, 0, 1], np.float32)  # clients 1, 2 late
+    parts = compose_masks(dead=[dead], late=[late])
+    np.testing.assert_array_equal(parts.dead, [0, 1, 0, 1])
+    # client 1 is dead AND late -> reported only on the dead channel
+    np.testing.assert_array_equal(parts.late, [0, 0, 1, 0])
+    assert parts.dead_count == 2 and parts.late_count == 1
+    np.testing.assert_array_equal(parts.effective, [1, 0, 0, 0])
+
+
+def test_compose_masks_none_channels():
+    from repro.fed.failures import compose_masks
+
+    empty = compose_masks()
+    assert empty.effective is None and empty.dead is None and empty.late is None
+    assert empty.dead_count == 0 and empty.late_count == 0
+
+    late_only = compose_masks(late=[np.array([1, 0], np.float32)])
+    assert late_only.dead is None
+    np.testing.assert_array_equal(late_only.late, [0, 1])
+    np.testing.assert_array_equal(late_only.effective, [1, 0])
+
+
+def test_compose_masks_from_live_models():
+    """FailureSimulator feeds the dead channel, StragglerModel the late
+    channel; the simulators' RNG streams are untouched by the split."""
+    from repro.fed.failures import compose_masks
+
+    fail_a = FailureSimulator(8, p_fail=0.4, seed=3)
+    fail_b = FailureSimulator(8, p_fail=0.4, seed=3)
+    strag_a = StragglerModel(8, sigma=0.5, seed=4)
+    strag_b = StragglerModel(8, sigma=0.5, seed=4)
+    for _ in range(4):
+        dead_m = fail_a.step()
+        late_m, _ = strag_a.survivors(2, None)
+        parts = compose_masks(dead=[dead_m], late=[late_m])
+        ref = combine_masks(fail_b.step(), strag_b.survivors(2, None)[0])
+        np.testing.assert_array_equal(parts.effective, ref)
+        # every client is on exactly one channel or alive
+        marked = parts.dead + parts.late
+        assert marked.max() <= 1
+        np.testing.assert_array_equal(parts.effective, 1.0 - marked)

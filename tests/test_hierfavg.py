@@ -125,19 +125,27 @@ def test_hierarchical_mean_equals_flat(rng):
     np.testing.assert_allclose(np.asarray(flat), np.asarray(hier), rtol=1e-5)
 
 
-def test_async_cloud_matches_sync_when_edges_iid(rng):
-    """1-interval-stale cloud aggregation [beyond paper]: when every edge
-    holds the same data distribution the cross-edge correction is ~0 and
-    async == sync; with divergent edges it stays bounded and still pulls
-    the edges together (variance shrinks vs never-syncing)."""
-    from repro.core.hierfavg import build_hier_round_async
+def test_async_cloud_field_retired():
+    """``async_cloud`` was retired: the semi-synchronous deadline engine
+    (``fed.deadline`` + ``build_deadline_super_round``) subsumes the old
+    staleness-1 lowering; the spec-level flag maps there with a warning."""
+    from repro.core import hierfavg
+
+    with pytest.raises(TypeError):
+        HierFAVGConfig(kappa1=2, kappa2=2, async_cloud=True)
+    assert not hasattr(hierfavg, "build_hier_round_async")
+
+
+def test_deadline_super_round_gate_semantics(rng):
+    """The gated cloud sync [beyond paper]: a full gate reproduces the
+    synchronous superround; a partial gate folds only gated edges into the
+    published model while the late edge keeps its own edge-synced params
+    (the carry that rides into the next round)."""
+    from repro.core.hierfavg import build_deadline_super_round, build_super_round
 
     n, dim, edges = 4, 3, 2
     centers = rng.normal(size=(edges, dim))
-    # edge-IID: both clients of an edge share its center... make ALL edges
-    # identical -> fully IID across edges
-    all_c = np.tile(centers[0], (n, 1))
-    sizes = np.ones(n)
+    div_c = np.concatenate([np.tile(centers[0], (2, 1)), np.tile(centers[1], (2, 1))])
 
     def loss_fn(params, batch, _rng):
         return 0.5 * jnp.sum((params["w"] - batch["c"]) ** 2)
@@ -145,26 +153,30 @@ def test_async_cloud_matches_sync_when_edges_iid(rng):
     topo = FedTopology(num_edges=edges, clients_per_edge=2)
     w = jnp.ones((n,), jnp.float32)
     opt = sgd(0.1)
+    cfg = HierFAVGConfig(kappa1=2, kappa2=2)
+    batch = {"c": jnp.asarray(div_c, jnp.float32)}
+    block = jax.tree_util.tree_map(
+        lambda x: jnp.stack([jnp.stack([x] * cfg.kappa1)] * cfg.kappa2), batch
+    )
 
-    def run(async_mode, batch_centers):
-        cfg = HierFAVGConfig(kappa1=2, kappa2=2, async_cloud=async_mode)
-        s = init_state(jax.random.PRNGKey(0), {"w": jnp.zeros(dim)}, opt, topo, cfg)
-        if async_mode:
-            rnd = jax.jit(build_hier_round_async(loss_fn, opt, topo, cfg, w))
-        else:
-            rnd = jax.jit(build_hier_round(loss_fn, opt, topo, cfg, w))
-        batch = {"c": jnp.asarray(batch_centers, jnp.float32)}
-        stacked = jax.tree_util.tree_map(lambda x: jnp.stack([x] * cfg.kappa1), batch)
-        for r in range(6):
-            s, _ = rnd(s, stacked, jnp.int32(r))
-        return np.asarray(s.params["w"])
+    sync_round = jax.jit(build_super_round(loss_fn, opt, topo, cfg, w))
+    gated_round = jax.jit(build_deadline_super_round(loss_fn, opt, topo, cfg, w))
 
-    sync = run(False, all_c)
-    asyn = run(True, all_c)
-    np.testing.assert_allclose(sync, asyn, atol=1e-5)  # IID edges: identical
+    def fresh():
+        return init_state(jax.random.PRNGKey(0), {"w": jnp.zeros(dim)}, opt, topo, cfg)
 
-    # divergent edges: async still contracts the cross-edge spread
-    div_c = np.concatenate([np.tile(centers[0], (2, 1)), np.tile(centers[1], (2, 1))])
-    asyn_div = run(True, div_c)
-    spread = np.abs(asyn_div[0] - asyn_div[2]).max()
-    assert spread < np.abs(centers[0] - centers[1]).max()  # pulled together
+    s_sync, _ = sync_round(fresh(), block, None)
+    s_full, _ = gated_round(fresh(), block, jnp.ones((n,), jnp.float32), None)
+    np.testing.assert_array_equal(np.asarray(s_sync.params["w"]), np.asarray(s_full.params["w"]))
+
+    # gate out edge 1: clients 0-1 fold and receive the cloud model (built
+    # from edge 0 alone); clients 2-3 keep their own edge-synced model
+    gate = jnp.asarray([1.0, 1.0, 0.0, 0.0], jnp.float32)
+    s_part, _ = gated_round(fresh(), block, gate, None)
+    part = np.asarray(s_part.params["w"])
+    np.testing.assert_array_equal(part[0], part[1])
+    np.testing.assert_array_equal(part[2], part[3])
+    assert np.abs(part[0] - part[2]).max() > 1e-6  # late edge NOT broadcast to
+    # folded clients' model is edge 0's sync (the only gated contribution),
+    # which tracked centers[0] — nearer to it than the late edge's model is
+    assert np.linalg.norm(part[0] - centers[0]) < np.linalg.norm(part[2] - centers[0])

@@ -216,7 +216,6 @@ def test_megakernel_incompatibility_reasons():
     ok = HierFAVGConfig(kappa1=2, kappa2=2)
     assert megakernel_incompatibility(ok, topo) is None
     cases = [
-        (HierFAVGConfig(kappa1=2, kappa2=2, async_cloud=True), "async_cloud"),
         (HierFAVGConfig(kappa1=2, kappa2=2, delta_cloud=True), "delta_cloud"),
         (HierFAVGConfig(kappa1=2, kappa2=2, sync_opt_state=True), "optimizer-state"),
     ]
@@ -235,7 +234,7 @@ def test_megakernel_incompatibility_reasons():
 
 def test_megakernel_builder_raises_on_incompatible(rng):
     topo = FedTopology(num_edges=2, clients_per_edge=2)
-    cfg = HierFAVGConfig(kappa1=2, kappa2=2, async_cloud=True)
+    cfg = HierFAVGConfig(kappa1=2, kappa2=2, delta_cloud=True)
     loss_fn, _, _ = _mk_problem(rng, 4)
     with pytest.raises(ValueError, match="megakernel"):
         build_megakernel_super_round(
@@ -279,10 +278,10 @@ def test_engine_megakernel_matches_superround_trajectory():
 
 
 def test_engine_megakernel_fallback_reasons():
-    # schedule-level: async cloud
-    runner, _ = _spec("run.engine=megakernel", "schedule.async_cloud=true").run_experiment()
+    # schedule-level: delta_cloud keeps the scan-fused path
+    runner, _ = _spec("run.engine=megakernel", "schedule.delta_cloud=true").run_experiment()
     eng = runner._engine
-    assert not eng.uses_megakernel and "async" in eng.megakernel_reason
+    assert not eng.uses_megakernel and "delta_cloud" in eng.megakernel_reason
     assert runner._megakernel_reason == eng.megakernel_reason
     # runner-level: failure models keep the scan-fused survival plumbing
     runner, _ = _spec("run.engine=megakernel", "failures.p_fail=0.3").run_experiment()

@@ -114,8 +114,6 @@ def test_sharding_incompatibility_reasons():
     topo = FedTopology(num_edges=4, clients_per_edge=2)
     ok = HierFAVGConfig(kappa1=2, kappa2=2)
     assert sharding_incompatibility(ok, topo, 4) is None
-    async_cfg = HierFAVGConfig(kappa1=2, kappa2=2, async_cloud=True)
-    assert "async_cloud" in sharding_incompatibility(async_cfg, topo, 4)
     robust_top = HierFAVGConfig(
         kappa1=2, kappa2=2,
         aggregators=AggregatorSpec(

@@ -166,11 +166,6 @@ def test_config_validation():
             kappa1=2, kappa2=2, delta_cloud=True,
             transport=tp.TransportSpec.parse("identity/int8"),
         )
-    with pytest.raises(ValueError):
-        HierFAVGConfig(
-            kappa1=2, kappa2=2, async_cloud=True,
-            transport=tp.TransportSpec.parse("identity/int8"),
-        )
     with pytest.raises(TypeError):
         HierFAVGConfig(kappa1=2, kappa2=2, transport="identity/int8")
     # trivial transport composes with delta_cloud unchanged
